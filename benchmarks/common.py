@@ -1,0 +1,29 @@
+"""Shared benchmark helpers. Output convention (benchmarks/run.py):
+``name,us_per_call,derived`` CSV rows; `derived` carries the paper metric
+(gain in coordinate-wise distance computations, accuracy, etc.)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_call(fn: Callable, *, warmup: int = 0, reps: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def set_accuracy(got_idx, want_idx) -> float:
+    got = np.asarray(got_idx)
+    want = np.asarray(want_idx)
+    return float(np.mean([set(got[i].tolist()) == set(want[i].tolist())
+                          for i in range(len(want))]))

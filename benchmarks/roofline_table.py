@@ -1,0 +1,66 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+JSONL results. Also usable as a benchmark row source: emits one CSV line per
+cell with the dominant term."""
+from __future__ import annotations
+
+import json
+import os
+from collections import OrderedDict
+
+from benchmarks.common import emit
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun.jsonl")
+
+
+def load(path: str = DEFAULT_PATH, variant: str = None):
+    rows = OrderedDict()
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if variant and r.get("variant") != variant:
+                continue
+            key = (r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))
+            rows[key] = r  # last write wins
+    return rows
+
+
+def markdown_table(rows, mesh: str = "single") -> str:
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bottleneck "
+           "| useful/HLO | roofline frac | peak GiB/chip | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for (a, s, m, v), r in rows.items():
+        if m != mesh:
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"| {a} | {s} | — | — | — | skipped: {r['reason']} | | | | |\n")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {a} | {s} | — | — | — | ERROR | | | | |\n")
+            continue
+        out.append(
+            f"| {a} | {s} | {r['t_compute']:.3g} | {r['t_memory']:.3g} | "
+            f"{r['t_collective']:.3g} | {r['bottleneck']} | "
+            f"{r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.4f} | "
+            f"{r['peak_memory_per_chip'] / 2**30:.2f} | "
+            f"{'y' if r.get('fits_hbm') else 'OVER'} |\n")
+    return "".join(out)
+
+
+def main():
+    rows = load()
+    n_ok = sum(1 for r in rows.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in rows.values() if r.get("status") == "skipped")
+    n_err = sum(1 for r in rows.values() if r.get("status") == "error")
+    emit("roofline_cells", 0.0, f"ok={n_ok} skipped={n_skip} error={n_err}")
+    for (a, s, m, v), r in rows.items():
+        if r.get("status") == "ok":
+            emit(f"roofline_{a}_{s}_{m}_{v}", 0.0,
+                 f"bottleneck={r['bottleneck']} frac={r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end serving driver: a small LM serving batched requests with the
+BMO-NN kNN-LM retrieval hook — the paper's technique live in the decode loop.
+
+    PYTHONPATH=src python examples/knn_serve.py
+
+Flow per decode step: decode_step → final hidden state → distributed-ready
+BMO-NN retrieval over a datastore of (hidden, next-token) pairs → logit
+interpolation → greedy token. The datastore is built by running the model
+over a corpus first (as in kNN-LM).
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import BMOConfig
+from repro.data.synthetic import lm_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.serve.engine import KNNLMConfig, ServeEngine
+from repro.sharding.spec import init_params
+
+
+def build_datastore(model, params, vocab, n_seqs=8, seq=64):
+    """Run the model over a corpus; collect (hidden_t, token_{t+1}) pairs."""
+    keys, next_ids = [], []
+    for i in range(n_seqs):
+        batch = lm_batch(vocab, 1, seq, seed=123, step=i)
+        toks = jnp.asarray(batch["tokens"])
+        logits, _, hidden = model.apply(params, {"tokens": toks}, remat="none",
+                                        return_hidden=True)
+        keys.append(np.asarray(hidden[0, :-1].astype(jnp.float32)))
+        next_ids.append(np.asarray(batch["tokens"][0, 1:]))
+    return (jnp.asarray(np.concatenate(keys)),
+            jnp.asarray(np.concatenate(next_ids).astype(np.int32)))
+
+
+def main():
+    entry = get_arch("qwen2.5-14b")
+    cfg = entry.smoke                      # reduced config: runs on CPU
+    model = build_model(cfg)
+    plan = dataclasses.replace(entry.plan, fsdp=False, tp=False, sp=False,
+                               param_dtype="float32")
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    mesh = make_host_mesh(1, 1)
+
+    print("building kNN-LM datastore from model hidden states ...")
+    datastore = build_datastore(model, params, cfg.vocab_size)
+    print(f"datastore: {datastore[0].shape[0]} keys of dim {datastore[0].shape[1]}")
+
+    knn = KNNLMConfig(lam=0.25, bmo=BMOConfig(
+        k=8, delta=0.05, block=16, batch_arms=16, metric="l2"))
+    batch_size, prompt_len, new_tokens = 4, 12, 16
+    engine = ServeEngine(model, params, plan, mesh, batch_size=batch_size,
+                         max_seq=prompt_len + new_tokens + 4,
+                         knn_lm=knn, datastore=datastore)
+
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (batch_size, prompt_len)).astype(np.int32)
+    t0 = time.time()
+    out, retrieval_ops = engine.generate(prompts, new_tokens)
+    dt = time.time() - t0
+    n_exact = datastore[0].shape[0] * datastore[0].shape[1] * new_tokens * batch_size
+    print(f"generated {out.shape} tokens in {dt:.2f}s "
+          f"({out.size / dt:.1f} tok/s with retrieval)")
+    print(f"retrieval coordinate-ops: {retrieval_ops:.3g} "
+          f"(exact search: {float(n_exact):.3g} → "
+          f"{float(n_exact) / max(retrieval_ops, 1):.1f}x)")
+    print("note: at this smoke scale (d=64, n≈500) exact search is cheap; "
+          "the bandit gain appears at the paper's d≈4k–28k regime "
+          "(see quickstart.py / benchmarks).")
+    print("tokens:\n", out)
+
+
+if __name__ == "__main__":
+    main()

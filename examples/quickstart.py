@@ -1,0 +1,48 @@
+"""Quickstart: exact k-NN with BMO-NN on synthetic image-like data.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's core claim in one page: BMO-NN returns the *exact*
+nearest neighbours while computing a fraction of the coordinate-wise
+distances that brute force needs.
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs.base import BMOConfig
+from repro.core import bmo_nn, oracle
+from repro.data.synthetic import make_knn_benchmark_data
+
+
+def main():
+    n, d, n_queries, k = 2000, 8192, 8, 5
+    print(f"corpus: {n} points in {d} dims; {n_queries} queries; k={k}")
+    corpus, queries = make_knn_benchmark_data("dense", n, d, n_queries, seed=0)
+
+    t0 = time.time()
+    exact = oracle.exact_knn(corpus, queries, k, metric="l2")
+    print(f"exact:  {time.time() - t0:.2f}s, "
+          f"{float(exact.coord_ops):.3g} coordinate-wise distance computations")
+
+    cfg = BMOConfig(k=k, delta=0.01,   # ≥99% exact-set probability
+                    block=128,         # TPU-native coordinate-block sampling
+                    batch_arms=32, pulls_per_round=2, metric="l2")
+    t0 = time.time()
+    res = bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(0))
+    bmo_ops = float(np.sum(np.asarray(res.coord_ops)))
+    print(f"bmo-nn: {time.time() - t0:.2f}s, {bmo_ops:.3g} computations")
+
+    acc = np.mean([set(np.asarray(res.indices[i]).tolist())
+                   == set(np.asarray(exact.indices[i]).tolist())
+                   for i in range(n_queries)])
+    print(f"exact-set accuracy: {acc:.3f}  "
+          f"gain: {float(exact.coord_ops) / bmo_ops:.1f}x fewer computations")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Train a small LM end-to-end with the full production substrate:
+sharded train step, deterministic loader, async checkpoints, straggler
+watchdog, and fault-tolerant supervision (try --fail-at to watch a crash +
+auto-resume mid-run).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 60 [--fail-at 35]
+
+For the ~100M-class config use --arch xlstm-350m without --smoke (slow on
+CPU; the mesh-scale path is proven by the dry-run).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-350m")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (not smoke) config")
+    args = ap.parse_args()
+
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128",
+            "--ckpt-dir", "/tmp/repro_example_ckpt",
+            "--ckpt-every", "20", "--log-every", "5"]
+    if not args.full:
+        argv.append("--smoke")
+    if args.fail_at:
+        argv += ["--fail-at", str(args.fail_at)]
+    train_cli.main(argv)
+
+
+if __name__ == "__main__":
+    main()

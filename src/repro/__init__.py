@@ -1,0 +1,4 @@
+"""repro — Bandit-Based Monte Carlo Optimization for Nearest Neighbors,
+built as a multi-pod JAX training/serving framework. See README.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,155 @@
+"""Checkpointing: atomic, mesh-independent, async-capable, keep-last-N.
+
+Layout:  <dir>/step_<n>/arrays.npz + meta.msgpack ;  <dir>/step_<n>.tmp
+during write, atomically renamed on publish. Arrays are saved as host numpy
+keyed by flattened pytree path, so a checkpoint written on one mesh restores
+onto any other mesh/device count (resharding happens in device_put against
+the target sharding) — the basis of elastic scaling (runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.utils import get_logger
+
+log = get_logger("repro.checkpoint")
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def fmt(path):
+        return "/".join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+                        for p in path)
+
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        arr = jax.device_get(leaf)
+        if hasattr(arr, "dtype") and arr.dtype == jnp.bfloat16:
+            # numpy can't serialize bf16; upcast to f32 (lossless), restore
+            # casts back to the target dtype
+            arr = np.asarray(arr, np.float32)
+        flat[fmt(path)] = np.asarray(arr)
+    return flat
+
+
+def save(path: str, state, *, meta: Optional[Dict[str, Any]] = None) -> None:
+    """Atomic checkpoint write."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta or {}))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def restore(path: str, like, *, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: matching pytree of NamedSharding for
+    resharded placement (elastic restore)."""
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+
+    def fmt(path):
+        return "/".join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+                        for p in path)
+
+    leaves_with_path = jax.tree_util.tree_leaves_with_path(like)
+    out_leaves = []
+    for path_, leaf in leaves_with_path:
+        key = fmt(path_)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = arrays[key]
+        want_dtype = leaf.dtype
+        out_leaves.append(np.asarray(arr).astype(want_dtype))
+    treedef = jax.tree_util.tree_structure(like)
+    restored = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    if shardings is not None:
+        restored = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s), restored, shardings)
+    else:
+        restored = jax.tree_util.tree_map(jnp.asarray, restored)
+    return restored
+
+
+def read_meta(path: str) -> Dict[str, Any]:
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())
+
+
+class CheckpointManager:
+    """keep-last-N manager with optional async (background-thread) saves."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def all_steps(self):
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, state, meta: Optional[Dict[str, Any]] = None):
+        self.wait()
+        # snapshot to host synchronously (cheap vs I/O), write async
+        flat_state = jax.tree_util.tree_map(lambda l: np.asarray(jax.device_get(l)),
+                                            state)
+        meta = dict(meta or {}, step=step)
+
+        def _do():
+            save(self._step_dir(step), flat_state, meta=meta)
+            self._gc()
+            log.info("saved checkpoint step=%d", step)
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_do, daemon=True)
+            self._thread.start()
+        else:
+            _do()
+
+    def restore_latest(self, like, *, shardings=None):
+        self.wait()
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        state = restore(self._step_dir(step), like, shardings=shardings)
+        meta = read_meta(self._step_dir(step))
+        return state, meta
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

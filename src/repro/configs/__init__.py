@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    BMOConfig, ModelConfig, ParallelPlan, ShapeConfig, SHAPES, TrainConfig,
+)
+from repro.configs.registry import ARCHS, get_arch, list_archs
+
+__all__ = [
+    "BMOConfig", "ModelConfig", "ParallelPlan", "ShapeConfig", "SHAPES",
+    "TrainConfig", "ARCHS", "get_arch", "list_archs",
+]

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: bandit-based Monte-Carlo optimization
+(BMO-UCB racing engine, BMO-NN k-nearest neighbours with dense / rotated /
+sparse Monte-Carlo boxes, PAC variant, BMO k-means, and the mesh-distributed
+engine)."""
+
+from repro.core.ucb import RaceResult, race_topk
+from repro.core.bmo_nn import KNNResult, knn, knn_graph
+from repro.core.oracle import exact_knn, exact_knn_sparse
+from repro.core.datasets import DenseDataset, SparseDataset, hadamard_rotate
+
+__all__ = [
+    "RaceResult", "race_topk", "KNNResult", "knn", "knn_graph",
+    "exact_knn", "exact_knn_sparse", "DenseDataset", "SparseDataset",
+    "hadamard_rotate",
+]

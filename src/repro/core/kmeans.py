@@ -1,0 +1,62 @@
+"""BMO k-means (paper §V-A): Lloyd's algorithm where the assignment step
+(nearest centroid of each point = n independent 1-NN problems with k arms)
+runs through BMO-UCB. The update step is the standard O(nd) mean."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import BMOConfig
+from repro.core import bmo_nn, oracle
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array      # (k, d)
+    assignment: jax.Array     # (n,)
+    coord_ops: jax.Array      # () assignment-step coordinate computations
+    exact_ops: jax.Array      # () what exact assignment would have cost
+
+
+def assign_bmo(points, centroids, cfg: BMOConfig, rng, *, impl="auto"):
+    """(n,) nearest-centroid ids via BMO-UCB + per-point coordinate ops."""
+    acfg = dataclasses.replace(cfg, k=1)
+    res = bmo_nn.knn(centroids, points, acfg, rng, impl=impl)
+    return res.indices[:, 0], jnp.sum(res.coord_ops)
+
+
+def assign_exact(points, centroids, *, impl="auto"):
+    res = oracle.exact_knn(centroids, points, 1, "l2", impl=impl)
+    return res.indices[:, 0], res.coord_ops
+
+
+def lloyd_update(points, assignment, k: int):
+    n, d = points.shape
+    one_hot = jax.nn.one_hot(assignment, k, dtype=points.dtype)      # (n, k)
+    sums = one_hot.T @ points                                        # (k, d)
+    counts = jnp.sum(one_hot, axis=0)[:, None]
+    return jnp.where(counts > 0, sums / jnp.maximum(counts, 1), 0.0)
+
+
+def kmeans(points, k: int, iters: int, cfg: BMOConfig, rng, *,
+           use_bmo: bool = True, impl: str = "auto") -> KMeansResult:
+    points = jnp.asarray(points, jnp.float32)
+    n, d = points.shape
+    rng, sub = jax.random.split(jax.random.PRNGKey(0) if rng is None else rng)
+    init_idx = jax.random.choice(sub, n, (k,), replace=False)
+    centroids = points[init_idx]
+    coord_ops = jnp.zeros(())
+    assignment = jnp.zeros((n,), jnp.int32)
+    for _ in range(iters):
+        rng, sub = jax.random.split(rng)
+        if use_bmo:
+            assignment, ops = assign_bmo(points, centroids, cfg, sub, impl=impl)
+        else:
+            assignment, ops = assign_exact(points, centroids, impl=impl)
+        coord_ops = coord_ops + ops
+        centroids = lloyd_update(points, assignment, k)
+    exact_ops = jnp.asarray(float(iters) * n * k * d)
+    return KMeansResult(centroids, assignment, coord_ops, exact_ops)

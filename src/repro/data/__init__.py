@@ -1,0 +1,7 @@
+from repro.data.synthetic import (
+    clustered_dense, clustered_sparse, lm_batch, make_knn_benchmark_data,
+)
+from repro.data.loader import ShardedLoader
+
+__all__ = ["clustered_dense", "clustered_sparse", "lm_batch",
+           "make_knn_benchmark_data", "ShardedLoader"]

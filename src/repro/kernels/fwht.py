@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: fast Walsh–Hadamard transform (normalized), used by the
+§IV-B randomized-rotation Monte-Carlo box.
+
+Tiling: grid over row-blocks; each program holds an (R, d) tile in VMEM and
+runs the log2(d) decimation-in-frequency butterfly in-register. d ≤ 32k rows
+fit VMEM comfortably at R = 8 (8 × 32768 × 4B = 1 MiB)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _fwht_kernel(x_ref, o_ref, *, d: int):
+    y = x_ref[...].astype(jnp.float32)          # (R, d)
+    r = y.shape[0]
+    blocks = 1
+    while blocks < d:
+        y = y.reshape(r, blocks, 2, d // (2 * blocks))
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1)
+        blocks *= 2
+    o_ref[...] = (y.reshape(r, d) / np.sqrt(d)).astype(o_ref.dtype)
+
+
+def fwht_pallas(x: jax.Array, *, row_block: int = 8, interpret: bool = False) -> jax.Array:
+    """x (n, d) with d a power of two -> FWHT(x) along the last axis."""
+    n, d = x.shape
+    assert d & (d - 1) == 0, f"d={d} not a power of two"
+    rb = min(row_block, n)
+    pad = (-n) % rb
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    grid = (xp.shape[0] // rb,)
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, d=d),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rb, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:n] if pad else out

@@ -1,0 +1,56 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+``impl``:
+  * "auto"      — Pallas-compiled on TPU, jnp reference on CPU (XLA-fused;
+                  the interpreter would be orders of magnitude slower),
+  * "kernel"    — Pallas compiled (real TPU lowering),
+  * "interpret" — Pallas interpret mode (CPU-executable kernel body; what the
+                  kernel sweep tests use against the refs),
+  * "ref"       — pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.block_pull import block_pull_pallas
+from repro.kernels.fwht import fwht_pallas
+from repro.kernels.pairwise_dist import pairwise_dist_pallas
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def fwht(x: jax.Array, impl: str = "auto") -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "ref":
+        return kref.fwht_ref(x)
+    return fwht_pallas(x, interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "metric", "impl"))
+def block_pull(x, q, arm_idx, blk_idx, *, block: int, metric: str = "l2",
+               impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return kref.block_pull_ref(x, q, arm_idx, blk_idx, block, metric)
+    return block_pull_pallas(x, q, arm_idx, blk_idx, block=block, metric=metric,
+                             interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "impl"))
+def pairwise_dist(qs, x, *, metric: str = "l2", impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return kref.pairwise_dist_ref(qs, x, metric)
+    m = metric
+    if impl == "kernel" and metric == "l2":
+        m = "l2_dot"  # MXU form on real hardware
+    return pairwise_dist_pallas(qs, x, metric=m, interpret=(impl == "interpret"))

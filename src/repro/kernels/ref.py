@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references the
+kernel sweep tests assert against, and the fast XLA path on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fwht_ref(x: jax.Array) -> jax.Array:
+    """Normalized fast Walsh–Hadamard transform along the last axis.
+    x (..., d), d a power of two. Decimation-in-frequency butterfly."""
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"d={d} not a power of two"
+    orig_shape = x.shape
+    orig_dtype = x.dtype
+    y = x.astype(jnp.float32).reshape(-1, d)
+    r = y.shape[0]
+    blocks = 1
+    while blocks < d:
+        y = y.reshape(r, blocks, 2, d // (2 * blocks))
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1)
+        blocks *= 2
+    y = (y.reshape(orig_shape) / np.sqrt(d)).astype(orig_dtype)
+    return y
+
+
+def block_pull_ref(x: jax.Array, q: jax.Array, arm_idx: jax.Array,
+                   blk_idx: jax.Array, block: int, metric: str = "l2") -> jax.Array:
+    """Sampled coordinate-block distances (the paper's Monte-Carlo pull,
+    block form).  x (n, d_pad); q (d_pad,); arm_idx (B,); blk_idx (B, P).
+    Returns (B, P) per-block mean coordinate-wise distances."""
+    n, d_pad = x.shape
+    nb = d_pad // block
+    xb = x.reshape(n, nb, block)
+    qb = q.reshape(nb, block)
+    rows = xb[arm_idx[:, None], blk_idx]          # (B, P, block)
+    qs = qb[blk_idx]                              # (B, P, block)
+    diff = rows.astype(jnp.float32) - qs.astype(jnp.float32)
+    if metric == "l1":
+        v = jnp.sum(jnp.abs(diff), axis=-1)
+    else:
+        v = jnp.sum(diff * diff, axis=-1)
+    return (v / block).astype(jnp.float32)
+
+
+def pairwise_dist_ref(qs: jax.Array, x: jax.Array, metric: str = "l2",
+                      chunk: int = 2048) -> jax.Array:
+    """Exact distances. qs (Q, d), x (n, d) -> (Q, n) SUM-form distances
+    (ℓ2² or ℓ1), accumulated in fp32 over d-chunks."""
+    Q, d = qs.shape
+    n = x.shape[0]
+    out = jnp.zeros((Q, n), jnp.float32)
+    for start in range(0, d, chunk):
+        qc = qs[:, start:start + chunk].astype(jnp.float32)
+        xc = x[:, start:start + chunk].astype(jnp.float32)
+        if metric == "l1":
+            out = out + jnp.sum(jnp.abs(qc[:, None, :] - xc[None, :, :]), axis=-1)
+        else:
+            # MXU-form: ‖q‖² + ‖x‖² − 2 q·x
+            out = out + (jnp.sum(qc * qc, -1)[:, None] + jnp.sum(xc * xc, -1)[None, :]
+                         - 2.0 * qc @ xc.T)
+    return out

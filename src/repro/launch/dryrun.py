@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import: jax locks the device count on first init.
+# (This also means: no `from __future__ import annotations` in this module.)
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  * build the model + parallelism plan,
+  * construct abstract (ShapeDtypeStruct) state / batch / cache — no
+    allocation,
+  * jit the train/prefill/decode step with explicit in_shardings,
+  * ``.lower().compile()`` — success proves the distribution config is
+    coherent; failures are bugs,
+  * print ``memory_analysis()`` and ``cost_analysis()`` and derive the
+    roofline terms (§Roofline), appended to a JSONL results file.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+  python -m repro.launch.dryrun --arch bmo-nn --shape knn_100k_12k --mesh single
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, TrainConfig, get_arch, list_archs
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import shape_skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.roofline.analysis import analyze_compiled, model_flops_estimate
+from repro.sharding.spec import abstract_params, make_rules, param_pspecs
+from repro.train.steps import (abstract_train_state, batch_pspecs,
+                               make_train_step, state_pspecs, to_named)
+from repro.utils import get_logger
+
+log = get_logger("repro.dryrun")
+
+HBM_BYTES = 16 * 1024 ** 3  # v5e-class chip
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(arch_id: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    entry = get_arch(arch_id)
+    model = build_model(entry.config)
+    return model.input_specs(SHAPES[shape_name])
+
+
+# ---------------------------------------------------------------------------
+# cell runners
+# ---------------------------------------------------------------------------
+
+
+def _named(mesh, tree_pspecs):
+    return jax.tree_util.tree_map(
+        lambda ps: NamedSharding(mesh, ps), tree_pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _active_params(model, plan) -> float:
+    """Active params for MODEL_FLOPS: MoE expert tensors scaled by
+    (active + shared)/total experts."""
+    from repro.utils.tree import tree_map_with_path_str
+    specs = model.param_specs()
+    total = 0.0
+    cfg = model.cfg
+
+    def add(path, s):
+        nonlocal total
+        n = float(np.prod(s.shape))
+        if cfg.family == "moe" and "/moe/w" in path:
+            n *= cfg.n_experts_active / max(cfg.n_experts, 1)
+        total += n
+
+    tree_map_with_path_str(add, specs)
+    return total
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, *,
+             overrides: Optional[Dict[str, Any]] = None,
+             variant: str = "baseline") -> Dict[str, Any]:
+    t_start = time.time()
+    shape = SHAPES[shape_name]
+    entry = get_arch(arch_id)
+    cfg, plan = entry.config, entry.plan
+    if overrides:
+        plan_kw = {k.split(".", 1)[1]: v for k, v in overrides.items()
+                   if k.startswith("plan.")}
+        cfg_kw = {k.split(".", 1)[1]: v for k, v in overrides.items()
+                  if k.startswith("cfg.")}
+        if plan_kw:
+            plan = dataclasses.replace(plan, **plan_kw)
+        if cfg_kw:
+            cfg = dataclasses.replace(cfg, **cfg_kw)
+    skip = shape_skip_reason(arch_id, shape_name)
+    if skip:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+                "variant": variant, "status": "skipped", "reason": skip}
+
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules = make_rules(fsdp=plan.fsdp, tp=plan.tp, sp=plan.sp, ep=plan.ep,
+                       multi_pod=multi_pod, axis_sizes=axis_sizes,
+                       kv_len_shard=plan.kv_len_shard)
+    model = build_model(cfg)
+    tcfg = TrainConfig()
+    in_specs = model.input_specs(shape)
+    b_pspecs = batch_pspecs(in_specs, rules)
+
+    if shape.kind == "train":
+        # microbatch must still cover the data-parallel extent
+        dp_axes = rules.mesh_axes("batch")
+        dp_extent = int(np.prod([axis_sizes[a] for a in
+                                 ((dp_axes,) if isinstance(dp_axes, str) else dp_axes)]))
+        ga = max(min(plan.grad_accum, shape.global_batch // dp_extent), 1)
+        if ga != plan.grad_accum:
+            plan = dataclasses.replace(plan, grad_accum=ga)
+        step, _ = make_train_step(model, plan, tcfg, mesh, rules=rules,
+                                  multi_pod=multi_pod)
+        state = abstract_train_state(model, plan, tcfg)
+        s_pspecs = state_pspecs(model, plan, rules)
+        jitted = jax.jit(step,
+                         in_shardings=(_named(mesh, s_pspecs),
+                                       _named(mesh, b_pspecs)),
+                         donate_argnums=0)
+        lowered = jitted.lower(state, in_specs)
+    elif shape.kind == "prefill":
+        from repro.serve.steps import cache_pspecs, make_prefill_step
+        prefill, _ = make_prefill_step(model, plan, mesh, rules=rules,
+                                       multi_pod=multi_pod)
+        p_specs = model.param_specs(dtype=jnp.bfloat16)
+        params_abs = abstract_params(p_specs)
+        p_pspecs = param_pspecs(p_specs, rules)
+        c_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+        cache_abs = abstract_params(c_specs)
+        c_pspecs = param_pspecs(c_specs, rules)
+        jitted = jax.jit(prefill,
+                         in_shardings=(_named(mesh, p_pspecs),
+                                       _named(mesh, b_pspecs),
+                                       _named(mesh, c_pspecs)),
+                         donate_argnums=2)
+        lowered = jitted.lower(params_abs, in_specs, cache_abs)
+    else:  # decode
+        from repro.serve.steps import cache_pspecs, make_decode_step
+        decode, _ = make_decode_step(model, plan, mesh, rules=rules,
+                                     multi_pod=multi_pod)
+        p_specs = model.param_specs(dtype=jnp.bfloat16)
+        params_abs = abstract_params(p_specs)
+        p_pspecs = param_pspecs(p_specs, rules)
+        c_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+        cache_abs = abstract_params(c_specs)
+        c_pspecs = param_pspecs(c_specs, rules)
+        tok_specs = in_specs if cfg.family == "vlm" else in_specs["tokens"]
+        tok_pspecs = b_pspecs if cfg.family == "vlm" else b_pspecs["tokens"]
+        jitted = jax.jit(decode,
+                         in_shardings=(_named(mesh, p_pspecs),
+                                       _named(mesh, c_pspecs),
+                                       _named(mesh, tok_pspecs)),
+                         donate_argnums=1)
+        lowered = jitted.lower(params_abs, cache_abs, tok_specs)
+
+    t_lower = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    print(f"--- {arch_id} × {shape_name} × {mesh_kind} [{variant}] ---")
+    print("memory_analysis:", mem)
+    cost = compiled.cost_analysis()
+    cost0 = cost[0] if isinstance(cost, list) else cost
+    print("cost_analysis: flops=%.3e bytes=%.3e" % (
+        float(cost0.get("flops", 0)), float(cost0.get("bytes accessed", 0))))
+
+    n_active = _active_params(model, plan)
+    mf = model_flops_estimate(cfg, shape, n_active)
+    terms = analyze_compiled(compiled, arch=arch_id, shape=shape_name,
+                             mesh_name=mesh_kind, chips=chips, model_flops=mf)
+    rec = terms.to_dict()
+    rec.update({
+        "variant": variant, "status": "ok",
+        "lower_s": round(t_lower - t_start, 1),
+        "compile_s": round(t_compile - t_lower, 1),
+        "n_params_active": n_active,
+        "overrides": overrides or {},
+        "fits_hbm": bool(terms.peak_memory_per_chip <= HBM_BYTES
+                         if terms.peak_memory_per_chip else True),
+    })
+    print(json.dumps({k: rec[k] for k in
+                      ("t_compute", "t_memory", "t_collective", "bottleneck",
+                       "useful_flops_ratio", "roofline_fraction",
+                       "peak_memory_per_chip", "fits_hbm")}, indent=None))
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# BMO-NN (the paper's own workload) cells
+# ---------------------------------------------------------------------------
+
+KNN_SHAPES = {
+    # (n points, d, Q queries per step)
+    "knn_100k_12k": (100_000 * 8, 12_288, 256),   # pod-scale corpus (800k)
+    "knn_1m_12k": (1_048_576, 12_288, 256),
+    "knn_100k_28k": (131_072, 28_672, 256),
+}
+
+
+def run_bmo_cell(shape_name: str, mesh_kind: str, *,
+                 variant: str = "baseline",
+                 overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    from repro.configs.base import BMOConfig
+    from repro.core.distributed import distributed_knn
+    t_start = time.time()
+    n, d, Q = KNN_SHAPES[shape_name]
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    dp = ("pod", "data") if multi_pod else "data"
+    bmo_kw = {k.split(".", 1)[1]: v for k, v in (overrides or {}).items()
+              if k.startswith("bmo.")}
+    base_kw = dict(k=5, delta=0.01, block=128, batch_arms=32,
+                   pulls_per_round=2, metric="l2", max_rounds=64)
+    base_kw.update(bmo_kw)
+    cfg = BMOConfig(**base_kw)
+
+    x_s = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    q_s = jax.ShapeDtypeStruct((Q, d), jnp.float32)
+    rng_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    fn = lambda x, q, r: distributed_knn(x, q, cfg, mesh, r, impl="ref",
+                                         multi_pod=multi_pod)
+    jitted = jax.jit(fn, in_shardings=(
+        NamedSharding(mesh, P(dp, "model")),
+        NamedSharding(mesh, P(None, "model")),
+        NamedSharding(mesh, P()),
+    ))
+    lowered = jitted.lower(x_s, q_s, rng_s)
+    t_lower = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time()
+    print(f"--- bmo-nn × {shape_name} × {mesh_kind} [{variant}] ---")
+    print("memory_analysis:", compiled.memory_analysis())
+    cost = compiled.cost_analysis()
+    cost0 = cost[0] if isinstance(cost, list) else cost
+    print("cost_analysis: flops=%.3e bytes=%.3e" % (
+        float(cost0.get("flops", 0)), float(cost0.get("bytes accessed", 0))))
+    # MODEL_FLOPS for kNN = the paper's metric at the roofline: per query,
+    # adaptive coordinate reads ≈ n·init·block ops (1 flop each, l2: 3)
+    mf = 3.0 * Q * n * cfg.init_pulls * cfg.block
+    terms = analyze_compiled(compiled, arch="bmo-nn", shape=shape_name,
+                             mesh_name=mesh_kind, chips=chips, model_flops=mf)
+    rec = terms.to_dict()
+    rec.update({"variant": variant, "status": "ok",
+                "lower_s": round(t_lower - t_start, 1),
+                "compile_s": round(t_compile - t_lower, 1),
+                "overrides": overrides or {},
+                "fits_hbm": bool(terms.peak_memory_per_chip <= HBM_BYTES
+                                 if terms.peak_memory_per_chip else True)})
+    print(json.dumps({k: rec[k] for k in
+                      ("t_compute", "t_memory", "t_collective", "bottleneck",
+                       "peak_memory_per_chip", "fits_hbm")}))
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            continue
+    if v in ("true", "false", "True", "False"):
+        return k, v.lower() == "true"
+    return k, v
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id, or 'bmo-nn' for the paper workload")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="plan.X=V / cfg.X=V / bmo.X=V override")
+    args = ap.parse_args(argv)
+
+    overrides = dict(_parse_override(kv) for kv in args.overrides) or None
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells += [(a, s, m) for m in meshes]
+        for s in KNN_SHAPES:
+            cells += [("bmo-nn", s, m) for m in meshes]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape, m in cells:
+        try:
+            if arch == "bmo-nn":
+                rec = run_bmo_cell(shape, m, variant=args.variant,
+                                   overrides=overrides)
+            else:
+                rec = run_cell(arch, shape, m, variant=args.variant,
+                               overrides=overrides)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "mesh": m,
+                   "variant": args.variant, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    if failures:
+        log.error("%d cells failed", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

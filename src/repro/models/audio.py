@@ -1,0 +1,179 @@
+"""whisper-base: encoder-decoder transformer. The conv frontend is a STUB —
+``input_specs`` provides post-conv mel-frame embeddings (B, S_enc, d). The
+encoder is bidirectional with sinusoidal positions; the decoder is causal with
+learned positions, self-attention KV cache and cross-attention onto cached
+encoder projections. Decoder length = seq_len // dec_seq_div."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common as cm
+from repro.models.transformer import _remat
+from repro.sharding.spec import ParamSpec
+
+
+class Whisper:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def param_specs(self, dtype=jnp.float32):
+        cfg = self.cfg
+        d = cfg.d_model
+        attn = lambda: cm.attention_specs(cfg, dtype)
+        mlp = lambda: cm.mlp_specs(cfg, dtype)
+        enc_layer = {"ln1": cm.rmsnorm_spec(d, dtype), "attn": attn(),
+                     "ln2": cm.rmsnorm_spec(d, dtype), "mlp": mlp()}
+        dec_layer = {"ln1": cm.rmsnorm_spec(d, dtype), "self_attn": attn(),
+                     "ln_x": cm.rmsnorm_spec(d, dtype), "cross_attn": attn(),
+                     "ln2": cm.rmsnorm_spec(d, dtype), "mlp": mlp()}
+        return {
+            "embed": cm.embed_specs(cfg, dtype),
+            "dec_pos": cm.dense_spec((8192, d), (None, "embed"), dtype, init="embed"),
+            "enc_layers": cm.stack_tree(enc_layer, cfg.enc_layers),
+            "dec_layers": cm.stack_tree(dec_layer, cfg.dec_layers),
+            "enc_norm": cm.rmsnorm_spec(d, dtype),
+            "dec_norm": cm.rmsnorm_spec(d, dtype),
+        }
+
+    # -- encoder ------------------------------------------------------------
+    def encode(self, params, frames, *, remat="full", compute_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        B, S, d = frames.shape
+        pos = jnp.asarray(cm.sinusoidal_embedding(S, d))
+        x = cm.shard_act(frames.astype(compute_dtype) + pos[None].astype(compute_dtype))
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, lp):
+            h = cm.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            a, _ = cm.gqa_attention(cfg, lp["attn"], h, positions, causal=False,
+                                    compute_dtype=compute_dtype)
+            x = x + a
+            h = cm.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            return x + cm.mlp(cfg, lp["mlp"], h, compute_dtype), None
+
+        body = _remat(body, remat)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return cm.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    # -- decoder ------------------------------------------------------------
+    def _cross_kv(self, params, enc_out, compute_dtype):
+        """Precompute per-layer cross K/V from encoder output:
+        (L, B, S_enc, KV, hd) each."""
+        cfg = self.cfg
+
+        def body(_, lp):
+            ca = lp["cross_attn"]
+            k = jnp.einsum("bsd,dhk->bshk", enc_out.astype(compute_dtype),
+                           ca["wk"].astype(compute_dtype))
+            v = jnp.einsum("bsd,dhk->bshk", enc_out.astype(compute_dtype),
+                           ca["wv"].astype(compute_dtype))
+            return None, (k, v)
+
+        _, (ks, vs) = jax.lax.scan(body, None, params["dec_layers"])
+        return ks, vs
+
+    def decode(self, params, tokens, cross_k, cross_v, *, cache=None,
+               cache_index=0, remat="full", compute_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = cm.embed(params["embed"], tokens, compute_dtype)
+        pos_ids = jnp.arange(S) + cache_index
+        x = x + jnp.take(params["dec_pos"], pos_ids, axis=0)[None].astype(compute_dtype)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S)) + cache_index
+
+        def body(carry, scanned):
+            x = carry
+            if cache is None:
+                lp, (ck_x, cv_x) = scanned
+                self_kv = None
+            else:
+                lp, (ck_x, cv_x), (sk, sv) = scanned
+                self_kv = (sk, sv)
+            h = cm.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            a, new_kv = cm.gqa_attention(cfg, lp["self_attn"], h, positions,
+                                         cache_kv=self_kv, cache_index=cache_index,
+                                         causal=True, compute_dtype=compute_dtype)
+            x = x + a
+            # cross attention (no rope, pre-projected kv)
+            h = cm.rmsnorm(x, lp["ln_x"], cfg.norm_eps)
+            ca = lp["cross_attn"]
+            q = jnp.einsum("bsd,dhk->bshk", h.astype(compute_dtype),
+                           ca["wq"].astype(compute_dtype))
+            attn = cm.sdpa(q, ck_x.astype(compute_dtype), cv_x.astype(compute_dtype),
+                           causal=False,
+                           chunk=cfg.attn_chunk if S > cfg.attn_chunk else 0)
+            xo = jnp.einsum("bshk,hkd->bsd", attn.astype(compute_dtype),
+                            ca["wo"].astype(compute_dtype))
+            x = x + xo.astype(x.dtype)
+            h = cm.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            x = x + cm.mlp(cfg, lp["mlp"], h, compute_dtype)
+            return x, new_kv
+
+        body = _remat(body, remat)
+        if cache is None:
+            x, _ = jax.lax.scan(body, x, (params["dec_layers"], (cross_k, cross_v)))
+            new_cache = None
+        else:
+            x, new_kv = jax.lax.scan(
+                body, x, (params["dec_layers"], (cross_k, cross_v),
+                          (cache["k"], cache["v"])))
+            new_cache = {"k": new_kv[0], "v": new_kv[1],
+                         "cross_k": cross_k, "cross_v": cross_v,
+                         "index": cache["index"] + S}
+        x = cm.rmsnorm(x, params["dec_norm"], cfg.norm_eps)
+        logits = cm.lm_head(params["embed"], x, compute_dtype)
+        return logits, new_cache
+
+    # -- unified API ----------------------------------------------------------
+    def apply(self, params, batch, *, remat="full", compute_dtype=jnp.bfloat16,
+              cache=None, cache_index=0):
+        enc_out = self.encode(params, batch["frames"], remat=remat,
+                              compute_dtype=compute_dtype)
+        ck, cv = self._cross_kv(params, enc_out, compute_dtype)
+        return self.decode(params, batch["tokens"], ck, cv, cache=cache,
+                           cache_index=cache_index, remat=remat,
+                           compute_dtype=compute_dtype)
+
+    def cache_specs(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16):
+        """max_seq = encoder length; decoder cache = max_seq // dec_seq_div."""
+        cfg = self.cfg
+        dec_len = max(max_seq // cfg.dec_seq_div, 8)
+        L = cfg.dec_layers
+        kv = lambda s: ParamSpec((L, batch_size, s, cfg.n_kv_heads, cfg.head_dim_),
+                                 dtype, ("layers", "batch", "kv_len", "kv_heads",
+                                         "head_dim"), init="zeros")
+        return {"k": kv(dec_len), "v": kv(dec_len),
+                "cross_k": kv(max_seq), "cross_v": kv(max_seq),
+                "index": ParamSpec((), jnp.int32, (), init="zeros")}
+
+    def prefill(self, params, batch, cache, *, remat="none", compute_dtype=jnp.bfloat16):
+        enc_out = self.encode(params, batch["frames"], remat=remat,
+                              compute_dtype=compute_dtype)
+        ck, cv = self._cross_kv(params, enc_out, compute_dtype)
+        return self.decode(params, batch["tokens"], ck, cv,
+                           cache={"k": cache["k"], "v": cache["v"], "index": cache["index"]},
+                           cache_index=0, remat=remat, compute_dtype=compute_dtype)
+
+    def decode_step(self, params, cache, tokens, *, compute_dtype=jnp.bfloat16):
+        logits, new_cache = self.decode(
+            params, tokens, cache["cross_k"], cache["cross_v"],
+            cache={"k": cache["k"], "v": cache["v"], "index": cache["index"]},
+            cache_index=cache["index"], remat="none", compute_dtype=compute_dtype)
+        return logits, new_cache
+
+    def input_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        B, S, d = shape.global_batch, shape.seq_len, cfg.d_model
+        dec_len = max(S // cfg.dec_seq_div, 8)
+        bf, i32 = jnp.bfloat16, jnp.int32
+        if shape.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct((B, S, d), bf),
+                    "tokens": jax.ShapeDtypeStruct((B, dec_len), i32),
+                    "labels": jax.ShapeDtypeStruct((B, dec_len), i32)}
+        if shape.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((B, S, d), bf),
+                    "tokens": jax.ShapeDtypeStruct((B, dec_len), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}

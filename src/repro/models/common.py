@@ -1,0 +1,392 @@
+"""Shared model-layer library: norms, RoPE/M-RoPE, GQA/MQA/MLA attention,
+KV caches, MLP flavours.  Everything is a pure function over explicit params;
+parameter structure is declared via ParamSpec trees (see repro.sharding.spec).
+
+Dtype policy: params live in ``param_dtype``; matmuls run in bf16 ("compute
+dtype"), softmax / norms / router / residual accumulation in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import shard_act  # re-export for model modules
+from repro.sharding.spec import ParamSpec
+
+# ---------------------------------------------------------------------------
+# Param-spec builders
+# ---------------------------------------------------------------------------
+
+
+def dense_spec(shape, axes, dtype, init="fanin", scale=None) -> ParamSpec:
+    return ParamSpec(tuple(shape), dtype, tuple(axes), init=init, scale=scale)
+
+
+def stack(spec: ParamSpec, n_layers: int) -> ParamSpec:
+    """Add a leading stacked-layers dim (scanned over)."""
+    return ParamSpec(
+        (n_layers,) + spec.shape, spec.dtype, ("layers",) + spec.axes,
+        init=spec.init, scale=spec.scale,
+    )
+
+
+def stack_tree(tree, n_layers: int):
+    return jax.tree_util.tree_map(
+        lambda s: stack(s, n_layers), tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_spec(d: int, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec((d,), dtype, ("act_embed",), init="ones")
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def _rope_cos_sin(positions: jax.Array, rot_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, rot_dim//2), fp32."""
+    half = rot_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rot_dim: Optional[int] = None) -> jax.Array:
+    """x (B, S, H, D); positions (B, S). Rotates the first rot_dim dims."""
+    d = x.shape[-1]
+    rot = rot_dim if rot_dim is not None else d
+    cos, sin = _rope_cos_sin(positions, rot, theta)      # (B, S, rot/2)
+    cos = cos[..., None, :]                               # (B, S, 1, rot/2)
+    sin = sin[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1) if rot < d else out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. x (B,S,H,D); positions3 (3,B,S);
+    ``sections`` split D//2 into (temporal, h, w) frequency bands."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    cos_parts, sin_parts = [], []
+    start = 0
+    freqs_all = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    for sec_i, sec in enumerate(sections):
+        pos = positions3[sec_i].astype(jnp.float32)       # (B, S)
+        f = freqs_all[start:start + sec]
+        ang = pos[..., None] * f                          # (B, S, sec)
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        start += sec
+    cos = jnp.concatenate(cos_parts, axis=-1)[..., None, :]  # (B,S,1,half)
+    sin = jnp.concatenate(sin_parts, axis=-1)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(seq_len: int, d: int) -> np.ndarray:
+    pos = np.arange(seq_len)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return emb.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA), chunked for long sequences
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    spec = {
+        "wq": dense_spec((d, h, hd), ("embed", "heads", "head_dim"), dtype),
+        "wk": dense_spec((d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": dense_spec((d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": dense_spec((h, hd, d), ("heads", "head_dim", "embed"), dtype),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec((h, hd), dtype, ("heads", "head_dim"), init="zeros")
+        spec["bk"] = ParamSpec((kv, hd), dtype, ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = ParamSpec((kv, hd), dtype, ("kv_heads", "head_dim"), init="zeros")
+    return spec
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset, kv_valid_len=None):
+    """q (B,Sq,H,D), k/v (B,Sk,KV,D) -> (B,Sq,H,D). fp32 softmax.
+
+    ``q_offset``: absolute position of q[0] (for causal masking vs cache).
+    ``kv_valid_len``: mask out kv positions >= this (decode with cache).
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(D)
+    Sk = k.shape[1]
+    kv_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        q_pos = jnp.arange(Sq) + q_offset
+        mask = kv_pos[None, :] <= q_pos[:, None]
+    if kv_valid_len is not None:
+        mask = mask & (kv_pos[None, :] < kv_valid_len)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def _sdpa_flash(q, k, v, *, causal: bool, q_offset, kv_valid_len=None,
+                kv_chunk: int = 1024):
+    """Online-softmax (flash-style) attention: scans KV chunks carrying
+    (running max, normalizer, accumulator); the (Sq, Sk) score matrix is
+    never materialized. Matches _sdpa numerically (fp32 softmax)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    Dv = v.shape[-1]
+    if Sk % kv_chunk != 0:
+        kv_chunk = Sk
+    nk = Sk // kv_chunk
+    qg = q.reshape(B, Sq, KV, G, D)
+    q_pos = jnp.arange(Sq) + q_offset
+
+    ks = k.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, KV, Dv).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint  # flash backward: recompute s/p per chunk, save only carries
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, ci = inp
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc,
+                       preferred_element_type=jnp.float32) / np.sqrt(D)
+        kv_pos = jnp.arange(kv_chunk) + ci * kv_chunk
+        mask = jnp.ones((Sq, kv_chunk), bool)
+        if causal:
+            mask = kv_pos[None, :] <= q_pos[:, None]
+        if kv_valid_len is not None:
+            mask = mask & (kv_pos[None, :] < kv_valid_len)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(q.dtype), vc).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (ks, vs, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def sdpa(q, k, v, *, causal: bool, q_offset=0, kv_valid_len=None,
+         chunk: int = 0, flash_threshold: int = 2048):
+    """Scaled dot-product attention. Long sequences use q-chunking (outer
+    scan) + flash-style online softmax over KV chunks so the score matrix
+    never materializes; short ones take the direct path.
+
+    Decode (Sq ≤ 8) always takes the direct path: the (Sq, Sk) scores are
+    tiny, and the flash chunk reshape fights the sharded KV cache layout
+    (SPMD would all-gather the cache per chunk — §Perf iteration)."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    use_flash = Sk > flash_threshold and Sq > 8
+
+    def one(qc, off):
+        if use_flash:
+            return _sdpa_flash(qc, k, v, causal=causal, q_offset=off,
+                               kv_valid_len=kv_valid_len)
+        return _sdpa(qc, k, v, causal=causal, q_offset=off,
+                     kv_valid_len=kv_valid_len)
+
+    if chunk <= 0 or Sq <= chunk:
+        return one(q, q_offset)
+    assert Sq % chunk == 0, (Sq, chunk)
+    n_chunks = Sq // chunk
+
+    def body(carry, qc_i):
+        qc, i = qc_i
+        return carry, one(qc, q_offset + i * chunk)
+
+    qs = q.reshape(q.shape[0], n_chunks, chunk, q.shape[2], q.shape[3]).transpose(1, 0, 2, 3, 4)
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(n_chunks)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(q.shape[:3] + (v.shape[-1],))
+
+
+def quantize_kv(t: jax.Array):
+    """(B,S,H,D) bf16 -> (int8 values, (B,S,H) bf16 scales)."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def gqa_attention(cfg: ModelConfig, p: dict, x: jax.Array, positions, *,
+                  cache_kv=None, cache_index=None, causal=True,
+                  positions3=None, compute_dtype=jnp.bfloat16):
+    """Full GQA attention layer. Returns (out, new_kv) where new_kv is the
+    (k, v) pair to store in the cache (or None when cache_kv is None).
+    With cfg.kv_quant the cache entries are (int8 values, bf16 scales) —
+    halves the decode-path HBM read volume (§Perf)."""
+    xc = x.astype(compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(compute_dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xc, p["wv"].astype(compute_dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(compute_dtype)
+        k = k + p["bk"].astype(compute_dtype)
+        v = v + p["bv"].astype(compute_dtype)
+    if cfg.rope_type == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_type == "mrope":
+        q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+
+    if cache_kv is not None and cfg.kv_quant:
+        (ckq, cks), (cvq, cvs) = cache_kv
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        ckq = jax.lax.dynamic_update_slice(ckq, kq, (0, cache_index, 0, 0))
+        cks = jax.lax.dynamic_update_slice(cks, ks, (0, cache_index, 0))
+        cvq = jax.lax.dynamic_update_slice(cvq, vq, (0, cache_index, 0, 0))
+        cvs = jax.lax.dynamic_update_slice(cvs, vs, (0, cache_index, 0))
+        valid = cache_index + k.shape[1]
+        out = sdpa(q, dequantize_kv(ckq, cks, compute_dtype),
+                   dequantize_kv(cvq, cvs, compute_dtype),
+                   causal=causal, q_offset=cache_index, kv_valid_len=valid,
+                   chunk=cfg.attn_chunk if q.shape[1] > cfg.attn_chunk else 0)
+        new_kv = ((ckq, cks), (cvq, cvs))
+    elif cache_kv is not None:
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        valid = cache_index + k.shape[1]
+        out = sdpa(q, ck.astype(compute_dtype), cv.astype(compute_dtype),
+                   causal=causal, q_offset=cache_index, kv_valid_len=valid,
+                   chunk=cfg.attn_chunk if q.shape[1] > cfg.attn_chunk else 0)
+        new_kv = (ck, cv)
+    elif cfg.attn_impl == "pallas":
+        # fused flash-attention kernel (TPU target; interpret on CPU) —
+        # the §Roofline fix: scores/softmax/accumulator stay in VMEM
+        from repro.kernels.flash_attn import flash_attention_pallas
+        G = q.shape[2] // k.shape[2]
+        out = flash_attention_pallas(
+            q.transpose(0, 2, 1, 3),
+            jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1),
+            jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1),
+            causal=causal, q_offset=0,
+            interpret=jax.default_backend() == "cpu",
+        ).transpose(0, 2, 1, 3)
+        new_kv = None
+    else:
+        out = sdpa(q, k, v, causal=causal, q_offset=0,
+                   chunk=cfg.attn_chunk if q.shape[1] > cfg.attn_chunk else 0)
+        new_kv = None
+    proj = jnp.einsum("bshk,hkd->bsd", out.astype(compute_dtype),
+                      p["wo"].astype(compute_dtype))
+    return proj.astype(x.dtype), new_kv
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        return {
+            "wi_gate": dense_spec((d, f), ("embed", "mlp"), dtype),
+            "wi_up": dense_spec((d, f), ("embed", "mlp"), dtype),
+            "wo": dense_spec((f, d), ("mlp", "embed"), dtype),
+        }
+    return {
+        "wi": dense_spec((d, f), ("embed", "mlp"), dtype),
+        "wo": dense_spec((f, d), ("mlp", "embed"), dtype),
+    }
+
+
+def mlp(cfg: ModelConfig, p: dict, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    xc = x.astype(compute_dtype)
+    if cfg.mlp_act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", xc, p["wi_gate"].astype(compute_dtype))
+        u = jnp.einsum("bsd,df->bsf", xc, p["wi_up"].astype(compute_dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", xc, p["wi"].astype(compute_dtype))
+        if cfg.mlp_act == "sq_relu":
+            h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(compute_dtype)
+        else:  # gelu
+            h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(compute_dtype)
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(compute_dtype))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig, dtype) -> dict:
+    spec = {"tok": dense_spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              dtype, init="embed")}
+    if not cfg.tie_embeddings:
+        spec["head"] = dense_spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dtype)
+    return spec
+
+
+def embed(p: dict, tokens: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0).astype(compute_dtype)
+
+
+def lm_head(p: dict, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(compute_dtype), w.astype(compute_dtype))
+    return logits

@@ -1,0 +1,141 @@
+"""zamba2-2.7b: Mamba2 backbone + a *shared* attention+MLP block applied every
+``attn_every`` layers (weights reused across applications, zamba-style; each
+application keeps its own KV cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common as cm
+from repro.models import ssm
+from repro.models.transformer import _remat
+from repro.sharding.spec import ParamSpec
+
+
+class Zamba2:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0
+        self.groups = cfg.n_layers // cfg.attn_every
+        self.per_group = cfg.attn_every
+
+    def param_specs(self, dtype=jnp.float32):
+        cfg = self.cfg
+        mamba_layer = {
+            "ln": cm.rmsnorm_spec(cfg.d_model, dtype),
+            "mamba": ssm.mamba2_specs(cfg, dtype),
+        }
+        shared = {
+            "ln1": cm.rmsnorm_spec(cfg.d_model, dtype),
+            "attn": cm.attention_specs(cfg, dtype),
+            "ln2": cm.rmsnorm_spec(cfg.d_model, dtype),
+            "mlp": cm.mlp_specs(cfg, dtype),
+        }
+        return {
+            "embed": cm.embed_specs(cfg, dtype),
+            "layers": cm.stack_tree(mamba_layer, cfg.n_layers),
+            "shared": shared,
+            "final_norm": cm.rmsnorm_spec(cfg.d_model, dtype),
+        }
+
+    def cache_specs(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        g = self.groups
+        kv_shape = (g, batch_size, max_seq, cfg.n_kv_heads, cfg.head_dim_)
+        axes = ("layers", "batch", "kv_len", "kv_heads", "head_dim")
+        return {
+            "mamba": ssm.mamba2_state_specs(cfg, cfg.n_layers, batch_size, dtype),
+            "k": ParamSpec(kv_shape, dtype, axes, init="zeros"),
+            "v": ParamSpec(kv_shape, dtype, axes, init="zeros"),
+            "index": ParamSpec((), jnp.int32, (), init="zeros"),
+        }
+
+    def _forward(self, params, x, positions, cache, cache_index, compute_dtype, remat):
+        cfg = self.cfg
+        g, pg = self.groups, self.per_group
+        reshape_g = lambda t: t.reshape((g, pg) + t.shape[1:])
+        layers_g = jax.tree_util.tree_map(reshape_g, params["layers"])
+
+        def mamba_body(carry, scanned):
+            x = carry
+            if cache is None:
+                lp, ls = scanned, None
+            else:
+                lp, ls = scanned
+            h = cm.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            out, ns = ssm.mamba2_block(cfg, lp["mamba"], h, state=ls,
+                                       compute_dtype=compute_dtype)
+            return x + out, ns
+
+        mamba_body = _remat(mamba_body, remat)
+        sp = params["shared"]
+
+        def group_body(carry, scanned):
+            x = carry
+            if cache is None:
+                glayers, gkv = scanned, None
+                x, _ = jax.lax.scan(mamba_body, x, glayers)
+            else:
+                glayers, gms, gkv = scanned
+                x, nms = jax.lax.scan(mamba_body, x, (glayers, gms))
+            h = cm.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+            attn_out, new_kv = cm.gqa_attention(
+                cfg, sp["attn"], h, positions, cache_kv=gkv,
+                cache_index=cache_index, compute_dtype=compute_dtype)
+            x = x + attn_out
+            h = cm.rmsnorm(x, sp["ln2"], cfg.norm_eps)
+            x = x + cm.mlp(cfg, sp["mlp"], h, compute_dtype)
+            if cache is None:
+                return x, None
+            return x, (nms, new_kv)
+
+        group_body = _remat(group_body, remat)
+        if cache is None:
+            x, _ = jax.lax.scan(group_body, x, layers_g)
+            return x, None
+        mamba_g = jax.tree_util.tree_map(reshape_g, cache["mamba"])
+        x, (new_ms, new_kv) = jax.lax.scan(
+            group_body, x, (layers_g, mamba_g, (cache["k"], cache["v"])))
+        unshape = lambda t: t.reshape((g * pg,) + t.shape[2:])
+        new_cache = {
+            "mamba": jax.tree_util.tree_map(unshape, new_ms),
+            "k": new_kv[0], "v": new_kv[1],
+        }
+        return x, new_cache
+
+    def apply(self, params, batch, *, remat="full", compute_dtype=jnp.bfloat16,
+              cache=None, cache_index=0):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = cm.shard_act(cm.embed(params["embed"], tokens, compute_dtype))
+        positions = batch.get(
+            "positions", jnp.broadcast_to(jnp.arange(S)[None], (B, S)) + cache_index)
+        x, new_cache = self._forward(params, x, positions, cache, cache_index,
+                                     compute_dtype, remat)
+        x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = cm.lm_head(params["embed"], x, compute_dtype)
+        if new_cache is not None:
+            new_cache["index"] = cache["index"] + S
+        return logits, new_cache
+
+    def decode_step(self, params, cache, tokens, *, compute_dtype=jnp.bfloat16):
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(cache["index"][None, None], (B, 1))
+        return self.apply(params, {"tokens": tokens, "positions": positions},
+                          remat="none", compute_dtype=compute_dtype, cache=cache,
+                          cache_index=cache["index"])
+
+    def prefill(self, params, batch, cache, *, remat="none", compute_dtype=jnp.bfloat16):
+        return self.apply(params, batch, remat=remat, compute_dtype=compute_dtype,
+                          cache=cache, cache_index=0)
+
+    def input_specs(self, shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

@@ -1,0 +1,469 @@
+"""Mixture-of-Experts LMs: dbrx-132b (GQA + 16e top-4) and deepseek-v3-671b
+(MLA + 1 shared + 256 routed top-8 + optional MTP head).
+
+The MoE FFN uses a sort-based capacity dispatch:
+
+  tokens -> router top-k -> argsort by expert -> fixed-capacity (E, C, d)
+  buffer -> [optional expert-parallel all_to_all over the "model" axis via
+  shard_map] -> batched expert matmuls -> all_to_all back -> weighted combine.
+
+With ``ep_axis=None`` everything stays local (single-device smoke tests); with
+``ep_axis="model"`` each device owns E/m experts and tokens are exchanged with
+two all_to_alls, which is what shows up in the dry-run collective analysis.
+
+MLA follows DeepSeek-V2/V3: queries/keys/values factored through low-rank
+projections; the KV cache stores only the compressed c_kv (rank 512) plus the
+shared RoPE key (64), and the decode path uses the *absorbed-matmul* form so
+the full per-head K/V are never materialized at decode time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common as cm
+from repro.models.transformer import _remat
+from repro.sharding.spec import ParamSpec
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ModelConfig, dtype) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    spec = {
+        "router": cm.dense_spec((d, E), ("embed", None), dtype, init="normal", scale=0.006),
+        "wi_gate": cm.dense_spec((E, d, f), ("experts", "embed", "expert_mlp"), dtype),
+        "wi_up": cm.dense_spec((E, d, f), ("experts", "embed", "expert_mlp"), dtype),
+        "wo": cm.dense_spec((E, f, d), ("experts", "expert_mlp", "embed"), dtype),
+    }
+    if cfg.n_shared_experts > 0:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        spec["shared"] = cm.mlp_specs(cfg, dtype, d_ff=fs)
+    return spec
+
+
+def _capacity(n_tokens: int, k: int, E: int, factor: float = 1.25, floor: int = 4) -> int:
+    cap = int(math.ceil(n_tokens * k / E * factor))
+    return max(cap, floor)
+
+
+def _dispatch_indices(expert_ids: jax.Array, E: int, cap: int):
+    """expert_ids (N,) -> (dest slot in (E*cap) buffer or E*cap for dropped,
+    sort order, keep mask).  Pure local ops (argsort + searchsorted)."""
+    N = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_e = expert_ids[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos = jnp.arange(N) - seg_start[sorted_e]
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, E * cap)
+    return dest, order, keep
+
+
+def _expert_ffn(cfg: ModelConfig, p: dict, buf: jax.Array, compute_dtype) -> jax.Array:
+    """buf (E_loc, C, d) -> (E_loc, C, d) through per-expert swiglu."""
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"].astype(compute_dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"].astype(compute_dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(compute_dtype))
+
+
+def _moe_local(cfg: ModelConfig, p: dict, x2d: jax.Array, *,
+               ep_axis: Optional[str], compute_dtype) -> tuple:
+    """x2d (T, d) local tokens. Runs router + dispatch (+ a2a when ep_axis).
+    Long token streams are processed in ``moe_seq_chunk`` slices so the
+    (E, capacity, d) dispatch buffer stays O(chunk·k·d) instead of
+    O(T·k·d) — the difference between fitting HBM or not at 32k prefill."""
+    T, d = x2d.shape
+    chunk = cfg.moe_seq_chunk
+    if chunk and T > chunk and T % chunk == 0:
+        nchunks = T // chunk
+
+        @jax.checkpoint
+        def chunk_body(carry, xc):
+            o, a = _moe_local(cfg, p, xc, ep_axis=ep_axis,
+                              compute_dtype=compute_dtype)
+            return carry, (o, a)
+
+        _, (outs, auxs) = jax.lax.scan(
+            chunk_body, None, x2d.reshape(nchunks, chunk, d))
+        return outs.reshape(T, d), jnp.mean(auxs)
+    E, k = cfg.n_experts, cfg.n_experts_active
+    logits = jnp.einsum("td,de->te", x2d.astype(compute_dtype),
+                        p["router"].astype(compute_dtype)).astype(jnp.float32)
+    if getattr(cfg, "router_type", "softmax") == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        top_w, top_i = jax.lax.top_k(scores, k)
+        top_w = top_w / (jnp.sum(top_w, -1, keepdims=True) + 1e-9)
+    else:
+        top_w, top_i = jax.lax.top_k(logits, k)
+        top_w = jax.nn.softmax(top_w, axis=-1)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+    cap = _capacity(T, k, E)
+    flat_e = top_i.reshape(-1)                      # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = top_w.reshape(-1)
+    dest, order, keep = _dispatch_indices(flat_e, E, cap)
+    src_tok = flat_t[order]
+    vals = x2d[src_tok] * keep[:, None].astype(x2d.dtype)
+    buf = jnp.zeros((E * cap + 1, d), x2d.dtype).at[dest].add(vals)
+    buf = buf[:-1].reshape(E, cap, d)
+
+    if ep_axis is None:
+        out_buf = _expert_ffn(cfg, p, buf, compute_dtype)
+    else:
+        m = jax.lax.psum(1, ep_axis)
+        e_loc = E // m
+        b = buf.reshape(m, e_loc, cap, d)
+        b = jax.lax.all_to_all(b, ep_axis, split_axis=0, concat_axis=0)
+        b = b.transpose(1, 0, 2, 3).reshape(e_loc, m * cap, d)
+        ob = _expert_ffn(cfg, p, b, compute_dtype)
+        ob = ob.reshape(e_loc, m, cap, d).transpose(1, 0, 2, 3)
+        ob = jax.lax.all_to_all(ob, ep_axis, split_axis=0, concat_axis=0)
+        out_buf = ob.reshape(E, cap, d)
+
+    flat_out = out_buf.reshape(E * cap, d)
+    padded = jnp.concatenate([flat_out, jnp.zeros((1, d), flat_out.dtype)], axis=0)
+    y = padded[dest] * (keep[:, None] * flat_w[order][:, None]).astype(flat_out.dtype)
+    out = jnp.zeros((T, d), x2d.dtype).at[src_tok].add(y)
+    return out, aux
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array, *, mesh=None,
+              ep: bool = False, dp_spec=P(), compute_dtype=jnp.bfloat16):
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+
+    if not ep or mesh is None:
+        out, aux = _moe_local(cfg, p, x.reshape(B * S, d),
+                              ep_axis=None, compute_dtype=compute_dtype)
+        out = out.reshape(B, S, d)
+    else:
+        def fn(xl, router, wig, wiu, wo):
+            pl = {"router": router, "wi_gate": wig, "wi_up": wiu, "wo": wo}
+            Bl, Sl, dl = xl.shape
+            o, a = _moe_local(cfg, pl, xl.reshape(Bl * Sl, dl),
+                              ep_axis="model", compute_dtype=compute_dtype)
+            # aux as (1,) per shard: concatenated over dp, averaged outside
+            return o.reshape(Bl, Sl, dl), jax.lax.pmean(a, "model")[None]
+
+        in_specs = (P(dp_spec, None, None), P(), P("model", None, None),
+                    P("model", None, None), P("model", None, None))
+        out_specs = (P(dp_spec, None, None), P(dp_spec))
+        out, aux = jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+        aux = jnp.mean(aux)
+
+    if cfg.n_shared_experts > 0:
+        shared_cfg = cfg  # swiglu shared expert
+        out = out + cm.mlp(shared_cfg, p["shared"], x, compute_dtype)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ModelConfig, dtype) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": cm.dense_spec((d, qr), ("embed", "qk_rank"), dtype),
+        "q_norm": cm.rmsnorm_spec(qr, dtype),
+        "wq_b": cm.dense_spec((qr, H, nd + rd), ("qk_rank", "heads", "head_dim"), dtype),
+        "wkv_a": cm.dense_spec((d, kvr + rd), ("embed", "kv_rank"), dtype),
+        "kv_norm": cm.rmsnorm_spec(kvr, dtype),
+        "wk_b": cm.dense_spec((kvr, H, nd), ("kv_rank", "heads", "head_dim"), dtype),
+        "wv_b": cm.dense_spec((kvr, H, vd), ("kv_rank", "heads", "head_dim"), dtype),
+        "wo": cm.dense_spec((H, vd, d), ("heads", "head_dim", "embed"), dtype),
+    }
+
+
+def mla_attention(cfg: ModelConfig, p: dict, x: jax.Array, positions, *,
+                  cache=None, cache_index=0, compute_dtype=jnp.bfloat16,
+                  absorbed: bool = False):
+    """Returns (out, new_cache_entry). Cache holds (c_kv (B,S,kvr), k_rope
+    (B,S,1,rd)). ``absorbed``: decode-optimized path (no K/V expansion)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nd, rd, vd, kvr = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    xc = x.astype(compute_dtype)
+
+    q_lat = jnp.einsum("bsd,dr->bsr", xc, p["wq_a"].astype(compute_dtype))
+    q_lat = cm.rmsnorm(q_lat, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"].astype(compute_dtype))
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", xc, p["wkv_a"].astype(compute_dtype))
+    c_kv, k_rope = kv_a[..., :kvr], kv_a[..., kvr:]
+    c_kv = cm.rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = cm.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,rd)
+
+    if cache is not None:
+        cc, cr = cache
+        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, cache_index, 0))
+        cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype), (0, cache_index, 0, 0))
+        c_all, r_all = cc.astype(compute_dtype), cr.astype(compute_dtype)
+        valid = cache_index + S
+        new_entry = (cc, cr)
+    else:
+        c_all, r_all = c_kv, k_rope
+        valid = None
+        new_entry = None
+
+    scale = 1.0 / np.sqrt(nd + rd)
+    Sk = c_all.shape[1]
+    kv_pos = jnp.arange(Sk)
+    q_pos = jnp.arange(S) + cache_index
+    mask = kv_pos[None, :] <= q_pos[:, None]
+    if valid is not None:
+        mask = mask & (kv_pos[None, :] < valid)
+
+    if absorbed:
+        # score = q_nope^T (W_uk c) + q_rope^T k_rope  — absorb W_uk into q.
+        q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, p["wk_b"].astype(compute_dtype))
+        s_nope = jnp.einsum("bshr,btr->bhst", q_abs, c_all,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bshr,btzr->bhst", q_rope, r_all,
+                            preferred_element_type=jnp.float32)
+        scores = (s_nope + s_rope) * scale
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+        ctx = jnp.einsum("bhst,btr->bshr", probs, c_all)     # (B,S,H,kvr)
+        out_h = jnp.einsum("bshr,rhv->bshv", ctx, p["wv_b"].astype(compute_dtype))
+    else:
+        k_nope = jnp.einsum("btr,rhn->bthn", c_all, p["wk_b"].astype(compute_dtype))
+        v = jnp.einsum("btr,rhv->bthv", c_all, p["wv_b"].astype(compute_dtype))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            r_all, (B, Sk, 1, rd)).repeat(H, axis=2)], axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # sdpa scales by 1/sqrt(nd+rd) internally, which is the MLA scale
+        out_h = cm.sdpa(qfull, k, v, causal=True, q_offset=cache_index,
+                        kv_valid_len=valid,
+                        chunk=cfg.attn_chunk if S > cfg.attn_chunk else 0)
+    out = jnp.einsum("bshv,hvd->bsd", out_h.astype(compute_dtype),
+                     p["wo"].astype(compute_dtype))
+    return out.astype(x.dtype), new_entry
+
+
+# ---------------------------------------------------------------------------
+# The MoE LM (dbrx / deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+class MoELM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _attn_specs(self, dtype):
+        return (mla_specs(self.cfg, dtype) if self.cfg.use_mla
+                else cm.attention_specs(self.cfg, dtype))
+
+    def param_specs(self, dtype=jnp.float32):
+        cfg = self.cfg
+        moe_layer = {
+            "ln1": cm.rmsnorm_spec(cfg.d_model, dtype),
+            "attn": self._attn_specs(dtype),
+            "ln2": cm.rmsnorm_spec(cfg.d_model, dtype),
+            "moe": moe_specs(cfg, dtype),
+        }
+        spec = {
+            "embed": cm.embed_specs(cfg, dtype),
+            "layers": cm.stack_tree(moe_layer, cfg.n_layers - cfg.first_dense_layers),
+            "final_norm": cm.rmsnorm_spec(cfg.d_model, dtype),
+        }
+        if cfg.first_dense_layers > 0:
+            dense_layer = {
+                "ln1": cm.rmsnorm_spec(cfg.d_model, dtype),
+                "attn": self._attn_specs(dtype),
+                "ln2": cm.rmsnorm_spec(cfg.d_model, dtype),
+                "mlp": cm.mlp_specs(cfg, dtype),
+            }
+            spec["dense_layers"] = cm.stack_tree(dense_layer, cfg.first_dense_layers)
+        if cfg.mtp_depth > 0:
+            spec["mtp"] = {
+                "proj": cm.dense_spec((2 * cfg.d_model, cfg.d_model), ("embed", None), dtype),
+                "ln": cm.rmsnorm_spec(cfg.d_model, dtype),
+                "layer": {
+                    "ln1": cm.rmsnorm_spec(cfg.d_model, dtype),
+                    "attn": self._attn_specs(dtype),
+                    "ln2": cm.rmsnorm_spec(cfg.d_model, dtype),
+                    "mlp": cm.mlp_specs(cfg, dtype, d_ff=cfg.moe_d_ff * 4 if cfg.moe_d_ff else cfg.d_ff),
+                },
+            }
+        return spec
+
+    def _attn(self, lp, x, positions, cache_entry, cache_index, compute_dtype, absorbed):
+        cfg = self.cfg
+        if cfg.use_mla:
+            return mla_attention(cfg, lp, x, positions, cache=cache_entry,
+                                 cache_index=cache_index, compute_dtype=compute_dtype,
+                                 absorbed=absorbed)
+        return cm.gqa_attention(cfg, lp, x, positions, cache_kv=cache_entry,
+                                cache_index=cache_index, compute_dtype=compute_dtype)
+
+    def apply(self, params, batch, *, remat="full", compute_dtype=jnp.bfloat16,
+              cache=None, cache_index=0, mesh=None, ep=False, dp_spec=P(),
+              absorbed=False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = cm.shard_act(cm.embed(params["embed"], tokens, compute_dtype))
+        positions = batch.get(
+            "positions", jnp.broadcast_to(jnp.arange(S)[None], (B, S)) + cache_index)
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def dense_body(carry, scanned):
+            x = carry[0]
+            if cache is None:
+                lp, ce = scanned, None
+            else:
+                lp, ce = scanned
+            h = cm.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            a, new_ce = self._attn(lp["attn"], h, positions, ce, cache_index,
+                                   compute_dtype, absorbed)
+            x = x + a
+            h = cm.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            x = x + cm.mlp(cfg, lp["mlp"], h, compute_dtype)
+            return (x,), new_ce
+
+        def moe_body(carry, scanned):
+            x, aux = carry
+            if cache is None:
+                lp, ce = scanned, None
+            else:
+                lp, ce = scanned
+            h = cm.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            a, new_ce = self._attn(lp["attn"], h, positions, ce, cache_index,
+                                   compute_dtype, absorbed)
+            x = x + a
+            h = cm.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            mo, aux_l = moe_apply(cfg, lp["moe"], h, mesh=mesh, ep=ep,
+                                  dp_spec=dp_spec, compute_dtype=compute_dtype)
+            return (x + mo, aux + aux_l), new_ce
+
+        dense_body_r, moe_body_r = _remat(dense_body, remat), _remat(moe_body, remat)
+
+        n_dense = cfg.first_dense_layers
+        new_cache = None
+        if cache is not None:
+            dense_c = jax.tree_util.tree_map(lambda a: a[:n_dense], cache["kv"]) if n_dense else None
+            moe_c = jax.tree_util.tree_map(lambda a: a[n_dense:], cache["kv"])
+        if n_dense > 0:
+            if cache is None:
+                (x,), _ = jax.lax.scan(dense_body, (x,), params["dense_layers"])
+                # note: remat applied only to moe stack for dense-first layers simplicity
+            else:
+                (x,), dense_new = jax.lax.scan(dense_body, (x,), (params["dense_layers"], dense_c))
+        if cache is None:
+            (x, aux_total), _ = jax.lax.scan(moe_body_r, (x, aux_total), params["layers"])
+        else:
+            (x, aux_total), moe_new = jax.lax.scan(
+                moe_body_r, (x, aux_total), (params["layers"], moe_c))
+            if n_dense > 0:
+                new_kv = jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0), dense_new, moe_new)
+            else:
+                new_kv = moe_new
+            new_cache = {"kv": new_kv, "index": cache["index"] + S}
+
+        x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = cm.lm_head(params["embed"], x, compute_dtype)
+
+        mtp_logits = None
+        if cfg.mtp_depth > 0 and cache is None:
+            # Multi-token prediction (deepseek-v3): predict t+2 by combining
+            # the trunk hidden state with the embedding of the next token.
+            mp = params["mtp"]
+            nxt = jnp.concatenate([x[:, 1:], jnp.zeros_like(x[:, :1])], axis=1)
+            h = jnp.concatenate([cm.rmsnorm(x, mp["ln"], cfg.norm_eps), nxt], axis=-1)
+            h = jnp.einsum("bse,ed->bsd", h.astype(compute_dtype),
+                           mp["proj"].astype(compute_dtype))
+            lp = mp["layer"]
+            hh = cm.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            a, _ = self._attn(lp["attn"], hh, positions, None, 0, compute_dtype, False)
+            h = h + a
+            hh = cm.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            h = h + cm.mlp(cfg, lp["mlp"], hh, compute_dtype)
+            mtp_logits = cm.lm_head(params["embed"], h, compute_dtype)
+
+        return logits, {"cache": new_cache, "aux_loss": aux_total, "mtp_logits": mtp_logits}
+
+    # -- serving ------------------------------------------------------------
+    def cache_specs(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        L = cfg.n_layers
+        if cfg.use_mla:
+            kv = {
+                "c_kv": ParamSpec((L, batch_size, max_seq, cfg.kv_lora_rank), dtype,
+                                  ("layers", "batch", "kv_len", "kv_rank"), init="zeros"),
+                "k_rope": ParamSpec((L, batch_size, max_seq, 1, cfg.qk_rope_dim), dtype,
+                                    ("layers", "batch", "kv_len", None, "head_dim"), init="zeros"),
+            }
+        else:
+            shape = (L, batch_size, max_seq, cfg.n_kv_heads, cfg.head_dim_)
+            axes = ("layers", "batch", "kv_len", "kv_heads", "head_dim")
+            kv = {"k": ParamSpec(shape, dtype, axes, init="zeros"),
+                  "v": ParamSpec(shape, dtype, axes, init="zeros")}
+        return {"kv": kv, "index": ParamSpec((), jnp.int32, (), init="zeros")}
+
+    def _cache_tuple(self, cache):
+        kv = cache["kv"]
+        return (kv["c_kv"], kv["k_rope"]) if self.cfg.use_mla else (kv["k"], kv["v"])
+
+    def decode_step(self, params, cache, tokens, *, compute_dtype=jnp.bfloat16,
+                    mesh=None, ep=False, dp_spec=P()):
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(cache["index"][None, None], (B, 1))
+        kv_tuple = self._cache_tuple(cache)
+        cfg = self.cfg
+        cache_in = {"kv": kv_tuple, "index": cache["index"]}
+        logits, extras = self.apply(
+            params, {"tokens": tokens, "positions": positions}, remat="none",
+            compute_dtype=compute_dtype, cache=cache_in, cache_index=cache["index"],
+            mesh=mesh, ep=ep, dp_spec=dp_spec, absorbed=cfg.use_mla)
+        nk = extras["cache"]["kv"]
+        if cfg.use_mla:
+            new_kv = {"c_kv": nk[0], "k_rope": nk[1]}
+        else:
+            new_kv = {"k": nk[0], "v": nk[1]}
+        return logits, {"kv": new_kv, "index": extras["cache"]["index"]}
+
+    def prefill(self, params, batch, cache, *, remat="none", compute_dtype=jnp.bfloat16,
+                mesh=None, ep=False, dp_spec=P()):
+        cache_in = {"kv": self._cache_tuple(cache), "index": cache["index"]}
+        logits, extras = self.apply(
+            params, batch, remat=remat, compute_dtype=compute_dtype, cache=cache_in,
+            cache_index=0, mesh=mesh, ep=ep, dp_spec=dp_spec)
+        nk = extras["cache"]["kv"]
+        new_kv = ({"c_kv": nk[0], "k_rope": nk[1]} if self.cfg.use_mla
+                  else {"k": nk[0], "v": nk[1]})
+        return logits, {"kv": new_kv, "index": extras["cache"]["index"]}
+
+    def input_specs(self, shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

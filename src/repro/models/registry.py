@@ -1,0 +1,28 @@
+"""family → model class dispatch."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+MODEL_FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "dense":
+        from repro.models.transformer import DenseLM
+        return DenseLM(cfg)
+    if cfg.family == "moe":
+        from repro.models.moe import MoELM
+        return MoELM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.ssm import XLSTM
+        return XLSTM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import Zamba2
+        return Zamba2(cfg)
+    if cfg.family == "vlm":
+        from repro.models.vlm import VLM
+        return VLM(cfg)
+    if cfg.family == "audio":
+        from repro.models.audio import Whisper
+        return Whisper(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,511 @@
+"""SSM-family blocks and models.
+
+* Mamba2 (SSD) block — chunk-parallel scan (quadratic intra-chunk term +
+  recurrent inter-chunk state), O(1)-state decode. Used by zamba2 (hybrid.py).
+* xLSTM — mLSTM (matrix memory, exp gating, stabilizer state) and sLSTM
+  (scalar memory with per-head recurrence) blocks; xlstm-350m model.
+
+Recurrences are computed with time-chunked scans wrapped in jax.checkpoint so
+activation memory is O(S/chunk) states + one chunk of intermediates.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common as cm
+from repro.sharding.spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array],
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x (B,S,C), w (k,C). state (B,k-1,C) holds the
+    previous inputs for decode. Returns (y, new_state)."""
+    k = w.shape[0]
+    B, S, C = x.shape
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(w[i] * jax.lax.dynamic_slice_in_dim(xp, i, S, 1) for i in range(k))
+    if b is not None:
+        y = y + b
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return y, new_state
+
+
+def chunked_scan(step_fn, init, xs, chunk: int):
+    """scan(step_fn, init, xs) with xs time-major, rematerialized per chunk."""
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if S % chunk != 0:
+        chunk = S  # fall back to a single chunk for odd smoke-test lengths
+    nc = S // chunk
+    xs_r = jax.tree_util.tree_map(
+        lambda a: a.reshape((nc, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(carry, xc):
+        return jax.lax.scan(step_fn, carry, xc)
+
+    carry, ys = jax.lax.scan(outer, init, xs_r)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((S,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD
+# ---------------------------------------------------------------------------
+
+
+def mamba2_specs(cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    din = cfg.ssm_expand * D
+    H = din // cfg.ssm_head_dim
+    ds, k = cfg.ssm_state, cfg.ssm_conv
+    return {
+        "wz": cm.dense_spec((D, din), ("embed", "mlp"), dtype),
+        "wx": cm.dense_spec((D, din), ("embed", "mlp"), dtype),
+        "wB": cm.dense_spec((D, ds), ("embed", "ssm_state"), dtype),
+        "wC": cm.dense_spec((D, ds), ("embed", "ssm_state"), dtype),
+        "wdt": cm.dense_spec((D, H), ("embed", "ssm_heads"), dtype),
+        "conv_x": ParamSpec((k, din), dtype, ("conv", "mlp"), init="fanin"),
+        "conv_B": ParamSpec((k, ds), dtype, ("conv", "ssm_state"), init="fanin"),
+        "conv_C": ParamSpec((k, ds), dtype, ("conv", "ssm_state"), init="fanin"),
+        "A_log": ParamSpec((H,), jnp.float32, ("ssm_heads",), init="scalar", scale=0.0),
+        "D_skip": ParamSpec((H,), jnp.float32, ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((H,), jnp.float32, ("ssm_heads",), init="zeros"),
+        "gnorm": cm.rmsnorm_spec(din, dtype),
+        "wo": cm.dense_spec((din, D), ("mlp", "embed"), dtype),
+    }
+
+
+def _ssd_chunk(x, dt, a, Bm, Cm, h0):
+    """One SSD chunk. x (B,Q,H,p), dt/a (B,Q,H), Bm/Cm (B,Q,s),
+    h0 (B,H,p,s) -> (y (B,Q,H,p), h_new)."""
+    l = jnp.cumsum(a, axis=1)                                   # (B,Q,H) fp32
+    dtx = (x * dt[..., None]).astype(jnp.float32)
+    diff = l[:, :, None, :] - l[:, None, :, :]                  # (B,Qi,Qj,H)
+    Q = x.shape[1]
+    causal = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, :, :, None]
+    M = jnp.where(causal, jnp.exp(jnp.where(causal, diff, -jnp.inf)), 0.0)
+    CB = jnp.einsum("bis,bjs->bij", Cm.astype(jnp.float32), Bm.astype(jnp.float32))
+    W = M * CB[:, :, :, None]                                   # (B,Qi,Qj,H)
+    y_intra = jnp.einsum("bijh,bjhp->bihp", W, dtx)
+    y_inter = jnp.einsum("bis,bhps->bihp", Cm.astype(jnp.float32), h0) \
+        * jnp.exp(l)[..., None]
+    decay_to_end = jnp.exp(l[:, -1:, :] - l)                    # (B,Q,H)
+    h_new = h0 * jnp.exp(l[:, -1])[:, :, None, None] + jnp.einsum(
+        "bjhp,bjs->bhps", dtx * decay_to_end[..., None], Bm.astype(jnp.float32))
+    return (y_intra + y_inter), h_new
+
+
+def ssd_scan(x, dt, A_log, Bm, Cm, h0, chunk: int = 256):
+    """Chunk-parallel SSD. x (B,S,H,p); dt (B,S,H); Bm/Cm (B,S,s);
+    h0 (B,H,p,s). Returns (y, h_final)."""
+    B, S, H, p = x.shape
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+    a = (-jnp.exp(A_log.astype(jnp.float32)))[None, None, :] * dt  # (B,S,H)
+
+    def r(t):
+        return t.reshape((t.shape[0], nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = (r(x), r(dt), r(a), r(Bm), r(Cm))
+
+    @jax.checkpoint
+    def body(h, inp):
+        xc, dtc, ac, bc, cc = inp
+        y, h_new = _ssd_chunk(xc, dtc, ac, bc, cc, h)
+        return h_new, y
+
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, p)
+    return y, h_final
+
+
+def mamba2_block(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                 state=None, compute_dtype=jnp.bfloat16):
+    """x (B,S,D). state: None (train) or dict(conv_x/B/C, h) for decode.
+    Returns (y (B,S,D), new_state)."""
+    B, S, D = x.shape
+    din = cfg.ssm_expand * D
+    H = din // cfg.ssm_head_dim
+    hd, ds = cfg.ssm_head_dim, cfg.ssm_state
+    xc = x.astype(compute_dtype)
+
+    z = jnp.einsum("bsd,de->bse", xc, p["wz"].astype(compute_dtype))
+    u = jnp.einsum("bsd,de->bse", xc, p["wx"].astype(compute_dtype))
+    Bm = jnp.einsum("bsd,dn->bsn", xc, p["wB"].astype(compute_dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", xc, p["wC"].astype(compute_dtype))
+    dt = jnp.einsum("bsd,dh->bsh", xc, p["wdt"].astype(compute_dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    st = state or {}
+    u, cs_x = causal_conv1d(u, p["conv_x"].astype(compute_dtype), None, st.get("conv_x"))
+    Bm, cs_B = causal_conv1d(Bm, p["conv_B"].astype(compute_dtype), None, st.get("conv_B"))
+    Cm, cs_C = causal_conv1d(Cm, p["conv_C"].astype(compute_dtype), None, st.get("conv_C"))
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(compute_dtype)
+    Bm = jax.nn.silu(Bm.astype(jnp.float32)).astype(compute_dtype)
+    Cm = jax.nn.silu(Cm.astype(jnp.float32)).astype(compute_dtype)
+
+    uh = u.reshape(B, S, H, hd)
+    h0 = st.get("h")
+    if h0 is None:
+        h0 = jnp.zeros((B, H, hd, ds), jnp.float32)
+    if S == 1:  # decode: recurrent update
+        a = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt[:, 0]      # (B,H)
+        h_new = h0 * jnp.exp(a)[:, :, None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", uh[:, 0].astype(jnp.float32),
+            Bm[:, 0].astype(jnp.float32), dt[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None]  # (B,1,H,hd)
+        h_final = h_new
+    else:
+        y, h_final = ssd_scan(uh, dt, p["A_log"], Bm, Cm, h0)
+        y = y.reshape(B, S, H, hd)
+    y = y + uh.astype(jnp.float32) * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, din).astype(compute_dtype)
+    y = cm.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(compute_dtype),
+                   p["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(compute_dtype))
+    new_state = {"conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C, "h": h_final}
+    return out.astype(x.dtype), new_state
+
+
+def mamba2_state_specs(cfg: ModelConfig, n_layers: int, batch: int, dtype=jnp.bfloat16):
+    D = cfg.d_model
+    din = cfg.ssm_expand * D
+    H = din // cfg.ssm_head_dim
+    k = cfg.ssm_conv
+    L = n_layers
+    return {
+        "conv_x": ParamSpec((L, batch, k - 1, din), dtype,
+                            ("layers", "batch", "conv", "mlp"), init="zeros"),
+        "conv_B": ParamSpec((L, batch, k - 1, cfg.ssm_state), dtype,
+                            ("layers", "batch", "conv", "ssm_state"), init="zeros"),
+        "conv_C": ParamSpec((L, batch, k - 1, cfg.ssm_state), dtype,
+                            ("layers", "batch", "conv", "ssm_state"), init="zeros"),
+        "h": ParamSpec((L, batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32,
+                       ("layers", "batch", "ssm_heads", "head_dim", "ssm_state"),
+                       init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    din = 2 * D
+    H = cfg.n_heads
+    k = cfg.ssm_conv
+    return {
+        "ln": cm.rmsnorm_spec(D, dtype),
+        "wu": cm.dense_spec((D, din), ("embed", "mlp"), dtype),
+        "wzg": cm.dense_spec((D, din), ("embed", "mlp"), dtype),
+        "conv": ParamSpec((k, din), dtype, ("conv", "mlp"), init="fanin"),
+        "wq": cm.dense_spec((din, din), ("mlp", None), dtype),
+        "wk": cm.dense_spec((din, din), ("mlp", None), dtype),
+        "wv": cm.dense_spec((din, din), ("mlp", None), dtype),
+        "wi": cm.dense_spec((din, H), ("mlp", "ssm_heads"), dtype),
+        "wf": cm.dense_spec((din, H), ("mlp", "ssm_heads"), dtype),
+        "bi": ParamSpec((H,), jnp.float32, ("ssm_heads",), init="zeros"),
+        "bf": ParamSpec((H,), jnp.float32, ("ssm_heads",), init="scalar", scale=3.0),
+        "gnorm": cm.rmsnorm_spec(din, dtype),
+        "wo": cm.dense_spec((din, D), ("mlp", "embed"), dtype),
+    }
+
+
+def _mlstm_step(carry, inp):
+    """carry: (C (B,H,dk,dv), n (B,H,dk), m (B,H)); inp: per-step tensors."""
+    C, n, m = carry
+    q, k, v, it, ft = inp          # q/k/v (B,H,dk|dv), it/ft (B,H) fp32
+    dk = q.shape[-1]
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    ks = k.astype(jnp.float32) / np.sqrt(dk)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        ks[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * ks
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h.astype(jnp.bfloat16)  # stacked output: half bytes
+
+
+def mlstm_block(cfg: ModelConfig, p: dict, x: jax.Array, *, state=None,
+                compute_dtype=jnp.bfloat16, chunk: int = 256):
+    B, S, D = x.shape
+    din = 2 * D
+    H = cfg.n_heads
+    dk = din // H
+    xn = cm.rmsnorm(x, p["ln"], cfg.norm_eps).astype(compute_dtype)
+    u = jnp.einsum("bsd,de->bse", xn, p["wu"].astype(compute_dtype))
+    zg = jnp.einsum("bsd,de->bse", xn, p["wzg"].astype(compute_dtype))
+    st = state or {}
+    uc, conv_state = causal_conv1d(u, p["conv"].astype(compute_dtype), None, st.get("conv"))
+    uc = jax.nn.silu(uc.astype(jnp.float32)).astype(compute_dtype)
+    q = jnp.einsum("bse,ef->bsf", uc, p["wq"].astype(compute_dtype)).reshape(B, S, H, dk)
+    k = jnp.einsum("bse,ef->bsf", uc, p["wk"].astype(compute_dtype)).reshape(B, S, H, dk)
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"].astype(compute_dtype)).reshape(B, S, H, dk)
+    it = jnp.einsum("bse,eh->bsh", uc, p["wi"].astype(compute_dtype)).astype(jnp.float32) + p["bi"]
+    ft = jnp.einsum("bse,eh->bsh", uc, p["wf"].astype(compute_dtype)).astype(jnp.float32)
+    ft = -jax.nn.softplus(-(ft + p["bf"]))       # log sigmoid of forget preact
+
+    C0 = st.get("C", jnp.zeros((B, H, dk, dk), jnp.float32))
+    n0 = st.get("n", jnp.zeros((B, H, dk), jnp.float32))
+    m0 = st.get("m", jnp.full((B, H), -1e30, jnp.float32))
+
+    tm = lambda t: jnp.swapaxes(t, 0, 1)         # (B,S,...) -> (S,B,...)
+    (Cf, nf, mf), hs = chunked_scan(
+        _mlstm_step, (C0, n0, m0), (tm(q), tm(k), tm(v), tm(it), tm(ft)), chunk)
+    h = jnp.swapaxes(hs, 0, 1).reshape(B, S, din).astype(compute_dtype)
+    h = cm.rmsnorm(h, p["gnorm"], cfg.norm_eps)
+    h = h * jax.nn.silu(zg.astype(jnp.float32)).astype(compute_dtype)
+    out = jnp.einsum("bse,ed->bsd", h, p["wo"].astype(compute_dtype))
+    new_state = {"conv": conv_state, "C": Cf, "n": nf, "m": mf}
+    return x + out.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    f_up = max(((int(D * 4 / 3) + 127) // 128) * 128, 16)  # lane-aligned 4/3 proj
+    return {
+        "ln": cm.rmsnorm_spec(D, dtype),
+        "wg": cm.dense_spec((D, 4 * D), ("embed", "mlp"), dtype),       # z,i,f,o
+        "rg": cm.dense_spec((H, dh, 4 * dh), ("ssm_heads", "head_dim", None), dtype),
+        "bg": ParamSpec((4 * D,), jnp.float32, ("mlp",), init="zeros"),
+        "gnorm": cm.rmsnorm_spec(D, dtype),
+        "up": cm.dense_spec((D, f_up), ("embed", "mlp"), dtype),
+        "down": cm.dense_spec((f_up, D), ("mlp", "embed"), dtype),
+    }
+
+
+def _slstm_step(carry, inp, *, rg, H, dh):
+    c, n, h, m = carry                      # (B,H,dh) each; m (B,H,dh)
+    wx = inp                                # (B, 4D) fp32 projected input
+    B = wx.shape[0]
+    rec = jnp.einsum("bhd,hdk->bhk", h, rg.astype(h.dtype))  # (B,H,4dh)
+    g = wx.reshape(B, H, 4 * dh) + rec
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    logf = -jax.nn.softplus(-ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new), h_new.astype(jnp.bfloat16)
+
+
+def slstm_block(cfg: ModelConfig, p: dict, x: jax.Array, *, state=None,
+                compute_dtype=jnp.bfloat16, chunk: int = 256):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    xn = cm.rmsnorm(x, p["ln"], cfg.norm_eps).astype(compute_dtype)
+    wx = (jnp.einsum("bsd,dg->bsg", xn, p["wg"].astype(compute_dtype))
+          .astype(jnp.float32) + p["bg"])
+    st = state or {}
+    c0 = st.get("c", jnp.zeros((B, H, dh), jnp.float32))
+    n0 = st.get("n", jnp.zeros((B, H, dh), jnp.float32))
+    h0 = st.get("h", jnp.zeros((B, H, dh), jnp.float32))
+    m0 = st.get("m", jnp.full((B, H, dh), -1e30, jnp.float32))
+
+    import functools
+    step = functools.partial(_slstm_step, rg=p["rg"].astype(jnp.float32), H=H, dh=dh)
+    (cf, nf, hf, mf), hs = chunked_scan(
+        step, (c0, n0, h0, m0), jnp.swapaxes(wx, 0, 1), chunk)
+    h = jnp.swapaxes(hs, 0, 1).reshape(B, S, D).astype(compute_dtype)
+    h = cm.rmsnorm(h, p["gnorm"], cfg.norm_eps)
+    up = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["up"].astype(compute_dtype))
+                     .astype(jnp.float32), approximate=True).astype(compute_dtype)
+    out = jnp.einsum("bsf,fd->bsd", up, p["down"].astype(compute_dtype))
+    new_state = {"c": cf, "n": nf, "h": hf, "m": mf}
+    return x + out.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM model (alternating mLSTM / sLSTM stacks)
+# ---------------------------------------------------------------------------
+
+
+class XLSTM:
+    """xlstm-350m: n_layers blocks; every ``slstm_every``-th block is sLSTM
+    (rest mLSTM). Homogeneous scan per kind: we scan the mLSTM stack and the
+    sLSTM stack separately, interleaved by groups (like zamba2's layout)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        se = cfg.slstm_every or 0
+        self.n_slstm = cfg.n_layers // se if se else 0
+        self.n_mlstm = cfg.n_layers - self.n_slstm
+        # groups of (mlstm_per_group mLSTM layers, then 1 sLSTM)
+        self.groups = max(self.n_slstm, 1)
+        assert self.n_mlstm % self.groups == 0, (self.n_mlstm, self.groups)
+        self.m_per_group = self.n_mlstm // self.groups
+
+    def param_specs(self, dtype=jnp.float32):
+        cfg = self.cfg
+        spec = {
+            "embed": cm.embed_specs(cfg, dtype),
+            "mlstm": cm.stack_tree(mlstm_specs(cfg, dtype), self.n_mlstm),
+            "final_norm": cm.rmsnorm_spec(cfg.d_model, dtype),
+        }
+        if self.n_slstm:
+            spec["slstm"] = cm.stack_tree(slstm_specs(cfg, dtype), self.n_slstm)
+        return spec
+
+    def _mlstm_state_specs(self, batch, dtype=jnp.float32):
+        cfg = self.cfg
+        din = 2 * cfg.d_model
+        H = cfg.n_heads
+        dk = din // H
+        L = self.n_mlstm
+        k = cfg.ssm_conv
+        return {
+            "conv": ParamSpec((L, batch, k - 1, din), dtype,
+                              ("layers", "batch", "conv", "mlp"), init="zeros"),
+            "C": ParamSpec((L, batch, H, dk, dk), jnp.float32,
+                           ("layers", "batch", "ssm_heads", "head_dim", None), init="zeros"),
+            "n": ParamSpec((L, batch, H, dk), jnp.float32,
+                           ("layers", "batch", "ssm_heads", "head_dim"), init="zeros"),
+            "m": ParamSpec((L, batch, H), jnp.float32,
+                           ("layers", "batch", "ssm_heads"), init="scalar", scale=-1e30),
+        }
+
+    def _slstm_state_specs(self, batch, dtype=jnp.float32):
+        cfg = self.cfg
+        H = cfg.n_heads
+        dh = cfg.d_model // H
+        L = self.n_slstm
+        mk = lambda shape, axes: ParamSpec(shape, jnp.float32, axes, init="zeros")
+        ax = ("layers", "batch", "ssm_heads", "head_dim")
+        return {
+            "c": mk((L, batch, H, dh), ax), "n": mk((L, batch, H, dh), ax),
+            "h": mk((L, batch, H, dh), ax),
+            "m": ParamSpec((L, batch, H, dh), jnp.float32, ax, init="scalar", scale=-1e30),
+        }
+
+    def cache_specs(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16):
+        spec = {"m_state": self._mlstm_state_specs(batch_size),
+                "index": ParamSpec((), jnp.int32, (), init="zeros")}
+        if self.n_slstm:
+            spec["s_state"] = self._slstm_state_specs(batch_size)
+        return spec
+
+    def _forward(self, params, x, state, compute_dtype):
+        """x (B,S,D); state: None or dict of stacked states. Returns
+        (x, new_state)."""
+        cfg = self.cfg
+
+        def m_body(carry, scanned):
+            x = carry
+            if state is None:
+                lp, ls = scanned, None
+            else:
+                lp, ls = scanned
+            x, ns = mlstm_block(cfg, lp, x, state=ls, compute_dtype=compute_dtype)
+            return x, ns
+
+        def s_body(carry, scanned):
+            x = carry
+            if state is None:
+                lp, ls = scanned, None
+            else:
+                lp, ls = scanned
+            x, ns = slstm_block(cfg, lp, x, state=ls, compute_dtype=compute_dtype)
+            return x, ns
+
+        g, mpg = self.groups, self.m_per_group
+        reshape_g = lambda t: t.reshape((g, mpg) + t.shape[1:])
+        m_params = jax.tree_util.tree_map(reshape_g, params["mlstm"])
+        if state is not None:
+            m_state = jax.tree_util.tree_map(reshape_g, state["m_state"])
+
+        new_m_states, new_s_states = [], []
+        for gi in range(g):
+            mp = jax.tree_util.tree_map(lambda t: t[gi], m_params)
+            if state is None:
+                x, _ = jax.lax.scan(m_body, x, mp)
+            else:
+                ms = jax.tree_util.tree_map(lambda t: t[gi], m_state)
+                x, nms = jax.lax.scan(m_body, x, (mp, ms))
+                new_m_states.append(nms)
+            if self.n_slstm:
+                sp = jax.tree_util.tree_map(lambda t: t[gi], params["slstm"])
+                if state is None:
+                    x, _ = s_body(x, sp)
+                else:
+                    ss = jax.tree_util.tree_map(lambda t: t[gi], state["s_state"])
+                    x, nss = s_body(x, (sp, ss))
+                    new_s_states.append(nss)
+        new_state = None
+        if state is not None:
+            new_state = {
+                "m_state": jax.tree_util.tree_map(
+                    lambda *xs: jnp.concatenate(xs, axis=0), *new_m_states),
+            }
+            if self.n_slstm:
+                new_state["s_state"] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs, axis=0), *new_s_states)
+        return x, new_state
+
+    def apply(self, params, batch, *, remat="full", compute_dtype=jnp.bfloat16,
+              cache=None, cache_index=0):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = cm.shard_act(cm.embed(params["embed"], tokens, compute_dtype))
+        state = None
+        if cache is not None:
+            state = {k: v for k, v in cache.items() if k != "index"}
+        x, new_state = self._forward(params, x, state, compute_dtype)
+        x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = cm.lm_head(params["embed"], x, compute_dtype)
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(new_state)
+            new_cache["index"] = cache["index"] + tokens.shape[1]
+        return logits, new_cache
+
+    def decode_step(self, params, cache, tokens, *, compute_dtype=jnp.bfloat16):
+        return self.apply(params, {"tokens": tokens}, remat="none",
+                          compute_dtype=compute_dtype, cache=cache,
+                          cache_index=cache["index"])
+
+    def prefill(self, params, batch, cache, *, remat="none", compute_dtype=jnp.bfloat16):
+        return self.apply(params, batch, remat=remat, compute_dtype=compute_dtype,
+                          cache=cache, cache_index=0)
+
+    def input_specs(self, shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

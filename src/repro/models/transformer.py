@@ -1,0 +1,142 @@
+"""Dense decoder-only transformer LM (llama3 / qwen2.5 / granite / nemotron
+families) with scan-over-layers, optional remat, and KV-cache decode."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common as cm
+from repro.sharding.spec import ParamSpec
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full"
+
+
+class DenseLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameters ---------------------------------------------------------
+    def param_specs(self, dtype=jnp.float32):
+        cfg = self.cfg
+        layer = {
+            "ln1": cm.rmsnorm_spec(cfg.d_model, dtype),
+            "attn": cm.attention_specs(cfg, dtype),
+            "ln2": cm.rmsnorm_spec(cfg.d_model, dtype),
+            "mlp": cm.mlp_specs(cfg, dtype),
+        }
+        return {
+            "embed": cm.embed_specs(cfg, dtype),
+            "layers": cm.stack_tree(layer, cfg.n_layers),
+            "final_norm": cm.rmsnorm_spec(cfg.d_model, dtype),
+        }
+
+    # -- layer body ---------------------------------------------------------
+    def _layer(self, lp, x, positions, cache_kv, cache_index, compute_dtype):
+        cfg = self.cfg
+        h = cm.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, new_kv = cm.gqa_attention(
+            cfg, lp["attn"], h, positions, cache_kv=cache_kv,
+            cache_index=cache_index, causal=True, compute_dtype=compute_dtype)
+        x = x + attn_out
+        h = cm.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + cm.mlp(cfg, lp["mlp"], h, compute_dtype)
+        return x, new_kv
+
+    # -- forward ------------------------------------------------------------
+    def apply(self, params, batch, *, remat: str = "full",
+              compute_dtype=jnp.bfloat16, cache=None, cache_index=0,
+              return_hidden: bool = False):
+        """batch: {"tokens": (B, S)}. Returns (logits, new_cache|None) or,
+        with return_hidden, (logits, new_cache, final_hidden (B, S, d)) —
+        used by the kNN-LM retrieval hook."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = cm.shard_act(cm.embed(params["embed"], tokens, compute_dtype))
+        positions = batch.get(
+            "positions", jnp.broadcast_to(jnp.arange(S)[None], (B, S)) + cache_index)
+
+        def body(carry, scanned):
+            x = carry
+            if cache is None:
+                lp = scanned
+                x, _ = self._layer(lp, x, positions, None, cache_index, compute_dtype)
+                return x, None
+            lp, kv = scanned
+            x, new_kv = self._layer(lp, x, positions, kv, cache_index, compute_dtype)
+            return x, new_kv
+
+        body = _remat(body, remat)
+        if cache is None:
+            x, _ = jax.lax.scan(body, x, params["layers"])
+            new_cache = None
+        elif cfg.kv_quant:
+            kv_in = ((cache["k_q"], cache["k_s"]), (cache["v_q"], cache["v_s"]))
+            x, new_kv = jax.lax.scan(body, x, (params["layers"], kv_in))
+            (kq, ks), (vq, vs) = new_kv
+            new_cache = {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs,
+                         "index": cache["index"] + S}
+        else:
+            x, new_kv = jax.lax.scan(body, x, (params["layers"], (cache["k"], cache["v"])))
+            new_cache = {"k": new_kv[0], "v": new_kv[1], "index": cache["index"] + S}
+        x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = cm.lm_head(params["embed"], x, compute_dtype)
+        if return_hidden:
+            return logits, new_cache, x
+        return logits, new_cache
+
+    # -- serving ------------------------------------------------------------
+    def cache_specs(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        kv_shape = (cfg.n_layers, batch_size, max_seq, cfg.n_kv_heads, cfg.head_dim_)
+        axes = ("layers", "batch", "kv_len", "kv_heads", "head_dim")
+        if cfg.kv_quant:
+            s_shape, s_axes = kv_shape[:-1], axes[:-1]
+            return {
+                "k_q": ParamSpec(kv_shape, jnp.int8, axes, init="zeros"),
+                "k_s": ParamSpec(s_shape, jnp.bfloat16, s_axes, init="ones"),
+                "v_q": ParamSpec(kv_shape, jnp.int8, axes, init="zeros"),
+                "v_s": ParamSpec(s_shape, jnp.bfloat16, s_axes, init="ones"),
+                "index": ParamSpec((), jnp.int32, (), init="zeros"),
+            }
+        return {
+            "k": ParamSpec(kv_shape, dtype, axes, init="zeros"),
+            "v": ParamSpec(kv_shape, dtype, axes, init="zeros"),
+            "index": ParamSpec((), jnp.int32, (), init="zeros"),
+        }
+
+    def decode_step(self, params, cache, tokens, *, compute_dtype=jnp.bfloat16,
+                    return_hidden: bool = False):
+        """tokens (B, 1); cache index = current length. Returns (logits, cache)."""
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(cache["index"][None, None], (B, 1))
+        return self.apply(
+            params, {"tokens": tokens, "positions": positions}, remat="none",
+            compute_dtype=compute_dtype, cache=cache, cache_index=cache["index"],
+            return_hidden=return_hidden)
+
+    def prefill(self, params, batch, cache, *, remat="none", compute_dtype=jnp.bfloat16):
+        return self.apply(params, batch, remat=remat, compute_dtype=compute_dtype,
+                          cache=cache, cache_index=0)
+
+    # -- abstract inputs ----------------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        # decode: one new token against a cache of length S
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

@@ -1,0 +1,85 @@
+"""qwen2-vl-2b backbone: dense decoder LM with M-RoPE (3D rotary sections for
+temporal/height/width position ids). The vision tower is a STUB per the
+assignment: ``input_specs`` provides precomputed patch embeddings merged into
+the token stream, plus the (3, B, S) position ids M-RoPE consumes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common as cm
+from repro.models.transformer import DenseLM, _remat
+
+
+class VLM(DenseLM):
+    def _layer(self, lp, x, positions3, cache_kv, cache_index, compute_dtype):
+        cfg = self.cfg
+        h = cm.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, new_kv = cm.gqa_attention(
+            cfg, lp["attn"], h, None, cache_kv=cache_kv, cache_index=cache_index,
+            causal=True, positions3=positions3, compute_dtype=compute_dtype)
+        x = x + attn_out
+        h = cm.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + cm.mlp(cfg, lp["mlp"], h, compute_dtype)
+        return x, new_kv
+
+    def apply(self, params, batch, *, remat: str = "full",
+              compute_dtype=jnp.bfloat16, cache=None, cache_index=0):
+        """batch: {"embeds": (B,S,d) float stub embeddings, "positions3":
+        (3,B,S) int32}. Token ids are already folded into ``embeds``."""
+        cfg = self.cfg
+        x = cm.shard_act(batch["embeds"].astype(compute_dtype))
+        B, S = x.shape[:2]
+        positions3 = batch.get("positions3")
+        if positions3 is None:
+            p = jnp.broadcast_to(jnp.arange(S)[None], (B, S)) + cache_index
+            positions3 = jnp.broadcast_to(p[None], (3, B, S))
+
+        def body(carry, scanned):
+            x = carry
+            if cache is None:
+                lp = scanned
+                x, _ = self._layer(lp, x, positions3, None, cache_index, compute_dtype)
+                return x, None
+            lp, (ck, cv) = scanned
+            x, new_kv = self._layer(lp, x, positions3, (ck, cv), cache_index,
+                                    compute_dtype)
+            return x, new_kv
+
+        body = _remat(body, remat)
+        if cache is None:
+            x, _ = jax.lax.scan(body, x, params["layers"])
+            new_cache = None
+        else:
+            x, new_kv = jax.lax.scan(body, x, (params["layers"], (cache["k"], cache["v"])))
+            new_cache = {"k": new_kv[0], "v": new_kv[1], "index": cache["index"] + S}
+        x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = cm.lm_head(params["embed"], x, compute_dtype)
+        return logits, new_cache
+
+    def decode_step(self, params, cache, batch, *, compute_dtype=jnp.bfloat16):
+        """batch: {"embeds": (B,1,d)} — text-mode decode: all 3 position
+        streams equal the current index."""
+        if isinstance(batch, dict):
+            embeds = batch["embeds"]
+        else:  # token array fallback: embed through the table
+            embeds = jnp.take(params["embed"]["tok"], batch, axis=0)
+        B = embeds.shape[0]
+        pos = jnp.broadcast_to(cache["index"][None, None, None], (3, B, 1))
+        logits, new_cache = self.apply(
+            params, {"embeds": embeds, "positions3": pos}, remat="none",
+            compute_dtype=compute_dtype, cache=cache, cache_index=cache["index"])
+        return logits, new_cache
+
+    def input_specs(self, shape: ShapeConfig):
+        B, S, d = shape.global_batch, shape.seq_len, self.cfg.d_model
+        f32, i32 = jnp.float32, jnp.int32
+        if shape.kind == "train":
+            return {"embeds": jax.ShapeDtypeStruct((B, S, d), jnp.bfloat16),
+                    "positions3": jax.ShapeDtypeStruct((3, B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "prefill":
+            return {"embeds": jax.ShapeDtypeStruct((B, S, d), jnp.bfloat16),
+                    "positions3": jax.ShapeDtypeStruct((3, B, S), i32)}
+        return {"embeds": jax.ShapeDtypeStruct((B, 1, d), jnp.bfloat16)}

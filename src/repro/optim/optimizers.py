@@ -1,0 +1,128 @@
+"""Optimizers (pure JAX, no external deps): AdamW and Adafactor.
+
+AdamW keeps fp32 m/v per parameter (3× param memory at fp32 params).
+Adafactor (Shazeer & Stern 2018) keeps *factored* second moments — row + col
+accumulators for matrices — so optimizer state is ~0 extra bytes/param; the
+≥100B assigned archs use it (see per-arch plans in DESIGN.md). β1=0 (no first
+moment) by default, update clipping by RMS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable    # params -> opt_state
+    update: Callable  # (grads, opt_state, params, step, lr) -> (new_params, new_state)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params, step, lr):
+        step = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** step
+        c2 = 1.0 - b2 ** step
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh, vh = m / c1, v / c2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(eps: float = 1e-30, clip_rms: float = 1.0,
+              decay_pow: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer; state per matrix = row + col vecs."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree_util.tree_map(one, params)
+
+    def update(grads, state, params, step, lr):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay_pow)
+
+        def one(s, g, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                r = beta2 * s["r"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                c = beta2 * s["c"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rc = jnp.mean(r, axis=-1, keepdims=True)
+                v = (r / jnp.maximum(rc, eps))[..., None] * c[..., None, :]
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                new_s = {"v": v}
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_rms)
+            pf = p.astype(jnp.float32)
+            if weight_decay:
+                u = u + weight_decay * pf
+            return (pf - lr * u).astype(p.dtype), new_s
+
+        # state goes first: its {"r","c"}/{"v"} dicts are the is_leaf boundary
+        flat = jax.tree_util.tree_map(
+            one, state, grads, params,
+            is_leaf=lambda x: isinstance(x, dict) and set(x) <= {"r", "c", "v"})
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, train_cfg=None) -> Optimizer:
+    wd = getattr(train_cfg, "weight_decay", 0.1) if train_cfg else 0.1
+    b1 = getattr(train_cfg, "b1", 0.9) if train_cfg else 0.9
+    b2 = getattr(train_cfg, "b2", 0.95) if train_cfg else 0.95
+    if name == "adamw":
+        return adamw(b1=b1, b2=b2, weight_decay=wd)
+    if name == "adafactor":
+        return adafactor(weight_decay=0.0)
+    if name == "sgd":
+        def init(params):
+            return {}
+
+        def update(grads, state, params, step, lr):
+            new_p = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_p, state
+
+        return Optimizer(init, update)
+    raise ValueError(name)

@@ -1,0 +1,4 @@
+from repro.roofline.analysis import RooflineTerms, analyze_compiled, HW
+from repro.roofline.hlo import collective_bytes
+
+__all__ = ["RooflineTerms", "analyze_compiled", "collective_bytes", "HW"]

@@ -1,0 +1,406 @@
+"""HLO-text cost model for the dry-run 'profile'.
+
+``compiled.cost_analysis()`` visits each while body ONCE, so layer-scan and
+grad-accumulation loops are massively under-counted. This module re-derives
+FLOPs / bytes-accessed / collective-bytes from ``compiled.as_text()`` with
+per-computation *trip-count multipliers*:
+
+  * every `while` op carries ``backend_config={"known_trip_count":{"n":N}}``
+    for counted loops (jax.lax.scan); its body and condition computations
+    inherit ×N (nested loops multiply),
+  * `fusion` / `call` / custom-call sub-computations inherit their caller's
+    multiplier,
+  * dot FLOPs = 2 × prod(output dims) × prod(contracting dims), resolved
+    through a per-computation symbol table (operand names → shapes),
+  * elementwise/transcendental ops count 1 FLOP per output element
+    (HloCostAnalysis convention),
+  * bytes accessed per op = operand bytes + output bytes (HloCostAnalysis
+    convention), for compute ops only,
+  * collective bytes: output-shape bytes per collective op (all-reduce ×2
+    for the reduce+broadcast ring halves).
+
+Data-dependent ``while`` loops (e.g. the BMO racing loop) have no
+known_trip_count and count ×1 — noted where reported.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# 1-flop-per-element ops (HloCostAnalysis convention, incl. transcendentals)
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+    "sine", "cosine", "logistic", "expm1", "log1p", "floor", "ceil",
+    "round-nearest-afz", "sign", "atan2", "cbrt", "erf",
+}
+_REDUCE_LIKE = {"reduce", "reduce-window"}
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "while", "call",
+    "conditional", "after-all", "partition-id", "replica-id", "bitcast",
+    "get-dimension-size", "custom-call", "fusion", "opt-barrier",
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """total (elements, bytes) over all arrays in a (possibly tuple) shape."""
+    elems = byts = 0
+    for m in _ARRAY_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _dims_of(shape_str: str) -> List[int]:
+    m = _ARRAY_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str           # output shape string
+    opcode: str
+    args: str            # raw remainder (operand list + attrs)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    shapes: Dict[str, str]   # symbol table: op name -> output shape str
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        # computation header: `%name (args) -> type {` — args may nest parens
+        if stripped.endswith("{") and "->" in stripped and " = " not in stripped:
+            m = re.match(r"\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(", stripped)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, rest = m.groups()
+        cur.ops.append(Op(name, shape, opcode, rest))
+        cur.shapes[name] = shape
+    return comps, entry
+
+
+def _called_comps(op: Op) -> List[Tuple[str, str]]:
+    """(role, computation_name) pairs referenced by this op."""
+    out = []
+    for role in ("body", "condition", "to_apply", "calls", "branch_computations"):
+        for m in re.finditer(role + r"=\{?%?([\w\.\-,%\s]+)\}?", op.args):
+            for nm in re.split(r"[,\s]+", m.group(1)):
+                nm = nm.strip().lstrip("%")
+                if nm:
+                    out.append((role, nm))
+    return out
+
+
+def _trip_count(op: Op) -> Optional[int]:
+    m = re.search(r"known_trip_count[^0-9]*(\d+)", op.args)
+    return int(m.group(1)) if m else None
+
+
+def multipliers(comps: Dict[str, Computation],
+                entry: Optional[str] = None) -> Dict[str, float]:
+    """computation name -> execution-count multiplier from ENTRY."""
+    if entry is None:
+        referenced = set()
+        for c in comps.values():
+            for op in c.ops:
+                referenced.update(nm for _, nm in _called_comps(op))
+        unref = [n for n in comps if n not in referenced]
+        entry = unref[-1] if unref else None
+    mult: Dict[str, float] = {}
+    stack = [(entry, 1.0)] if entry else []
+    seen = set()
+    while stack:
+        name, m = stack.pop()
+        if name not in comps:
+            continue
+        mult[name] = max(mult.get(name, 0.0), m)
+        if (name, m) in seen:
+            continue
+        seen.add((name, m))
+        for op in comps[name].ops:
+            trip = _trip_count(op) if op.opcode == "while" else None
+            for role, callee in _called_comps(op):
+                child_m = m
+                if op.opcode == "while":
+                    t = trip if trip else 1
+                    child_m = m * (t if role == "body" else t + 1)
+                stack.append((callee, child_m))
+    return mult
+
+
+def _operand_names(op: Op) -> List[str]:
+    """operand names from the leading parenthesized list of the op args."""
+    depth, i, buf = 1, 0, []
+    while i < len(op.args) and depth > 0:
+        ch = op.args[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+        i += 1
+    arglist = "".join(buf)
+    return [m.group(1) for m in re.finditer(r"%([\w\.\-]+)", arglist)]
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_dims = _dims_of(op.shape)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    ops_names = _operand_names(op)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.args)
+    if not m or not ops_names:
+        return 2.0 * out_elems  # fallback
+    lhs_shape = comp.shapes.get(ops_names[0], "")
+    lhs_dims = _dims_of(lhs_shape)
+    contract = 1
+    if m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+_SLICE_LIKE = {"dynamic-slice", "slice", "gather"}
+
+
+def _op_bytes(op: Op, comp: Computation, comps: Dict[str, Computation]) -> float:
+    """HBM bytes for one top-level op: output write + operand reads, with
+    slice-aware accounting:
+
+      * (dynamic-)slice / gather: only the moved region (2× output),
+      * dynamic-update-slice: 2× the update region (the big buffer aliases),
+      * fusion: per-operand — if the matching parameter inside the fused
+        computation is consumed *only* by slice-like ops, charge the slice
+        outputs (stacked scan params are read one layer-slice at a time!);
+        fusion with a DUS root charges the update region instead of the
+        full output buffer.
+    """
+    out_bytes = _shape_elems_bytes(op.shape)[1]
+    oc = op.opcode
+    if oc in _SLICE_LIKE:
+        return 2.0 * out_bytes
+    if oc == "dynamic-update-slice":
+        ops_n = _operand_names(op)
+        upd = _shape_elems_bytes(comp.shapes.get(ops_n[1], ""))[1] if len(ops_n) > 1 else 0
+        return 2.0 * (upd or out_bytes)
+    if oc != "fusion":
+        operand_bytes = sum(
+            _shape_elems_bytes(comp.shapes[nm])[1]
+            for nm in _operand_names(op) if nm in comp.shapes)
+        return out_bytes + operand_bytes
+
+    # ---- fusion ----
+    callees = [nm for role, nm in _called_comps(op) if role == "calls"]
+    callee = comps.get(callees[0]) if callees else None
+    operand_names = _operand_names(op)
+    if callee is None:
+        return out_bytes + sum(
+            _shape_elems_bytes(comp.shapes[nm])[1]
+            for nm in operand_names if nm in comp.shapes)
+
+    # parameter index -> param op
+    params: Dict[int, Op] = {}
+    for o in callee.ops:
+        if o.opcode == "parameter":
+            mm = re.match(r"\s*(\d+)", o.args)
+            if mm:
+                params[int(mm.group(1))] = o
+    # consumers per value name inside callee
+    total = 0.0
+    for i, nm in enumerate(operand_names):
+        full = _shape_elems_bytes(comp.shapes.get(nm, ""))[1]
+        p = params.get(i)
+        if p is None:
+            total += full
+            continue
+        consumers = [o for o in callee.ops if p.name in _operand_names(o)]
+        if consumers and all(o.opcode in _SLICE_LIKE for o in consumers):
+            total += sum(_shape_elems_bytes(o.shape)[1] for o in consumers)
+        else:
+            total += full
+    # in-place cache-update fusion: a DUS whose result dims match the fusion
+    # output (possibly through a trailing convert) — charge the update
+    # region, not the whole buffer, and drop the aliased buffer operand.
+    out_dims = _dims_of(op.shape)
+    dus = None
+    for o in callee.ops:
+        if o.opcode == "dynamic-update-slice" and _dims_of(o.shape) == out_dims:
+            dus = o
+            break
+    if dus is not None:
+        ops_n = _operand_names(dus)
+        upd = _shape_elems_bytes(callee.shapes.get(ops_n[1], ""))[1] \
+            if len(ops_n) > 1 else 0
+        # the aliased buffer operand was charged at full size above; undo
+        # the largest matching-size operand once
+        for nm in operand_names:
+            if nm in comp.shapes and \
+                    _dims_of(comp.shapes[nm]) == out_dims:
+                total -= _shape_elems_bytes(comp.shapes[nm])[1]
+                break
+        return max(total, 0.0) + 2.0 * (upd or out_bytes)
+    return total + out_bytes
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float
+    bytes_accessed: float
+    coll_bytes_by_kind: Dict[str, float]
+    coll_ops: int
+    unknown_trip_whiles: int
+
+    @property
+    def coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes_by_kind.values()))
+
+
+def analyze_hlo(hlo: str) -> HLOCost:
+    comps, entry = parse_module(hlo)
+    mult = multipliers(comps, entry)
+    # computations fused into a kernel: their internal ops move no HBM bytes
+    fused: set = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                fused.update(nm for role, nm in _called_comps(op)
+                             if role in ("calls", "to_apply"))
+    flops = 0.0
+    byts = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_ops = 0
+    unknown_whiles = 0
+    for name, comp in comps.items():
+        m = mult.get(name, 1.0)
+        in_fusion = name in fused
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while" and _trip_count(op) is None:
+                unknown_whiles += 1
+            out_elems, out_bytes = _shape_elems_bytes(op.shape)
+            # ---- flops ----
+            if oc in ("dot", "dot-general"):
+                flops += m * _dot_flops(op, comp)
+            elif oc in _ELEMENTWISE:
+                flops += m * out_elems
+            elif oc in _REDUCE_LIKE:
+                in_elems = 0
+                for nm in _operand_names(op):
+                    sh = comp.shapes.get(nm)
+                    if sh:
+                        in_elems += _shape_elems_bytes(sh)[0]
+                flops += m * max(in_elems // 2, out_elems)
+            # ---- collectives ----
+            base = oc.replace("-start", "")
+            if base in _COLLECTIVES:
+                b = out_bytes
+                if base == "all-reduce":
+                    b *= 2
+                coll[base] += m * b
+                coll_ops += 1
+            # ---- bytes (skip in-fusion ops: no HBM traffic) ----
+            if in_fusion:
+                continue
+            if oc in _SKIP_BYTES and oc != "fusion":
+                continue
+            if oc.endswith("-done"):
+                continue
+            byts += m * _op_bytes(op, comp, comps)
+    return HLOCost(flops=flops, bytes_accessed=byts, coll_bytes_by_kind=coll,
+                   coll_ops=coll_ops, unknown_trip_whiles=unknown_whiles)
+
+
+def cpu_upcast_artifact_bytes(hlo: str) -> float:
+    """XLA *CPU* float-normalization converts whole bf16 argument stacks
+    (weights, KV caches) to f32 because the CPU backend has no native bf16
+    dot — a lowering artifact absent on TPU (MXU consumes bf16 directly).
+    Returns the f32-copy bytes attributable to that, so memory reports can
+    show a TPU-meaningful 'adjusted' peak. Detection: f32 tensors whose
+    dims exactly match a bf16 entry parameter."""
+    comps, entry = parse_module(hlo)
+    if entry is None or entry not in comps:
+        return 0.0
+    ecomp = comps[entry]
+    bf16_param_dims: Dict[str, int] = {}
+    for op in ecomp.ops:
+        if op.opcode == "parameter":
+            m = _ARRAY_RE.search(op.shape)
+            if m and m.group(1) == "bf16" and m.group(2):
+                bf16_param_dims[m.group(2)] = bf16_param_dims.get(m.group(2), 0) + 1
+    # count f32 twins per dims signature, capped by the number of bf16 params
+    f32_counts: Dict[str, int] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode not in ("convert", "fusion"):
+                continue
+            m = _ARRAY_RE.search(op.shape)
+            if m and m.group(1) == "f32" and m.group(2) in bf16_param_dims:
+                f32_counts[m.group(2)] = f32_counts.get(m.group(2), 0) + 1
+    artifact = 0.0
+    for dims, cnt in f32_counts.items():
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        artifact += 4.0 * n * min(cnt, bf16_param_dims[dims])
+    return artifact
+
+
+# backwards-compatible helper used elsewhere
+def collective_bytes(hlo: str):
+    cost = analyze_hlo(hlo)
+
+    @dataclasses.dataclass
+    class CollectiveStats:
+        bytes_by_kind: Dict[str, float]
+        op_count: int
+
+        @property
+        def total_bytes(self) -> float:
+            return float(sum(self.bytes_by_kind.values()))
+
+    return CollectiveStats(cost.coll_bytes_by_kind, cost.coll_ops)

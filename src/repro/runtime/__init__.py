@@ -1,0 +1,4 @@
+from repro.runtime.supervisor import Supervisor, FailureInjector
+from repro.runtime.straggler import StragglerWatchdog
+
+__all__ = ["Supervisor", "FailureInjector", "StragglerWatchdog"]

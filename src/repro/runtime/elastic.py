@@ -1,0 +1,46 @@
+"""Elastic scaling: resume a checkpoint on a different mesh / device count.
+
+Checkpoints are mesh-independent host arrays (checkpoint/manager.py), so
+elasticity reduces to (1) rebuilding the mesh for the surviving device set,
+(2) re-deriving shardings from the same logical rules, (3) device_put-ing the
+restored state against them. Batch-size invariance across DP width is kept
+by the step-keyed data pipeline (global batch fixed; per-device slice
+changes). Tested by resuming an 8-device run on 4 devices (subprocess)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding.spec import make_rules
+from repro.train.steps import state_pspecs, to_named
+from repro.utils import get_logger
+
+log = get_logger("repro.elastic")
+
+
+def best_mesh_shape(n_devices: int, prefer_model: int) -> Tuple[int, int]:
+    """(data, model) with model | n_devices, model ≤ prefer_model, maximal."""
+    model = min(prefer_model, n_devices)
+    while n_devices % model != 0:
+        model -= 1
+    return n_devices // model, model
+
+
+def make_elastic_mesh(prefer_model: int = 16) -> Mesh:
+    n = len(jax.devices())
+    shape = best_mesh_shape(n, prefer_model)
+    return jax.make_mesh(shape, ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def reshard_state(model, plan, mesh: Mesh, state):
+    """Re-derive shardings under the (possibly new) mesh and place state."""
+    rules = make_rules(fsdp=plan.fsdp, tp=plan.tp, sp=plan.sp, ep=plan.ep,
+                       multi_pod="pod" in mesh.axis_names)
+    pspecs = state_pspecs(model, plan, rules)
+    shardings = to_named(pspecs, mesh)
+    placed = jax.tree_util.tree_map(jax.device_put, state, shardings)
+    log.info("resharded state onto mesh %s", dict(zip(mesh.axis_names, mesh.devices.shape)))
+    return placed, rules

@@ -1,0 +1,44 @@
+"""Straggler mitigation.
+
+On a real pod the first-order mitigations are (a) replacing the slow slice
+and (b) skipping the straggling data shard for a step; in a single-process
+SPMD run we implement the *detection and policy* layer: per-step wall-clock
+tracking with a rolling p50/p95, flagging of outlier steps, and a pluggable
+policy callback (the training CLI wires it to logging + optional data-shard
+skip). See DESIGN.md §4 for the at-scale design.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Callable, Optional
+
+from repro.utils import get_logger
+
+log = get_logger("repro.straggler")
+
+
+class StragglerWatchdog:
+    def __init__(self, *, window: int = 50, p95_factor: float = 2.0,
+                 on_straggle: Optional[Callable[[int, float, float], None]] = None):
+        self.times = collections.deque(maxlen=window)
+        self.p95_factor = p95_factor
+        self.on_straggle = on_straggle
+        self._t0 = None
+        self.flagged = []
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> float:
+        dt = time.perf_counter() - self._t0
+        if len(self.times) >= 10:
+            srt = sorted(self.times)
+            p50 = srt[len(srt) // 2]
+            if dt > self.p95_factor * p50:
+                self.flagged.append((step, dt, p50))
+                log.warning("straggler step=%d dt=%.3fs p50=%.3fs", step, dt, p50)
+                if self.on_straggle:
+                    self.on_straggle(step, dt, p50)
+        self.times.append(dt)
+        return dt

@@ -1,0 +1,83 @@
+"""Fault-tolerant step-loop supervisor: run → crash → restore → resume.
+
+The Supervisor owns the (checkpoint manager, loader, step function) triple
+and drives training with automatic restart from the last published
+checkpoint on any exception, up to ``max_failures``. A FailureInjector makes
+the path testable deterministically (tests kill the loop mid-run and assert
+bit-identical convergence vs an uninterrupted run, thanks to the
+step-keyed deterministic data pipeline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.straggler import StragglerWatchdog
+from repro.utils import get_logger
+
+log = get_logger("repro.supervisor")
+
+
+class FailureInjector:
+    """Raises RuntimeError at the configured global steps (once each)."""
+
+    def __init__(self, fail_at_steps=()):
+        self.fail_at = set(fail_at_steps)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class Supervisor:
+    ckpt: CheckpointManager
+    train_step: Callable            # (state, batch) -> (state, metrics)
+    loader: Callable                # step -> batch
+    init_state: Callable            # () -> fresh state
+    state_shardings: Optional[object] = None
+    ckpt_every: int = 50
+    max_failures: int = 8
+    injector: Optional[FailureInjector] = None
+
+    def run(self, total_steps: int, *, on_metrics=None):
+        failures = 0
+        watchdog = StragglerWatchdog()
+        while True:
+            try:
+                state, meta = (None, None)
+                like = jax.eval_shape(self.init_state)
+                state, meta = self.ckpt.restore_latest(
+                    like, shardings=self.state_shardings)
+                if state is None:
+                    state = self.init_state()
+                    start = 0
+                    log.info("fresh start")
+                else:
+                    start = int(meta["step"]) + 1
+                    log.info("resumed from step %d", start - 1)
+                for step in range(start, total_steps):
+                    if self.injector:
+                        self.injector.maybe_fail(step)
+                    watchdog.start()
+                    batch = self.loader(step)
+                    state, metrics = self.train_step(state, batch)
+                    if on_metrics is not None:
+                        on_metrics(step, metrics)
+                    watchdog.stop(step)
+                    if (step + 1) % self.ckpt_every == 0 or step == total_steps - 1:
+                        self.ckpt.save(step, state)
+                self.ckpt.wait()
+                return state
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:  # noqa: BLE001 — restartable failure domain
+                failures += 1
+                log.warning("step loop failed (%s); restart %d/%d",
+                            e, failures, self.max_failures)
+                if failures > self.max_failures:
+                    raise

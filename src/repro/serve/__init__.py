@@ -1,0 +1,4 @@
+from repro.serve.steps import make_decode_step, make_prefill_step, init_cache
+from repro.serve.engine import ServeEngine
+
+__all__ = ["make_decode_step", "make_prefill_step", "init_cache", "ServeEngine"]

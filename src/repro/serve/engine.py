@@ -1,0 +1,98 @@
+"""Batched serving engine: continuous batch of decode slots + the BMO-NN
+retrieval hook (kNN-LM-style interpolation, paper technique at serving time).
+
+This is deliberately a *small* engine (slot-based static batching, greedy
+sampling): the point is end-to-end runnability of (prefill → decode →
+retrieve → interpolate) on the same substrate the dry-run proves out at mesh
+scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import BMOConfig, ParallelPlan
+from repro.serve.steps import init_cache, make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class KNNLMConfig:
+    lam: float = 0.25          # interpolation weight toward the kNN dist
+    temperature: float = 1.0
+    bmo: BMOConfig = dataclasses.field(default_factory=lambda: BMOConfig(k=8))
+
+
+class ServeEngine:
+    def __init__(self, model, params, plan: ParallelPlan, mesh, *,
+                 batch_size: int, max_seq: int,
+                 knn_lm: Optional[KNNLMConfig] = None,
+                 datastore=None):
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self.prefill_step, self.rules = make_prefill_step(model, plan, mesh)
+        self.prefill_step = jax.jit(self.prefill_step, donate_argnums=2)
+        self.knn_lm = knn_lm
+        self.datastore = datastore      # (keys (N, d), next_token_ids (N,))
+        if knn_lm is not None:
+            # hidden-state decode (DenseLM exposes return_hidden)
+            def _decode(params, cache, tokens):
+                logits, new_cache, hidden = model.decode_step(
+                    params, cache, tokens, return_hidden=True)
+                return logits, new_cache, hidden[:, -1].astype(jnp.float32)
+
+            self.decode_step = jax.jit(_decode, donate_argnums=1)
+        else:
+            def _decode(params, cache, tokens):
+                logits, new_cache = model.decode_step(params, cache, tokens)
+                return logits, new_cache, None
+
+            self.decode_step = jax.jit(_decode, donate_argnums=1)
+        self.cache = init_cache(model, batch_size, max_seq)
+
+    # -- kNN-LM hook (the paper's technique in the serving path) ------------
+    def _knn_logits(self, hidden, rng):
+        from repro.core import bmo_nn
+        keys, next_ids = self.datastore
+        res = bmo_nn.knn(keys, hidden, self.knn_lm.bmo, rng)
+        V = self.model.cfg.vocab_size
+        # distance-weighted vote over retrieved next-tokens
+        w = jax.nn.softmax(-jnp.asarray(res.values) / self.knn_lm.temperature, axis=-1)
+        toks = next_ids[res.indices]                      # (B, k)
+        knn_probs = jnp.zeros((hidden.shape[0], V), jnp.float32)
+        knn_probs = knn_probs.at[jnp.arange(hidden.shape[0])[:, None], toks].add(w)
+        return jnp.log(knn_probs + 1e-9), res.coord_ops
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int, rng=None):
+        """prompts (B, S0) int32 -> (B, max_new_tokens) int32 greedy tokens.
+        With knn_lm enabled, decode logits are interpolated with the BMO-NN
+        retrieval distribution."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        B = prompts.shape[0]
+        assert B == self.batch_size
+        logits, cache = self.prefill_step(self.params, {"tokens": jnp.asarray(prompts)},
+                                          self.cache)
+        tok = jnp.argmax(logits[:, -1].astype(jnp.float32), -1).astype(jnp.int32)[:, None]
+        out = [tok]
+        retrieval_ops = 0.0
+        for _ in range(max_new_tokens - 1):
+            logits, cache, hidden = self.decode_step(self.params, cache, tok)
+            mix = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32))
+            if self.knn_lm is not None and self.datastore is not None:
+                rng, sub = jax.random.split(rng)
+                knn_logits, ops = self._knn_logits(hidden, sub)
+                retrieval_ops += float(jnp.sum(ops))
+                lam = self.knn_lm.lam
+                mix = jnp.logaddexp(
+                    jnp.log1p(-lam) + mix,
+                    jnp.log(lam) + jax.nn.log_softmax(knn_logits))
+            tok = jnp.argmax(mix, -1).astype(jnp.int32)[:, None]
+            out.append(tok)
+        self.cache = cache
+        return np.asarray(jnp.concatenate(out, axis=1)), retrieval_ops

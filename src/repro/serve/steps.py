@@ -1,0 +1,75 @@
+"""Serving steps: prefill + single-token decode with KV/SSM caches, wired
+for the production mesh (cache sharded batch×heads)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelPlan
+from repro.sharding.context import activation_sharding
+from repro.sharding.spec import Rules, init_params, make_rules, param_pspecs
+
+
+def init_cache(model, batch_size: int, max_seq: int, rng=None,
+               dtype=jnp.bfloat16):
+    specs = model.cache_specs(batch_size, max_seq, dtype)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    return init_params(specs, rng)
+
+
+def cache_pspecs(model, batch_size: int, max_seq: int, rules: Rules,
+                 dtype=jnp.bfloat16):
+    specs = model.cache_specs(batch_size, max_seq, dtype)
+    return param_pspecs(specs, rules)
+
+
+def make_prefill_step(model, plan: ParallelPlan, mesh: Mesh, *,
+                      rules: Optional[Rules] = None, multi_pod: bool = False):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules = rules or make_rules(fsdp=plan.fsdp, tp=plan.tp, sp=plan.sp,
+                                ep=plan.ep, multi_pod=multi_pod,
+                                axis_sizes=axis_sizes,
+                                kv_len_shard=plan.kv_len_shard)
+    compute_dtype = jnp.bfloat16
+    dp_spec = rules.mesh_axes("batch")
+
+    def prefill_step(params, batch, cache):
+        kw = {}
+        if model.cfg.family == "moe":
+            kw = dict(mesh=mesh, ep=plan.ep, dp_spec=dp_spec)
+        with activation_sharding(rules, mesh):
+            logits, new_cache = model.prefill(params, batch, cache,
+                                              compute_dtype=compute_dtype, **kw)
+        return logits[:, -1:], new_cache
+
+    return prefill_step, rules
+
+
+def make_decode_step(model, plan: ParallelPlan, mesh: Mesh, *,
+                     rules: Optional[Rules] = None, multi_pod: bool = False,
+                     sample: str = "greedy"):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules = rules or make_rules(fsdp=plan.fsdp, tp=plan.tp, sp=plan.sp,
+                                ep=plan.ep, multi_pod=multi_pod,
+                                axis_sizes=axis_sizes,
+                                kv_len_shard=plan.kv_len_shard)
+    compute_dtype = jnp.bfloat16
+    dp_spec = rules.mesh_axes("batch")
+
+    def decode_step(params, cache, tokens):
+        kw = {}
+        if model.cfg.family == "moe":
+            kw = dict(mesh=mesh, ep=plan.ep, dp_spec=dp_spec)
+        with activation_sharding(rules, mesh):
+            logits, new_cache = model.decode_step(params, cache, tokens,
+                                                  compute_dtype=compute_dtype, **kw)
+        if sample == "greedy":
+            next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        else:
+            next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], logits, new_cache
+
+    return decode_step, rules

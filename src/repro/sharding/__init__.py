@@ -1,0 +1,19 @@
+from repro.sharding.spec import (
+    ParamSpec,
+    Rules,
+    abstract_params,
+    init_params,
+    logical_to_pspec,
+    param_shardings,
+    spec_tree_axes,
+)
+
+__all__ = [
+    "ParamSpec",
+    "Rules",
+    "abstract_params",
+    "init_params",
+    "logical_to_pspec",
+    "param_shardings",
+    "spec_tree_axes",
+]

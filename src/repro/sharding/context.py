@@ -1,0 +1,37 @@
+"""Ambient activation-sharding context.
+
+Model code is written against *logical* activation axes; the training/serving
+step builders install (rules, mesh) here, and models call ``shard_act`` at
+layer boundaries (embed output) to pin the residual-stream layout (batch over
+DP, seq over model when sequence parallelism is on). Outside any context the
+call is a no-op, so smoke tests and single-device runs are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(rules, mesh):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (rules, mesh)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def shard_act(x, axes=("batch", "seq", "act_embed")):
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    axes = tuple(axes[: x.ndim]) + (None,) * max(0, x.ndim - len(axes))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, rules.pspec(axes, x.shape)))

@@ -1,0 +1,226 @@
+"""Logical-axis parameter specification & sharding-rule system.
+
+Models declare their parameters once, as a pytree of :class:`ParamSpec`
+(shape + dtype + *logical* axis names + initializer).  Everything else is
+derived mechanically from that single declaration:
+
+  * ``init_params``      — materialize real arrays (per-path PRNG folding),
+  * ``abstract_params``  — ``ShapeDtypeStruct`` stand-ins (dry-run: no alloc),
+  * ``param_shardings``  — ``NamedSharding`` per leaf via :class:`Rules`.
+
+A :class:`Rules` object maps logical axis names (``"embed"``, ``"mlp"``,
+``"vocab"``, ``"experts"``, ``"batch"`` …) to mesh axis names (or tuples of
+them, or ``None`` for replication).  Parallelism plans (DP / FSDP / TP / SP /
+EP) are just different rule tables over the same logical names, so changing
+the plan never touches model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of a single parameter tensor."""
+
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "normal"  # normal | zeros | ones | fanin | embed | scalar
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank"
+            )
+
+    @property
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "scalar":
+        return jnp.full(spec.shape, spec.scale if spec.scale is not None else 0.0, spec.dtype)
+    if spec.init == "fanin":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = (spec.scale if spec.scale is not None else 1.0) / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+    # "normal" / "embed": N(0, scale), default scale .02 (GPT-style)
+    std = spec.scale if spec.scale is not None else 0.02
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def _path_key(base: jax.Array, path_str: str) -> jax.Array:
+    h = int.from_bytes(hashlib.md5(path_str.encode()).digest()[:4], "little")
+    return jax.random.fold_in(base, h)
+
+
+def init_params(spec_tree, rng: jax.Array):
+    """Materialize a ParamSpec tree into real arrays (path-deterministic)."""
+
+    def _fmt(path) -> str:
+        return "/".join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p)))) for p in path)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s: _init_leaf(s, _path_key(rng, _fmt(p))), spec_tree,
+        is_leaf=_is_spec,
+    )
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree — for .lower() without allocating anything."""
+    return jax.tree_util.tree_map(lambda s: s.sds, spec_tree, is_leaf=_is_spec)
+
+
+def spec_tree_axes(spec_tree):
+    """Tree of logical-axes tuples (mirrors the param tree)."""
+    return jax.tree_util.tree_map(lambda s: s.axes, spec_tree, is_leaf=_is_spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Logical-axis name → mesh axes mapping.
+
+    With ``axis_sizes`` (mesh axis name → size) set, ``pspec`` drops any
+    mapping whose mesh extent does not divide the tensor dim — the uniform
+    fallback for e.g. 40 heads on a 16-wide model axis, MQA kv=1, or
+    global_batch=1 long-context decode (the dim stays replicated)."""
+
+    table: Mapping[str, MeshAxes]
+    axis_sizes: Optional[Mapping[str, int]] = None
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.table.get(logical, None)
+
+    def _extent(self, ms: Tuple[str, ...]) -> int:
+        if not self.axis_sizes:
+            return 1
+        e = 1
+        for a in ms:
+            e *= int(self.axis_sizes.get(a, 1))
+        return e
+
+    def pspec(self, axes: Sequence[Optional[str]],
+              shape: Optional[Sequence[int]] = None) -> P:
+        used: set = set()
+        out = []
+        for i, ax in enumerate(axes):
+            m = self.mesh_axes(ax)
+            if m is None:
+                out.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else tuple(m)
+            ms = tuple(a for a in ms if a not in used)
+            if shape is not None and self.axis_sizes and ms:
+                # greedily drop trailing axes until the extent divides
+                while ms and shape[i] % self._extent(ms) != 0:
+                    ms = ms[:-1]
+            used.update(ms)
+            if not ms:
+                out.append(None)
+            elif len(ms) == 1:
+                out.append(ms[0])
+            else:
+                out.append(ms)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+
+def logical_to_pspec(axes_tree, rules: Rules):
+    """Tree of logical-axes tuples → tree of PartitionSpec."""
+    return jax.tree_util.tree_map(
+        lambda axes: rules.pspec(axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x),
+    )
+
+
+def param_shardings(spec_tree, rules: Rules, mesh: Mesh):
+    """Tree of NamedSharding for a ParamSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, rules.pspec(s.axes, s.shape)),
+        spec_tree, is_leaf=_is_spec
+    )
+
+
+def param_pspecs(spec_tree, rules: Rules):
+    """Tree of PartitionSpec for a ParamSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda s: rules.pspec(s.axes, s.shape), spec_tree, is_leaf=_is_spec
+    )
+
+
+# ---------------------------------------------------------------------------
+# Canonical rule tables.  Mesh axes: ("pod",) "data", "model".
+# Logical activation axes: batch, seq (sequence-parallel residual), act_embed.
+# Logical parameter axes:  layers, embed, mlp, vocab, heads, kv_heads, head_dim,
+#                          experts, ssm_state, conv, qk_rank, kv_rank, stage.
+# ---------------------------------------------------------------------------
+
+
+def make_rules(
+    *,
+    fsdp: bool = False,
+    tp: bool = True,
+    sp: bool = False,
+    ep: bool = False,
+    multi_pod: bool = False,
+    axis_sizes: Optional[Mapping[str, int]] = None,
+    kv_len_shard: bool = False,
+) -> Rules:
+    """Build a rule table for a parallelism plan.
+
+    DP/FSDP use ("pod","data") when a pod axis exists (data-parallel spans
+    pods); TP/SP/EP stay within a pod (ICI-local) on the "model" axis.
+    ``head_dim`` also maps to the TP axis: per-tensor axis dedup + the
+    divisibility fallback make it the natural backup when heads/kv_heads
+    don't divide the mesh (GQA kv=8 on model=16, MQA kv=1, 40-head qwen).
+    """
+    dp: MeshAxes = ("pod", "data") if multi_pod else "data"
+    t: MeshAxes = "model" if tp else None
+    table = {
+        # activations
+        "batch": dp,
+        "seq": "model" if sp else None,
+        "act_embed": None,
+        "kv_len": "model" if kv_len_shard else None,
+        # params
+        "layers": None,
+        "embed": dp if fsdp else None,          # FSDP shards the contraction dim
+        "mlp": t,
+        "vocab": t,
+        "heads": t,
+        "kv_heads": t,
+        "head_dim": t,
+        "qk_rank": t,
+        "kv_rank": None,
+        "experts": "model" if ep else None,
+        "expert_mlp": None if ep else t,
+        "ssm_state": None,
+        "ssm_heads": t,
+        "conv": None,
+        "frame": None,
+    }
+    return Rules(table=table, axis_sizes=axis_sizes)

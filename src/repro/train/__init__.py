@@ -1,0 +1,7 @@
+from repro.train.steps import (
+    abstract_train_state, init_train_state, make_train_step, state_pspecs,
+)
+from repro.train.loss import lm_loss
+
+__all__ = ["abstract_train_state", "init_train_state", "make_train_step",
+           "state_pspecs", "lm_loss"]

@@ -1,0 +1,57 @@
+"""Losses. Cross entropy is computed in fp32 with a stable logsumexp; works
+with a vocab-sharded logits tensor under pjit (XLA inserts the reductions)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_index: int = -100):
+    """logits (B, S, V) any float dtype; labels (B, S) int32.
+    Returns (mean loss fp32, n_valid).
+
+    The label-pick uses a one-hot contraction rather than take_along_axis:
+    with a vocab-sharded logits tensor (TP), the one-hot product stays
+    elementwise-sharded and reduces with a psum, whereas a gather would
+    force an all-gather of the full logits."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    V = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, V, dtype=jnp.float32)
+    ll = jnp.sum(lf * onehot, axis=-1)
+    nll = lse - ll
+    mask = (labels != ignore_index).astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / n, n
+
+
+def lm_loss(model, params, batch, *, remat="full", compute_dtype=jnp.bfloat16,
+            mesh=None, ep=False, dp_spec=None, aux_weight=0.01, mtp_weight=0.3):
+    """Unified next-token loss across model families. Returns (loss, metrics).
+
+    ``labels`` in the batch are already aligned (labels[t] = target for
+    logits[t]); the data pipeline produces them by shifting."""
+    family = model.cfg.family
+    from jax.sharding import PartitionSpec as P
+    kw = {}
+    if family == "moe":
+        kw = dict(mesh=mesh, ep=ep, dp_spec=dp_spec if dp_spec is not None else P())
+    out = model.apply(params, batch, remat=remat, compute_dtype=compute_dtype, **kw)
+    logits, extra = out
+    labels = batch["labels"]
+    loss, n = cross_entropy(logits, labels)
+    metrics = {"ce": loss, "tokens": n}
+    if family == "moe":
+        aux = extra["aux_loss"] / max(model.cfg.n_layers - model.cfg.first_dense_layers, 1)
+        loss = loss + aux_weight * aux
+        metrics["aux"] = aux
+        if extra.get("mtp_logits") is not None:
+            # MTP predicts token t+2 at position t: shift labels by one more
+            mtp_labels = jnp.concatenate(
+                [labels[:, 1:], jnp.full_like(labels[:, :1], -100)], axis=1)
+            mtp_ce, _ = cross_entropy(extra["mtp_logits"], mtp_labels)
+            loss = loss + mtp_weight * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics

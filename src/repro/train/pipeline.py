@@ -1,0 +1,78 @@
+"""GPipe-style pipeline parallelism over a mesh "stage" axis.
+
+Layers are split into n_stages contiguous groups; microbatches stream
+through the pipeline with `ppermute` handoffs inside `shard_map`. The
+schedule runs T = n_micro + n_stages − 1 ticks; each tick every stage
+applies its layer group to its current activation and passes the result to
+its successor. Autodiff flows through the ppermutes, so the same function
+trains (bubble fraction = (S−1)/T, the GPipe tradeoff).
+
+Intended mesh at >512-chip scale: (pod, stage, data, model) — see DESIGN.md.
+Tested on host meshes in tests/test_pipeline.py.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x_micro, mesh: Mesh,
+                   axis: str = "stage"):
+    """stage_fn(params_for_stage, x) -> x;
+    stage_params: pytree with leading dim = n_stages (sharded over `axis`);
+    x_micro: (n_micro, mb, ...) microbatched input (replicated).
+    Returns (n_micro, mb, ...) outputs after all stages."""
+    n_stages = mesh.shape[axis]
+
+    def body(params_local, x_all):
+        # params_local: (1, ...) — this stage's slice; x_all replicated
+        params_me = jax.tree_util.tree_map(lambda t: t[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        n_micro = x_all.shape[0]
+        T = n_micro + n_stages - 1
+        mb_shape = x_all.shape[1:]
+
+        carry_in = jnp.zeros(mb_shape, x_all.dtype)   # current input register
+        outputs = jnp.zeros_like(x_all)
+
+        def tick(t, state):
+            carry_in, outputs = state
+            # stage 0 feeds microbatch t (if still in range)
+            feed = jnp.where(t < n_micro, t, 0)
+            x0 = x_all[feed]
+            x_in = jnp.where(stage == 0, x0, carry_in)
+            y = stage_fn(params_me, x_in)
+            # pass y to the next stage (ring; last stage's send is ignored)
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            nxt = jax.lax.ppermute(y, axis, perm)
+            # last stage emits microbatch (t - (n_stages - 1))
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            emit = (stage == n_stages - 1) & (t >= n_stages - 1)
+            outputs = jax.lax.dynamic_update_slice(
+                outputs,
+                jnp.where(emit, y, outputs[out_idx])[None],
+                (out_idx,) + (0,) * len(mb_shape))
+            return nxt, outputs
+
+        _, outputs = jax.lax.fori_loop(0, T, tick, (carry_in, outputs))
+        # only the last stage's buffer is meaningful — zero the rest and
+        # psum so the output is replicated across the stage axis
+        outputs = jnp.where(stage == n_stages - 1, outputs, 0.0)
+        return jax.lax.psum(outputs, axis)
+
+    in_specs = (jax.tree_util.tree_map(lambda _: P(axis), stage_params), P())
+    return jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=P(),
+                         check_vma=False)(stage_params, x_micro)
+
+
+def split_stages(stacked_params, n_stages: int):
+    """(L, ...) stacked layer params -> (n_stages, L/n_stages, ...)."""
+    def r(t):
+        L = t.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return t.reshape((n_stages, L // n_stages) + t.shape[1:])
+
+    return jax.tree_util.tree_map(r, stacked_params)

@@ -1,0 +1,172 @@
+"""Train-step construction: grad accumulation, clipping, optimizer, optional
+int8 gradient compression, and the sharding wiring for the production mesh."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelPlan, TrainConfig
+from repro.optim import make_optimizer, warmup_cosine
+from repro.optim.compress import clip_by_global_norm
+from repro.sharding.context import activation_sharding
+from repro.sharding.spec import Rules, init_params, make_rules, param_pspecs
+from repro.train.loss import lm_loss
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+
+def init_train_state(model, plan: ParallelPlan, tcfg: TrainConfig, rng):
+    """Host-side init (small models / tests). For the dry-run use
+    abstract_train_state."""
+    specs = model.param_specs(dtype=_dtype(plan.param_dtype))
+    params = init_params(specs, rng)
+    opt = make_optimizer(plan.optimizer, tcfg).init(params)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model, plan: ParallelPlan, tcfg: TrainConfig):
+    specs = model.param_specs(dtype=_dtype(plan.param_dtype))
+    params = jax.tree_util.tree_map(
+        lambda s: s.sds, specs, is_leaf=lambda x: hasattr(x, "sds"))
+    opt = jax.eval_shape(lambda p: make_optimizer(plan.optimizer, tcfg).init(p), params)
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+
+def state_pspecs(model, plan: ParallelPlan, rules: Rules):
+    """PartitionSpecs for the full train state (params + optimizer mirrors)."""
+    specs = model.param_specs(dtype=_dtype(plan.param_dtype))
+    p_specs = param_pspecs(specs, rules)
+
+    if plan.optimizer in ("adamw",):
+        opt = {"m": p_specs, "v": p_specs}
+    elif plan.optimizer == "sgd":
+        opt = {}
+    else:  # adafactor: r drops last dim, c drops second-to-last
+        def r_spec(spec_leaf, pspec):
+            dims = list(pspec) + [None] * (len(spec_leaf.shape) - len(pspec))
+            if len(spec_leaf.shape) >= 2:
+                return P(*dims[:-1])
+            return P(*dims)
+
+        def c_spec(spec_leaf, pspec):
+            dims = list(pspec) + [None] * (len(spec_leaf.shape) - len(pspec))
+            if len(spec_leaf.shape) >= 2:
+                return P(*(dims[:-2] + dims[-1:]))
+            return P(*dims)
+
+        opt = jax.tree_util.tree_map(
+            lambda s, ps: ({"r": r_spec(s, ps), "c": c_spec(s, ps)}
+                           if len(s.shape) >= 2 else {"v": ps}),
+            specs, p_specs, is_leaf=lambda x: hasattr(x, "sds"))
+    return {"params": p_specs, "opt": opt, "step": P()}
+
+
+def batch_pspecs(input_specs: Dict[str, Any], rules: Rules):
+    """Batch-axis sharding for every model input (positions3 has batch at
+    dim 1; everything else at dim 0). Divisibility-checked per shape."""
+    out = {}
+    for k, v in input_specs.items():
+        axes = (None, "batch") if k == "positions3" else ("batch",)
+        axes = axes + (None,) * (len(v.shape) - len(axes))
+        out[k] = rules.pspec(axes, v.shape)
+    return out
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda ps: NamedSharding(mesh, ps), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# the step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model, plan: ParallelPlan, tcfg: TrainConfig, mesh: Mesh,
+                    *, rules: Optional[Rules] = None, multi_pod: bool = False,
+                    grad_accum: Optional[int] = None):
+    """Returns (train_step, state_shardings_fn). train_step(state, batch) is
+    pjit-ready; wrap with jax.jit(in_shardings=..., donate_argnums=0)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules = rules or make_rules(fsdp=plan.fsdp, tp=plan.tp, sp=plan.sp,
+                                ep=plan.ep, multi_pod=multi_pod,
+                                axis_sizes=axis_sizes,
+                                kv_len_shard=plan.kv_len_shard)
+    optimizer = make_optimizer(plan.optimizer, tcfg)
+    schedule = warmup_cosine(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+    ga = grad_accum if grad_accum is not None else plan.grad_accum
+    compute_dtype = _dtype(plan.compute_dtype)
+    dp_spec = rules.mesh_axes("batch")
+
+    def loss_fn(params, mb):
+        return lm_loss(model, params, mb, remat=plan.remat,
+                       compute_dtype=compute_dtype, mesh=mesh, ep=plan.ep,
+                       dp_spec=dp_spec)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if ga <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+
+        def split(x):
+            return x.reshape((ga, x.shape[0] // ga) + x.shape[1:])
+
+        def split3(x):  # positions3: (3, B, S)
+            return x.reshape((x.shape[0], ga, x.shape[1] // ga) + x.shape[2:]).swapaxes(0, 1)
+
+        mbs = {k: (split3(v) if k == "positions3" else split(v))
+               for k, v in batch.items()}
+
+        # fp32 accumulation for fp32-param plans; bf16-param (adafactor)
+        # plans accumulate in bf16 — halves the largest training buffer at
+        # 100B+ scale, and adafactor's rms-normalized update absorbs the
+        # accumulation noise (see DESIGN.md §4)
+        acc_dtype = jnp.float32 if plan.param_dtype == "float32" else jnp.bfloat16
+
+        def body(acc, mb):
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(acc_dtype) / ga, acc, grads)
+            return acc, metrics
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        grads, metrics_stack = jax.lax.scan(body, zero, mbs)
+        metrics = jax.tree_util.tree_map(jnp.mean, metrics_stack)
+        return grads, metrics
+
+    def train_step(state, batch):
+        with activation_sharding(rules, mesh):
+            grads, metrics = compute_grads(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = schedule(state["step"])
+        params, opt = optimizer.update(grads, state["opt"], state["params"],
+                                       state["step"], lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return {"params": params, "opt": opt, "step": state["step"] + 1}, metrics
+
+    return train_step, rules

@@ -1,0 +1,47 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of elements (parameters) in a pytree of arrays."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) for l in leaves if hasattr(l, "shape")))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays/ShapeDtypeStructs."""
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree):
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_map_with_path_str(fn, tree):
+    """tree_map where fn receives ('a/b/c', leaf)."""
+
+    def _fmt(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, l: fn(_fmt(p), l), tree)
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(la, lb))

@@ -1,0 +1,17 @@
+import os
+import sys
+
+# tests run against the source tree (PYTHONPATH=src also works)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see the real single device; multi-device tests spawn
+# subprocesses with their own XLA_FLAGS.
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

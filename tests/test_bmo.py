@@ -1,0 +1,185 @@
+"""BMO-UCB + BMO-NN system tests: exactness vs the oracle, estimator
+unbiasedness (exact enumeration), sparse box law, PAC guarantee, counting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import BMOConfig
+from repro.core import bmo_nn, oracle
+from repro.core.datasets import DenseDataset, SparseDataset
+from repro.data.synthetic import make_knn_benchmark_data
+
+
+def _accuracy(res_idx, ex_idx):
+    return float(np.mean([set(np.asarray(res_idx[i])) == set(np.asarray(ex_idx[i]))
+                          for i in range(len(ex_idx))]))
+
+
+# ---------------------------------------------------------------------------
+# estimator unbiasedness — exact expectation over all blocks / outcomes
+# ---------------------------------------------------------------------------
+
+def test_dense_block_estimator_unbiased_exact(rng):
+    """E[block pull] over the uniform block distribution == θ exactly."""
+    n, d, block = 5, 512, 64
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(d,)).astype(np.float32)
+    ds = DenseDataset.build(X, block)
+    qp = np.asarray(ds.pad_query(jnp.asarray(q)))
+    from repro.kernels import ref
+    nb = ds.n_blocks
+    blk = jnp.broadcast_to(jnp.arange(nb)[None], (n, nb)).astype(jnp.int32)
+    pulls = ref.block_pull_ref(ds.x, jnp.asarray(qp), jnp.arange(n), blk, block)
+    exp = np.asarray(pulls).mean(axis=1)          # uniform over blocks
+    theta = ((X - q) ** 2).sum(1) / d
+    np.testing.assert_allclose(exp, theta, rtol=1e-4)
+
+
+def test_sparse_estimator_unbiased_exact_enumeration(rng):
+    """Enumerate Eq. (12)'s sample space exactly: Σ p(outcome)·X == ‖·‖₁/d."""
+    d = 40
+    x0 = np.zeros(d, np.float32)
+    xi = np.zeros(d, np.float32)
+    x0[[2, 7, 11, 23]] = [1.0, -2.0, 0.5, 3.0]
+    xi[[7, 11, 30]] = [4.0, 0.5, -1.5]
+    ds = SparseDataset.build(xi[None])
+    from repro.core.bmo_nn import _sparse_lookup
+    q_nz = np.nonzero(x0)[0]
+    a_nz = np.nonzero(xi)[0]
+    n0, ni = len(q_nz), len(a_nz)
+    tot = n0 + ni
+    expectation = 0.0
+    for t in q_nz:  # sampled from query side w.p. n0/tot × 1/n0
+        in_other = t in a_nz
+        mult = tot / (2 * d) * (1 + (not in_other))
+        expectation += (1 / tot) * mult * abs(x0[t] - xi[t])
+    for t in a_nz:
+        in_other = t in q_nz
+        mult = tot / (2 * d) * (1 + (not in_other))
+        expectation += (1 / tot) * mult * abs(x0[t] - xi[t])
+    theta = np.abs(x0 - xi).sum() / d
+    assert expectation == pytest.approx(theta, rel=1e-6)
+
+
+def test_sparse_exact_theta_matches_dense(rng):
+    n, d = 12, 64
+    mask = rng.random((n, d)) < 0.2
+    X = np.where(mask, rng.exponential(1.0, (n, d)), 0).astype(np.float32)
+    q = np.where(rng.random(d) < 0.2, rng.exponential(1.0, d), 0).astype(np.float32)
+    ds = SparseDataset.build(X)
+    qs = SparseDataset.build(q[None])
+    got = np.asarray(bmo_nn.sparse_exact_theta(
+        ds, qs.indices[0], qs.values[0], jnp.arange(n)))
+    want = np.abs(X - q).sum(1) / d
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# exactness vs the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("eliminate", [True, False])
+def test_knn_exact_on_clustered_data(eliminate):
+    corpus, queries = make_knn_benchmark_data("dense", 400, 1024, 6, seed=1)
+    ex = oracle.exact_knn(corpus, queries, 3, "l2")
+    cfg = BMOConfig(k=3, delta=0.01, block=64, batch_arms=16,
+                    pulls_per_round=2, metric="l2")
+    res = bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(0),
+                     eliminate=eliminate)
+    assert _accuracy(res.indices, ex.indices) == 1.0
+    # and it must actually save coordinate computations on clustered data
+    assert float(np.sum(np.asarray(res.coord_ops))) < 6 * 400 * 1024
+
+
+def test_knn_rotated_exact():
+    corpus, queries = make_knn_benchmark_data("dense", 300, 512, 4, seed=2)
+    ex = oracle.exact_knn(corpus, queries, 3, "l2")
+    cfg = BMOConfig(k=3, delta=0.01, block=64, batch_arms=16, metric="l2",
+                    rotate=True)
+    res = bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(1))
+    assert _accuracy(res.indices, ex.indices) == 1.0
+
+
+def test_knn_l1_metric():
+    corpus, queries = make_knn_benchmark_data("dense", 200, 512, 4, seed=3)
+    ex = oracle.exact_knn(corpus, queries, 2, "l1")
+    cfg = BMOConfig(k=2, delta=0.01, block=64, batch_arms=16, metric="l1")
+    res = bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(2))
+    assert _accuracy(res.indices, ex.indices) == 1.0
+
+
+def test_knn_sparse_exact():
+    from repro.data.synthetic import clustered_sparse
+    corpus = clustered_sparse(200, 2048, seed=4)
+    ds = SparseDataset.build(corpus)
+    qi, qv, qn = ds.indices[:4], ds.values[:4], ds.nnz[:4]
+    ex = oracle.exact_knn_sparse(ds, qi, qv, qn, 3)
+    cfg = BMOConfig(k=3, delta=0.01, block=1, batch_arms=16,
+                    pulls_per_round=8, init_pulls=16, metric="l1", sparse=True)
+    res = bmo_nn.knn(ds, (qi, qv, qn), cfg, jax.random.PRNGKey(3))
+    assert _accuracy(res.indices, ex.indices) == 1.0
+
+
+def test_knn_graph_drops_self():
+    corpus, _ = make_knn_benchmark_data("dense", 64, 256, 1, seed=5)
+    cfg = BMOConfig(k=2, delta=0.05, block=32, batch_arms=16, metric="l2")
+    res = bmo_nn.knn_graph(corpus, cfg, jax.random.PRNGKey(4))
+    idx = np.asarray(res.indices)
+    assert idx.shape == (64, 2)
+    for i in range(64):
+        assert i not in idx[i]
+
+
+# ---------------------------------------------------------------------------
+# PAC variant (Theorem 2)
+# ---------------------------------------------------------------------------
+
+def test_pac_epsilon_guarantee(rng):
+    n, d, Q = 300, 2048, 6
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    qs = X[:Q] + 0.02 * rng.normal(size=(Q, d)).astype(np.float32)
+    eps = 0.5
+    ex = oracle.exact_knn(X, qs, 1, "l2")
+    cfg = BMOConfig(k=1, delta=0.01, block=128, batch_arms=16, metric="l2",
+                    epsilon=eps)
+    res = bmo_nn.knn(X, qs, cfg, jax.random.PRNGKey(5))
+    for i in range(Q):
+        got = int(res.indices[i, 0])
+        theta = float(((qs[i] - X[got]) ** 2).sum() / d)
+        assert theta <= float(ex.values[i, 0]) + eps + 1e-6
+    # PAC should use fewer ops than the exact-k run on this hard instance
+    cfg_exact = dataclasses.replace(cfg, epsilon=0.0)
+    res_exact = bmo_nn.knn(X, qs, cfg_exact, jax.random.PRNGKey(5))
+    assert float(np.sum(np.asarray(res.coord_ops))) <= \
+        float(np.sum(np.asarray(res_exact.coord_ops)))
+
+
+# ---------------------------------------------------------------------------
+# cost accounting invariants
+# ---------------------------------------------------------------------------
+
+def test_coord_ops_bounded_by_2nd_plus_init():
+    """Paper: 'even if the algorithm fails it will not take more than 2nd
+    coordinate-wise distance computations' (+ our batched-round slack)."""
+    corpus, queries = make_knn_benchmark_data("dense", 100, 512, 3, seed=6)
+    cfg = BMOConfig(k=3, delta=0.01, block=64, batch_arms=16,
+                    pulls_per_round=2, metric="l2")
+    res = bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(6))
+    n, d = corpus.shape
+    slack = cfg.batch_arms * cfg.pulls_per_round * cfg.block  # one round
+    assert np.all(np.asarray(res.coord_ops) <= 2 * n * d + slack + n * cfg.init_pulls * cfg.block)
+
+
+def test_race_returns_k_distinct_sorted():
+    corpus, queries = make_knn_benchmark_data("dense", 128, 256, 2, seed=7)
+    cfg = BMOConfig(k=5, delta=0.05, block=32, batch_arms=16, metric="l2")
+    res = bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(7))
+    for i in range(2):
+        idx = np.asarray(res.indices[i])
+        assert len(set(idx.tolist())) == 5
+        vals = np.asarray(res.values[i])
+        assert np.all(np.diff(vals) >= -1e-6)  # sorted ascending

@@ -1,0 +1,73 @@
+"""Checkpoint manager: roundtrip, atomicity, keep-last-N, async, meta."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore, save
+from repro.checkpoint.manager import read_meta
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 8)),
+                       "b": jnp.zeros((8,), jnp.bfloat16)},
+            "opt": {"m": {"w": jnp.ones((4, 8)), "b": jnp.zeros((8,))}},
+            "step": jnp.asarray(17, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    st = _state()
+    path = str(tmp_path / "ck")
+    save(path, st, meta={"step": 17})
+    like = jax.eval_shape(lambda: st)
+    back = restore(path, like)
+    for a, b in zip(jax.tree_util.tree_leaves(st), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert read_meta(path)["step"] == 17
+
+
+def test_restore_missing_key_raises(tmp_path):
+    st = _state()
+    path = str(tmp_path / "ck")
+    save(path, st)
+    like = jax.eval_shape(lambda: {**st, "extra": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        restore(path, like)
+
+
+def test_manager_keep_last_n(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    st = _state()
+    for step in (10, 20, 30, 40):
+        mgr.save(step, st)
+    assert mgr.all_steps() == [30, 40]
+    assert mgr.latest_step() == 40
+
+
+def test_manager_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    st = _state()
+    mgr.save(5, st)
+    mgr.wait()
+    like = jax.eval_shape(lambda: st)
+    back, meta = mgr.restore_latest(like)
+    assert meta["step"] == 5
+    np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+
+
+def test_manager_empty_dir(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    st, meta = mgr.restore_latest(jax.eval_shape(_state))
+    assert st is None and meta is None
+
+
+def test_atomic_no_tmp_left(tmp_path):
+    path = str(tmp_path / "ck")
+    save(path, _state())
+    assert not os.path.exists(path + ".tmp")
+    assert os.path.exists(os.path.join(path, "arrays.npz"))

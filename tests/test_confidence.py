@@ -1,0 +1,83 @@
+"""Unit + property tests for the CI machinery (paper §II-C, Lemma 1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import confidence as conf
+
+
+def test_delta_prime_union_bound():
+    assert conf.delta_prime(0.1, 100, 50) == pytest.approx(0.1 / 5000)
+
+
+def test_hoeffding_radius_shrinks_with_count():
+    r1 = conf.hoeffding_radius(jnp.asarray(1.0), jnp.asarray(4.0), 5.0)
+    r2 = conf.hoeffding_radius(jnp.asarray(1.0), jnp.asarray(16.0), 5.0)
+    assert float(r2) == pytest.approx(float(r1) / 2.0)
+
+
+def test_hoeffding_radius_formula():
+    # C = sqrt(2 σ² log(2/δ') / T) — Eq. (3)
+    sigma_sq, T, log_term = 2.5, 9.0, 3.0
+    want = np.sqrt(2 * sigma_sq * log_term / T)
+    got = conf.hoeffding_radius(jnp.asarray(sigma_sq), jnp.asarray(T), log_term)
+    assert float(got) == pytest.approx(want)
+
+
+def test_welford_batch_matches_numpy(rng):
+    vals = rng.normal(size=(3, 50)).astype(np.float32)
+    mean = jnp.zeros(3)
+    count = jnp.zeros(3)
+    m2 = jnp.zeros(3)
+    # feed in 10 batches of 5
+    for i in range(10):
+        batch = jnp.asarray(vals[:, i * 5:(i + 1) * 5])
+        mean, count, m2 = conf.welford_batch_update(mean, count, m2, batch,
+                                                    jnp.ones(3))
+    np.testing.assert_allclose(np.asarray(mean), vals.mean(1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(m2) / 49.0, vals.var(1, ddof=1),
+                               rtol=1e-4)
+
+
+def test_welford_mask_freezes_stats(rng):
+    vals = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    mean = jnp.asarray([1.0, 2.0])
+    count = jnp.asarray([3.0, 3.0])
+    m2 = jnp.asarray([0.5, 0.5])
+    nm, nc, n2 = conf.welford_batch_update(mean, count, m2, vals,
+                                           jnp.asarray([1.0, 0.0]))
+    assert float(nc[0]) == 7.0 and float(nc[1]) == 3.0
+    assert float(nm[1]) == 2.0 and float(n2[1]) == 0.5
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 8), st.floats(0.1, 10.0))
+def test_welford_property_merge_equals_direct(n_batches, bs, scale):
+    rng = np.random.default_rng(n_batches * 100 + bs)
+    vals = (rng.normal(size=(1, n_batches * bs)) * scale).astype(np.float32)
+    mean, count, m2 = jnp.zeros(1), jnp.zeros(1), jnp.zeros(1)
+    for i in range(n_batches):
+        mean, count, m2 = conf.welford_batch_update(
+            mean, count, m2, jnp.asarray(vals[:, i * bs:(i + 1) * bs]),
+            jnp.ones(1))
+    np.testing.assert_allclose(np.asarray(mean)[0], vals.mean(), rtol=1e-3,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m2)[0],
+                               vals.var() * vals.shape[1], rtol=1e-2,
+                               atol=1e-4)
+
+
+def test_empirical_sigma_shrinkage():
+    # few pulls → near global; many pulls → near own variance
+    m2 = jnp.asarray([0.0, 1000.0])
+    count = jnp.asarray([2.0, 1001.0])
+    out = conf.empirical_sigma_sq(m2, count, 1e-12, jnp.asarray(4.0))
+    assert float(out[0]) > 2.0          # pulled toward global 4.0
+    assert 0.9 < float(out[1]) < 1.1    # own variance ≈ 1.0
+
+
+def test_pooled_variance():
+    m2 = jnp.asarray([2.0, 4.0])
+    count = jnp.asarray([3.0, 3.0])
+    assert float(conf.pooled_variance(m2, count)) == pytest.approx(6.0 / 4.0)

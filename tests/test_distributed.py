@@ -1,0 +1,201 @@
+"""Multi-device tests (subprocess with xla_force_host_platform_device_count):
+distributed BMO-NN, sharded training parity, elastic restore, gradient
+compression, MoE expert parallelism."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(prog: str, devices: int = 8, timeout: int = 560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(prog)],
+                         capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=timeout)
+    assert out.returncode == 0 and "OK" in out.stdout, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+
+
+def test_distributed_knn_exact():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.configs.base import BMOConfig
+        from repro.core.distributed import distributed_knn
+        from repro.core import oracle
+        from repro.data.synthetic import make_knn_benchmark_data
+        X, qs = make_knn_benchmark_data("dense", 256, 1024, 4, seed=0)
+        ex = oracle.exact_knn(X, qs, 3, "l2")
+        cfg = BMOConfig(k=3, delta=0.01, block=64, batch_arms=16,
+                        pulls_per_round=2, init_pulls=4, metric="l2")
+        res = distributed_knn(jnp.asarray(X), jnp.asarray(qs), cfg, mesh,
+                              jax.random.PRNGKey(0), impl="ref")
+        acc = np.mean([set(np.asarray(res.indices[i])) ==
+                       set(np.asarray(ex.indices[i])) for i in range(4)])
+        assert acc == 1.0, acc
+        print("OK")
+    """)
+
+
+def test_sharded_train_matches_single_device():
+    _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import TrainConfig, get_arch
+        from repro.models import build_model
+        from repro.train.steps import (batch_pspecs, init_train_state,
+                                       make_train_step, state_pspecs, to_named)
+        entry = get_arch("qwen2.5-14b")
+        model = build_model(entry.smoke)
+        tcfg = TrainConfig(total_steps=4, lr=1e-3)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, 256, (8, 32)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, 256, (8, 32)), jnp.int32)}
+        outs = []
+        for shape in [(1, 1), (4, 2)]:
+            mesh = jax.make_mesh(shape, ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            plan = dataclasses.replace(entry.plan, fsdp=True, tp=True, sp=True,
+                                       grad_accum=2, param_dtype="float32")
+            state = init_train_state(model, plan, tcfg, jax.random.PRNGKey(0))
+            step, rules = make_train_step(model, plan, tcfg, mesh)
+            sh = to_named(state_pspecs(model, plan, rules), mesh)
+            state = jax.device_put(state, sh)
+            new_state, m = jax.jit(step)(state, batch)
+            outs.append((float(m["loss"]), new_state["params"]))
+        assert abs(outs[0][0] - outs[1][0]) < 1e-3, (outs[0][0], outs[1][0])
+        for a, b in zip(jax.tree_util.tree_leaves(outs[0][1]),
+                        jax.tree_util.tree_leaves(outs[1][1])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-2, atol=2e-4)
+        print("OK")
+    """)
+
+
+def test_moe_expert_parallel_matches_local():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_arch
+        from repro.models.moe import moe_specs, moe_apply
+        from repro.sharding.spec import init_params
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = get_arch("dbrx-132b").smoke
+        p = init_params(moe_specs(cfg, jnp.float32), jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model),
+                              jnp.float32)
+        out_local, aux_local = moe_apply(cfg, p, x, ep=False,
+                                         compute_dtype=jnp.float32)
+        out_ep, aux_ep = moe_apply(cfg, p, x, mesh=mesh, ep=True,
+                                   dp_spec="data", compute_dtype=jnp.float32)
+        # same routing; capacity differs (per-shard) → compare where both kept
+        diff = np.abs(np.asarray(out_local) - np.asarray(out_ep))
+        frac_close = float((diff < 1e-3).mean())
+        assert frac_close > 0.95, frac_close
+        print("OK")
+    """)
+
+
+def test_elastic_restore_8_to_4_devices(tmp_path):
+    prog_a = f"""
+        import dataclasses
+        import jax, numpy as np
+        from repro.checkpoint import CheckpointManager
+        from repro.configs import TrainConfig, get_arch
+        from repro.data.loader import ShardedLoader
+        from repro.models import build_model
+        from repro.runtime.elastic import make_elastic_mesh, reshard_state
+        from repro.train.steps import init_train_state, make_train_step
+        entry = get_arch("xlstm-350m")
+        model = build_model(entry.smoke)
+        plan = dataclasses.replace(entry.plan, grad_accum=1, param_dtype="float32")
+        tcfg = TrainConfig(total_steps=12, lr=1e-3)
+        mesh = make_elastic_mesh(prefer_model=2)
+        assert mesh.devices.size == {{DEV}}, mesh.devices.shape
+        state = init_train_state(model, plan, tcfg, jax.random.PRNGKey(0))
+        state, rules = reshard_state(model, plan, mesh, state)
+        step, _ = make_train_step(model, plan, tcfg, mesh, rules=rules)
+        jstep = jax.jit(step, donate_argnums=0)
+        loader = ShardedLoader(model.cfg.vocab_size, 8, 32, seed=3)
+        ck = CheckpointManager(r"{str(tmp_path)}", keep=2, async_save=False)
+        start = 0
+        st, meta = ck.restore_latest(jax.eval_shape(
+            lambda: init_train_state(model, plan, tcfg, jax.random.PRNGKey(0))))
+        if st is not None:
+            state, _ = reshard_state(model, plan, mesh, st)
+            start = int(meta["step"]) + 1
+        for s in range(start, {{STOP}}):
+            state, m = jstep(state, loader.get(s))
+        ck.save({{STOP}} - 1, state)
+        ck.wait()
+        print("OK", float(m["loss"]))
+    """
+    _run(prog_a.replace("{DEV}", "8").replace("{STOP}", "6"), devices=8)
+    _run(prog_a.replace("{DEV}", "4").replace("{STOP}", "12"), devices=4)
+
+
+def test_compressed_psum_convergence():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.optim.compress import compressed_psum, init_error
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        g_global = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
+
+        def fn(g, e):
+            mean, new_e = compressed_psum({"g": g[0]}, "data", {"g": e[0]})
+            return mean["g"], new_e["g"][None]
+
+        e0 = jnp.zeros((8, 256))
+        f = jax.shard_map(fn, mesh=mesh,
+                          in_specs=(P("data"), P("data")),
+                          out_specs=(P(), P("data")), check_vma=False)
+        got, e1 = f(g_global[:, None, :].reshape(8, 1, 256), e0[:, None, :].reshape(8,1,256))
+        want = g_global.mean(0)
+        err1 = float(jnp.abs(got - want).max())
+        # error feedback: average of dequantized + carried error == exact over time
+        got2, _ = f(g_global[:, None, :].reshape(8,1,256), e1.reshape(8,1,256))
+        assert err1 < 0.05, err1
+        print("OK", err1)
+    """)
+
+
+def test_dryrun_driver_smoke_small_mesh():
+    """Exercise the dry-run code path itself on an 8-device host mesh by
+    monkeypatching make_production_mesh (full 512-dev cells run in the
+    dedicated sweep, not in unit tests)."""
+    _run("""
+        import jax
+        import repro.launch.mesh as M
+        def small(multi_pod=False):
+            if multi_pod:
+                return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+            return jax.make_mesh((4, 2), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+        M.make_production_mesh = small
+        import repro.launch.dryrun as D
+        D.make_production_mesh = small
+        import dataclasses
+        import repro.configs.registry as R
+        entry = R.get_arch("qwen2.5-14b")
+        # shrink the arch so the 8-dev compile is fast
+        object.__setattr__ if False else None
+        import repro.configs.qwen2_5_14b as Q
+        Q.CONFIG = entry.smoke
+        rec = D.run_cell("qwen2.5-14b", "train_4k", "single",
+                         overrides={"plan.grad_accum": 2})
+        assert rec["status"] == "ok", rec
+        rec2 = D.run_cell("qwen2.5-14b", "decode_32k", "multi")
+        assert rec2["status"] == "ok", rec2
+        print("OK", rec["bottleneck"], rec2["bottleneck"])
+    """, devices=8, timeout=560)

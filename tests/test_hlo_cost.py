@@ -1,0 +1,125 @@
+"""HLO cost model (roofline): trip-count-scaled FLOPs/bytes/collectives."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo import analyze_hlo, parse_module, multipliers
+
+
+def _compile_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_flops_scaled():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=12)
+        return c
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    cost = analyze_hlo(_compile_text(f, x, w))
+    want = 12 * 2 * 64 * 128 * 128
+    assert abs(cost.flops - want) / want < 0.05
+
+
+def test_nested_scan_flops():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    cost = analyze_hlo(_compile_text(f, x, w))
+    want = 15 * 2 * 32 * 64 * 64
+    assert abs(cost.flops - want) / want < 0.05
+
+
+def test_no_loop_flops():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    cost = analyze_hlo(_compile_text(f, a, b))
+    want = 2 * 128 * 256 * 64
+    assert abs(cost.flops - want) / want < 0.05
+
+
+def test_bytes_reasonable_for_matmul():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    cost = analyze_hlo(_compile_text(f, a, b))
+    lo = 3 * 256 * 256 * 4            # read a, b, write out
+    assert lo <= cost.bytes_accessed <= 4 * lo
+
+
+def test_entry_detection():
+    def f(x):
+        return jnp.sum(x * 2)
+
+    comps, entry = parse_module(_compile_text(f, jax.ShapeDtypeStruct((8,), jnp.float32)))
+    assert entry is not None and entry in comps
+    assert multipliers(comps, entry)[entry] == 1.0
+
+
+def test_collective_bytes_on_host_mesh():
+    """psum inside a scan on an 8-device host platform — collective bytes
+    must be scaled by the trip count (subprocess: own XLA device count)."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.roofline.hlo import analyze_hlo
+        mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+
+        def inner(x):
+            def body(c, _):
+                return jax.lax.psum(c, "d") * 0.5, None
+            c, _ = jax.lax.scan(body, x, None, length=10)
+            return c
+
+        f = jax.shard_map(inner, mesh=mesh, in_specs=P(), out_specs=P(),
+                          check_vma=False)
+        x = jax.ShapeDtypeStruct((1024,), jnp.float32)
+        cost = analyze_hlo(jax.jit(f).lower(x).compile().as_text())
+        # 10 × all-reduce of 1024 f32 × 2 (ring halves) = 81920 bytes min
+        assert cost.coll_bytes >= 10 * 1024 * 4, cost.coll_bytes
+        print("OK", cost.coll_bytes)
+    """)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, cwd=".", timeout=300)
+    assert "OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_cpu_upcast_artifact_detection():
+    from repro.roofline.hlo import cpu_upcast_artifact_bytes
+
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w.astype(jnp.float32)), None
+        c, _ = jax.lax.scan(body, x, None, length=4)
+        return c
+
+    w = jax.ShapeDtypeStruct((128, 128), jnp.bfloat16)
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+    txt = _compile_text(f, w, x)
+    art = cpu_upcast_artifact_bytes(txt)
+    assert art >= 128 * 128 * 4  # the hoisted f32 copy of w

@@ -1,0 +1,129 @@
+"""Per-kernel validation: Pallas (interpret mode = kernel body on CPU)
+against the pure-jnp ref.py oracles, swept over shapes and dtypes."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# FWHT
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [2, 8, 64, 256, 1024])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_matches_ref(rng, d, dtype):
+    x = jnp.asarray(rng.normal(size=(5, d)).astype(np.float32)).astype(dtype)
+    got = ops.fwht(x, impl="interpret")
+    want = ref.fwht_ref(x)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_fwht_matches_explicit_hadamard(rng):
+    d = 32
+    H = np.array([[1.0]])
+    while H.shape[0] < d:
+        H = np.block([[H, H], [H, -H]])
+    H = H / np.sqrt(d)
+    x = rng.normal(size=(7, d)).astype(np.float32)
+    got = np.asarray(ops.fwht(jnp.asarray(x), impl="interpret"))
+    np.testing.assert_allclose(got, x @ H.T, atol=1e-5)
+
+
+def test_fwht_preserves_l2_distances(rng):
+    x = jnp.asarray(rng.normal(size=(6, 128)).astype(np.float32))
+    y = ops.fwht(x, impl="interpret")
+    dx = np.asarray(ref.pairwise_dist_ref(x, x))
+    dy = np.asarray(ref.pairwise_dist_ref(y, y))
+    np.testing.assert_allclose(dx, dy, atol=1e-3, rtol=1e-4)
+
+
+def test_fwht_row_padding(rng):
+    """n not divisible by the row block."""
+    x = jnp.asarray(rng.normal(size=(3, 64)).astype(np.float32))
+    got = ops.fwht(x, impl="interpret")
+    want = ref.fwht_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# block_pull
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,block,B,P", [
+    (16, 256, 128, 4, 2),
+    (32, 512, 64, 8, 3),
+    (8, 1024, 256, 8, 1),
+    (64, 384, 128, 16, 5),
+])
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+def test_block_pull_matches_ref(rng, n, d, block, B, P, metric):
+    X = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    arm = jnp.asarray(rng.integers(0, n, B), jnp.int32)
+    blk = jnp.asarray(rng.integers(0, d // block, (B, P)), jnp.int32)
+    got = ops.block_pull(X, q, arm, blk, block=block, metric=metric, impl="interpret")
+    want = ops.block_pull(X, q, arm, blk, block=block, metric=metric, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_pull_dtypes(rng, dtype):
+    X = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32)).astype(dtype)
+    q = jnp.asarray(rng.normal(size=(256,)).astype(np.float32)).astype(dtype)
+    arm = jnp.arange(4, dtype=jnp.int32)
+    blk = jnp.zeros((4, 2), jnp.int32)
+    got = ops.block_pull(X, q, arm, blk, block=128, metric="l2", impl="interpret")
+    want = ops.block_pull(X, q, arm, blk, block=128, metric="l2", impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2)
+
+
+def test_block_pull_full_coverage_equals_exact(rng):
+    """Pulling every block once averages to the exact θ."""
+    n, d, block = 6, 512, 128
+    X = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    nb = d // block
+    blk = jnp.broadcast_to(jnp.arange(nb)[None], (n, nb)).astype(jnp.int32)
+    pulls = ops.block_pull(X, q, jnp.arange(n, dtype=jnp.int32), blk,
+                           block=block, metric="l2", impl="interpret")
+    theta = np.asarray(ref.pairwise_dist_ref(q[None], X))[0] / d
+    np.testing.assert_allclose(np.asarray(pulls).mean(1), theta, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pairwise_dist
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Q,n,d", [(4, 16, 64), (9, 50, 300), (8, 128, 512),
+                                   (1, 7, 1000)])
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+def test_pairwise_matches_ref(rng, Q, n, d, metric):
+    qs = jnp.asarray(rng.normal(size=(Q, d)).astype(np.float32))
+    X = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    got = ops.pairwise_dist(qs, X, metric=metric, impl="interpret")
+    want = ops.pairwise_dist(qs, X, metric=metric, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_pairwise_l2_dot_variant(rng):
+    """The MXU (−2qxᵀ + norms) form agrees with the elementwise form."""
+    from repro.kernels.pairwise_dist import pairwise_dist_pallas
+    qs = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32))
+    X = jnp.asarray(rng.normal(size=(32, 256)).astype(np.float32))
+    a = pairwise_dist_pallas(qs, X, metric="l2", interpret=True)
+    b = pairwise_dist_pallas(qs, X, metric="l2_dot", interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-3)
+
+
+def test_pairwise_zero_distance(rng):
+    X = jnp.asarray(rng.normal(size=(5, 128)).astype(np.float32))
+    d = np.asarray(ops.pairwise_dist(X, X, metric="l2", impl="interpret"))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)

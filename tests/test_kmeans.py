@@ -1,0 +1,48 @@
+"""BMO k-means (paper §V-A): bandit assignment step vs exact Lloyd."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import BMOConfig
+from repro.core import kmeans
+from repro.data.synthetic import clustered_dense
+
+
+def test_assignment_matches_exact():
+    pts = clustered_dense(300, 512, n_clusters=8, noise=0.05, seed=0)
+    cents = pts[:10]
+    cfg = BMOConfig(k=1, delta=0.01, block=64, batch_arms=8,
+                    pulls_per_round=2, metric="l2")
+    a_bmo, ops = kmeans.assign_bmo(jnp.asarray(pts), jnp.asarray(cents), cfg,
+                                   jax.random.PRNGKey(0))
+    a_ex, _ = kmeans.assign_exact(jnp.asarray(pts), jnp.asarray(cents))
+    acc = float(np.mean(np.asarray(a_bmo) == np.asarray(a_ex)))
+    assert acc >= 0.99, acc
+
+
+def test_kmeans_objective_decreases():
+    pts = clustered_dense(200, 256, n_clusters=4, noise=0.05, seed=1)
+    cfg = BMOConfig(k=1, delta=0.05, block=32, batch_arms=8, metric="l2")
+
+    def objective(res):
+        d = pts - np.asarray(res.centroids)[np.asarray(res.assignment)]
+        return float((d ** 2).sum())
+
+    r1 = kmeans.kmeans(pts, 4, 1, cfg, jax.random.PRNGKey(2))
+    r3 = kmeans.kmeans(pts, 4, 3, cfg, jax.random.PRNGKey(2))
+    assert objective(r3) <= objective(r1) * 1.01
+
+
+def test_kmeans_counts_ops():
+    pts = clustered_dense(128, 256, n_clusters=4, seed=2)
+    cfg = BMOConfig(k=1, delta=0.05, block=32, batch_arms=8, metric="l2")
+    res = kmeans.kmeans(pts, 4, 2, cfg, jax.random.PRNGKey(3))
+    assert float(res.coord_ops) > 0
+    assert float(res.exact_ops) == 2 * 128 * 4 * 256
+
+
+def test_lloyd_update_means():
+    pts = jnp.asarray([[0.0, 0.0], [2.0, 2.0], [10.0, 10.0]])
+    assign = jnp.asarray([0, 0, 1])
+    c = kmeans.lloyd_update(pts, assign, 2)
+    np.testing.assert_allclose(np.asarray(c), [[1.0, 1.0], [10.0, 10.0]])

@@ -1,0 +1,98 @@
+"""Sharding rules: divisibility fallbacks, pspec derivation, dedup."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.spec import ParamSpec, Rules, make_rules, param_pspecs
+
+
+AX = {"data": 16, "model": 16}
+
+
+def test_basic_tp_fsdp():
+    r = make_rules(fsdp=True, tp=True, axis_sizes=AX)
+    # mlp weight (embed, mlp): fsdp on embed, tp on mlp
+    assert r.pspec(("embed", "mlp"), (4096, 16384)) == P("data", "model")
+
+
+def test_heads_not_divisible_falls_back_to_head_dim():
+    r = make_rules(tp=True, axis_sizes=AX)
+    # 40 heads don't divide 16 → heads replicated, head_dim picks up model
+    ps = r.pspec(("embed", "heads", "head_dim"), (5120, 40, 128))
+    assert ps == P(None, None, "model")
+
+
+def test_heads_divisible_takes_model_and_dedups_head_dim():
+    r = make_rules(tp=True, axis_sizes=AX)
+    ps = r.pspec(("embed", "heads", "head_dim"), (4096, 32, 128))
+    assert ps == P(None, "model")  # head_dim dropped (model already used)
+
+
+def test_mqa_kv_head():
+    r = make_rules(tp=True, axis_sizes=AX)
+    ps = r.pspec(("embed", "kv_heads", "head_dim"), (6144, 1, 128))
+    assert ps == P(None, None, "model")
+
+
+def test_batch_one_replicated():
+    r = make_rules(tp=True, axis_sizes=AX)
+    assert r.pspec(("batch", "seq"), (1, 524288)) == P()
+
+
+def test_multi_pod_batch():
+    r = make_rules(tp=True, multi_pod=True,
+                   axis_sizes={"pod": 2, "data": 16, "model": 16})
+    ps = r.pspec(("batch", None, None), (256, 4096, 1024))
+    assert ps == P(("pod", "data"))
+
+
+def test_multi_pod_partial_divisibility():
+    # batch 16 divides data(16) but not pod×data(32): drop trailing axes
+    r = make_rules(tp=True, multi_pod=True,
+                   axis_sizes={"pod": 2, "data": 16, "model": 16})
+    ps = r.pspec(("batch",), (16,))
+    assert ps == P("pod") or ps == P()  # greedy trailing drop keeps "pod"
+
+
+def test_param_pspecs_tree():
+    r = make_rules(fsdp=False, tp=True, axis_sizes=AX)
+    tree = {"w": ParamSpec((64, 128), jnp.float32, ("embed", "mlp")),
+            "ln": ParamSpec((64,), jnp.float32, ("act_embed",))}
+    specs = param_pspecs(tree, r)
+    assert specs["w"] == P(None, "model")
+    assert specs["ln"] == P()
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.sampled_from(["embed", "mlp", "heads", "kv_heads", "head_dim",
+                              "vocab", None]), min_size=1, max_size=4),
+    st.lists(st.integers(1, 512), min_size=1, max_size=4),
+    st.booleans(), st.booleans(),
+)
+def test_pspec_always_divisible_property(axes, dims, fsdp, tp):
+    """Any pspec produced must have mesh extents dividing the dims."""
+    n = min(len(axes), len(dims))
+    axes, dims = tuple(axes[:n]), tuple(dims[:n])
+    r = make_rules(fsdp=fsdp, tp=tp, axis_sizes=AX)
+    ps = r.pspec(axes, dims)
+    for i, entry in enumerate(ps):
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else entry
+        extent = 1
+        for nm in names:
+            extent *= AX[nm]
+        assert dims[i] % extent == 0
+
+
+def test_no_axis_reused_within_tensor():
+    r = make_rules(fsdp=True, tp=True, axis_sizes=AX)
+    ps = r.pspec(("embed", "mlp", "vocab"), (4096, 16384, 32000))
+    used = []
+    for entry in ps:
+        if entry is None:
+            continue
+        used += [entry] if isinstance(entry, str) else list(entry)
+    assert len(used) == len(set(used))

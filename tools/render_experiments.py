@@ -1,0 +1,61 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from
+results/dryrun.jsonl (roofline table + perf-variant table).
+
+  PYTHONPATH=src:. python tools/render_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.roofline_table import load, markdown_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def perf_variant_table(rows) -> str:
+    """All non-baseline variants + their baselines, grouped by cell."""
+    cells = {}
+    for (a, s, m, v), r in rows.items():
+        if r.get("status") != "ok":
+            continue
+        cells.setdefault((a, s, m), {})[v] = r
+    out = ["| cell | variant | t_comp | t_mem | t_coll | bottleneck | peak GiB | step = max(terms) |\n",
+           "|---|---|---|---|---|---|---|---|\n"]
+    for (a, s, m), variants in cells.items():
+        if len(variants) < 2 and "baseline" in variants:
+            continue
+        for v, r in variants.items():
+            step = max(r["t_compute"], r["t_memory"], r["t_collective"])
+            out.append(f"| {a} × {s} × {m} | {v} | {r['t_compute']:.3g} | "
+                       f"{r['t_memory']:.3g} | {r['t_collective']:.3g} | "
+                       f"{r['bottleneck']} | "
+                       f"{r['peak_memory_per_chip'] / 2**30:.1f} | {step:.3g} |\n")
+    return "".join(out)
+
+
+def main():
+    rows = load(os.path.join(ROOT, "results", "dryrun.jsonl"))
+    base = {k: v for k, v in rows.items() if k[3] == "baseline"}
+    table = markdown_table(base, mesh="single")
+    text = open(EXP).read()
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE_SINGLE -->.*?(?=\n### |\Z)",
+        "<!-- ROOFLINE_TABLE_SINGLE -->\n" + table + "\n",
+        text, flags=re.S)
+    text = re.sub(
+        r"<!-- PERF_VARIANTS -->.*?(?=\n### |\n## |\Z)",
+        "<!-- PERF_VARIANTS -->\n" + perf_variant_table(rows) + "\n",
+        text, flags=re.S)
+    open(EXP, "w").write(text)
+    print("rendered", EXP)
+
+
+if __name__ == "__main__":
+    main()
