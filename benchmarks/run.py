@@ -11,7 +11,7 @@ import time
 import traceback
 
 BENCHES = ["fig2", "fig3a", "fig4a", "fig4b", "fig5", "fig6", "fig7",
-           "roofline"]
+           "fig8", "roofline"]
 
 
 def main() -> None:
@@ -26,6 +26,7 @@ def main() -> None:
             "fig5": "benchmarks.fig5_kmeans",
             "fig6": "benchmarks.fig6_wallclock",
             "fig7": "benchmarks.fig7_rotation",
+            "fig8": "benchmarks.fig8_batched_serve",
             "roofline": "benchmarks.roofline_table",
         }[name]
         t0 = time.time()

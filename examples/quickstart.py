@@ -5,6 +5,34 @@
 Reproduces the paper's core claim in one page: BMO-NN returns the *exact*
 nearest neighbours while computing a fraction of the coordinate-wise
 distances that brute force needs.
+
+Five-minute tour of the repo
+----------------------------
+One-shot queries (paper Algorithm 2, per-query racing)::
+
+    from repro.configs.base import BMOConfig
+    from repro.core import bmo_nn
+    cfg = BMOConfig(k=5, delta=0.01, block=128)      # §III dense box
+    res = bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(0))
+    # cfg.rotate=True → §IV-B Hadamard box; cfg.sparse=True → §IV-A box
+
+Serving (build the index once, race whole query batches against it)::
+
+    from repro.index import build_index, index_knn, save_index, load_index
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))  # preprocess
+    save_index(store, "idx"); store = load_index("idx")      # persist
+    res = index_knn(store, queries, jax.random.PRNGKey(1))   # batched race
+
+Mutation (the datastore can grow during decode — kNN-LM serving)::
+
+    from repro.index import insert, delete, compact
+    store, slots = insert(store, new_rows)   # O(1) slot reuse / growth
+    store = delete(store, stale_slots)       # O(1) tombstones
+    store, remap = compact(store)            # rebuild when fragmented
+
+Benchmarks: ``python benchmarks/run.py`` (fig2–fig8; fig8 is the batched
+index-serving throughput vs per-query racing). End-to-end LM serving with
+the retrieval hook: ``examples/knn_serve.py``. Design rationale: DESIGN.md.
 """
 import sys
 import time

@@ -2,3 +2,8 @@
 built as a multi-pod JAX training/serving framework. See README.md."""
 
 __version__ = "0.1.0"
+
+from repro import _compat
+
+_compat.install()
+del _compat

@@ -1,0 +1,61 @@
+"""Compatibility shims for older jax releases (this tree targets the
+jax.make_mesh(axis_types=...) API from jax >= 0.6; the pinned toolchain may
+ship an older jax where Auto axis types are implicit and the kwarg does not
+exist yet).
+
+Installed once from ``repro/__init__.py``:
+  * ``jax.sharding.AxisType`` — enum stub when absent (Auto semantics are the
+    old default, so dropping the annotation is behaviour-preserving),
+  * ``jax.make_mesh`` — wrapper that swallows ``axis_types`` when the
+    installed signature predates it,
+  * ``jax.shard_map`` — aliased from ``jax.experimental.shard_map`` with
+    ``check_vma`` mapped onto the old ``check_rep`` knob,
+  * ``pallas.tpu.CompilerParams`` — aliased from the pre-rename
+    ``TPUCompilerParams``.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        orig = jax.make_mesh
+
+        @functools.wraps(orig)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            del axis_types  # pre-0.6 meshes are Auto along every axis
+            return orig(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+            if check_vma is not None:
+                kw.setdefault("check_rep", check_vma)
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pragma: no cover
+        pltpu = None
+    if (pltpu is not None and not hasattr(pltpu, "CompilerParams")
+            and hasattr(pltpu, "TPUCompilerParams")):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams

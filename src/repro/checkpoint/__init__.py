@@ -1,3 +1,4 @@
-from repro.checkpoint.manager import CheckpointManager, restore, save
+from repro.checkpoint import manager
+from repro.checkpoint.manager import CheckpointManager, load_arrays, restore, save
 
-__all__ = ["CheckpointManager", "save", "restore"]
+__all__ = ["CheckpointManager", "load_arrays", "manager", "restore", "save"]

@@ -85,6 +85,14 @@ def restore(path: str, like, *, shardings=None):
     return restored
 
 
+def load_arrays(path: str) -> Dict[str, np.ndarray]:
+    """Load a checkpoint's flat array dict as-is (no ``like`` template) —
+    for states whose shapes are only known from the checkpoint itself, e.g.
+    index/builder.load_index restoring an IndexStore."""
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        return {k: data[k] for k in data.files}
+
+
 def read_meta(path: str) -> Dict[str, Any]:
     with open(os.path.join(path, "meta.msgpack"), "rb") as f:
         return msgpack.unpackb(f.read())

@@ -87,34 +87,38 @@ def _sparse_lookup(indices_row, values_row, t):
     return jnp.where(found, values_row[pos], 0.0), found
 
 
-def _sparse_pull_fn(ds: SparseDataset, q_idx, q_val, q_nnz, cfg: BMOConfig):
+def sparse_pull_one(ds: SparseDataset, q_idx, q_val, q_nnz, arm, key):
+    """One Eq. 12 sample of θ̂ for (query, arm). Module-level so both the
+    per-query racer here and index.batched_race can vmap over it."""
     d = ds.d
+    k1, k2, k3 = jax.random.split(key, 3)
+    ai, av, an = ds.indices[arm], ds.values[arm], ds.nnz[arm]
+    tot = (q_nnz + an).astype(jnp.float32)
+    from_query = jax.random.uniform(k1) < q_nnz / jnp.maximum(tot, 1.0)
+    # sample a support coordinate from the chosen side
+    tq = q_idx[jax.random.randint(k2, (), 0, jnp.maximum(q_nnz, 1))]
+    ta = ai[jax.random.randint(k3, (), 0, jnp.maximum(an, 1))]
+    t = jnp.where(from_query, tq, ta)
+    # both sides' values at t
+    va, found_a = _sparse_lookup(ai, av, t)
+    vq, found_q = _sparse_lookup(q_idx, q_val, t)
+    in_other = jnp.where(from_query, found_a, found_q)
+    mult = tot / (2.0 * d) * (1.0 + (~in_other).astype(jnp.float32))
+    # Eq. 12 value (ℓ1 coordinate distance), θ normalized by d already
+    val = mult * jnp.abs(vq - va)
+    # degenerate both-sides-empty case (tombstoned/zero rows racing a zero
+    # query): the support union is empty so θ = 0 exactly; the sampled
+    # coordinate above came from padding and must not contribute
+    return jnp.where(tot > 0, val, 0.0)
 
-    def pull_one(arm, key):
-        k1, k2, k3 = jax.random.split(key, 3)
-        ai, av, an = ds.indices[arm], ds.values[arm], ds.nnz[arm]
-        tot = (q_nnz + an).astype(jnp.float32)
-        from_query = jax.random.uniform(k1) < q_nnz / jnp.maximum(tot, 1.0)
-        # sample a support coordinate from the chosen side
-        tq = q_idx[jax.random.randint(k2, (), 0, jnp.maximum(q_nnz, 1))]
-        ta = ai[jax.random.randint(k3, (), 0, jnp.maximum(an, 1))]
-        t = jnp.where(from_query, tq, ta)
-        # both sides' values at t
-        va, found_a = _sparse_lookup(ai, av, t)
-        vq, found_q = _sparse_lookup(q_idx, q_val, t)
-        in_other = jnp.where(from_query, found_a, found_q)
-        mult = tot / (2.0 * d) * (1.0 + (~in_other).astype(jnp.float32))
-        # Eq. 12 value (ℓ1 coordinate distance), θ normalized by d already
-        val = mult * jnp.abs(vq - va)
-        # degenerate empty-support arms: θ̂ = |q|₁ contribution handled by
-        # sampling from query side only (tot ≥ q_nnz ≥ 1 for real queries)
-        return val
 
+def _sparse_pull_fn(ds: SparseDataset, q_idx, q_val, q_nnz, cfg: BMOConfig):
     def pull(arm_idx, rng):
         B = arm_idx.shape[0]
         P = cfg.pulls_per_round
         keys = jax.random.split(rng, B * P).reshape(B, P, 2)
-        return jax.vmap(lambda a, ks: jax.vmap(lambda kk: pull_one(a, kk))(ks))(
+        return jax.vmap(lambda a, ks: jax.vmap(
+            lambda kk: sparse_pull_one(ds, q_idx, q_val, q_nnz, a, kk))(ks))(
             arm_idx, keys).astype(jnp.float32)
 
     return pull

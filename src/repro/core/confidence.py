@@ -61,6 +61,21 @@ def empirical_sigma_sq(m2, count, floor_sq, global_var, shrink_weight: float = 4
     return jnp.maximum(var, floor_sq)
 
 
+def empirical_sigma_sq_prior(m2, count, floor_sq, global_var, prior_var,
+                             prior_weight: float, shrink_weight: float = 4.0):
+    """σ̂² with an additional *per-arm* warm-start prior (index serving):
+    the build-time block statistics enter as ``prior_weight`` pseudo-
+    observations of variance ``prior_var`` alongside the usual pooled-global
+    shrinkage. With ``prior_weight = 0`` this is exactly
+    ``empirical_sigma_sq``. The prior only shapes the variance estimate —
+    CI widths still scale with the *real* sample count, so warm starts tighten
+    early rounds without ever faking evidence.
+    """
+    var = (m2 + prior_weight * prior_var + shrink_weight * global_var) / \
+        jnp.maximum(count - 1.0 + prior_weight + shrink_weight, 1.0)
+    return jnp.maximum(var, floor_sq)
+
+
 def pooled_variance(m2, count):
     """Global pooled variance Σ m2_i / Σ (count_i − 1)."""
     num = jnp.sum(m2)

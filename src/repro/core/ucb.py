@@ -61,6 +61,68 @@ class RaceResult(NamedTuple):
     state: RaceState
 
 
+def acceptance_step(mean, ci, exact, accepted, rejected, k: int, *,
+                    epsilon: float = 0.0, eliminate: bool = True):
+    """One vectorized Alg. 1 acceptance/rejection pass over 1-D arm state.
+
+    Shared by the per-query racer below and index.batched_race (which vmaps
+    it across the query axis). Returns ``(accept_new, rejected_new)`` —
+    the mask of arms newly certified this round (capped at the k still
+    needed, lowest means first) and the updated rejection mask.
+    """
+    n = mean.shape[0]
+    candidate = ~accepted & ~rejected
+    lcb = jnp.where(candidate, mean - ci, INF)
+    ucb = mean + ci
+
+    # min LCB excluding self among candidates — via min/argmin reductions:
+    # XLA CPU's fast TopK rewrite breaks when a top_k output is sliced to a
+    # scalar (falls back to a full sort), and this runs every round.
+    min1 = jnp.min(lcb)
+    argmin1 = jnp.argmin(lcb)
+    min2 = jnp.min(jnp.where(jnp.arange(n) == argmin1, INF, lcb))
+    min_excl = jnp.where(jnp.arange(n) == argmin1, min2, min1)
+
+    accept_cert = candidate & (ucb < min_excl)
+    # exact-tie progress rule: the lowest-LCB arm, if exact, is accepted
+    # when it cannot be beaten (<=); deterministic index tie-break.
+    accept_tie = candidate & exact & (jnp.arange(n) == argmin1) & (ucb <= min_excl)
+    accept_new = accept_cert | accept_tie
+    if epsilon > 0:  # PAC rule (Thm 2): selected arm with CI < ε/2
+        accept_pac = candidate & (jnp.arange(n) == argmin1) & (ci < epsilon / 2)
+        accept_new = accept_new | accept_pac
+
+    # never accept more than the k we still need, lowest means first.
+    # top_k(k) instead of a full argsort: only the k best candidates can
+    # ever be kept, and partial selection is ~100x cheaper than the full
+    # sort on CPU (the dominant per-round cost at serving scale).
+    still_needed = k - jnp.sum(accepted)
+    _, best = jax.lax.top_k(-jnp.where(accept_new, mean, INF), k)
+    keep = jnp.zeros((n,), bool).at[best].set(
+        jnp.arange(k) < still_needed)
+    accept_new = accept_new & keep
+
+    rejected_new = rejected
+    if eliminate:
+        # arm can't be top-k if its LCB > k-th smallest UCB (over non-rejected).
+        # max-reduce over the k smallest instead of slicing out [k-1]: the
+        # slice form defeats XLA's TopK rewrite (full-sort fallback).
+        ucb_alive = jnp.where(~rejected, ucb, INF)
+        kth_ucb = jnp.max(-jax.lax.top_k(-ucb_alive, k)[0])
+        rejected_new = rejected | (candidate & ~accept_new & ((mean - ci) > kth_ucb))
+    return accept_new, rejected_new
+
+
+def topk_from_state(mean, ci, accepted, rejected, k: int):
+    """Final ranking: accepted arms first (by mean), then best remaining by
+    LCB; rejected arms last. Returns (topk indices, topk means), sorted."""
+    score = jnp.where(accepted, mean - 1e9, jnp.where(rejected, INF, mean - ci))
+    _, topk = jax.lax.top_k(-score, k)
+    order = jnp.argsort(mean[topk])
+    topk = topk[order]
+    return topk, mean[topk]
+
+
 def race_topk(
     pull_fn: Callable,          # (arm_idx (B,), rng) -> (B, P) sample values
     exact_fn: Callable,         # (arm_idx (B,)) -> (B,) exact θ
@@ -172,40 +234,12 @@ def race_topk(
 
         # ---- acceptance / rejection ---------------------------------------
         ci = ci_radius(st2)
-        lcb = jnp.where(candidate, st2.mean - ci, INF)
-        ucb = st2.mean + ci
-
-        # min LCB excluding self among candidates
-        lcb_sorted, lcb_order = jax.lax.top_k(-lcb, 2)
-        min1, min2 = -lcb_sorted[0], -lcb_sorted[1]
-        argmin1 = lcb_order[0]
-        min_excl = jnp.where(jnp.arange(n) == argmin1, min2, min1)
-
-        accept_cert = candidate & (ucb < min_excl)
-        # exact-tie progress rule: the lowest-LCB arm, if exact, is accepted
-        # when it cannot be beaten (<=); deterministic index tie-break.
-        accept_tie = candidate & st2.exact & (jnp.arange(n) == argmin1) & (ucb <= min_excl)
-        accept_new = accept_cert | accept_tie
-        if cfg.epsilon > 0:  # PAC rule (Thm 2): selected arm with CI < ε/2
-            accept_pac = candidate & (jnp.arange(n) == argmin1) & (ci < cfg.epsilon / 2)
-            accept_new = accept_new | accept_pac
-
-        # never accept more than the k we still need, lowest means first
-        still_needed = k - jnp.sum(st2.accepted)
-        order = jnp.argsort(jnp.where(accept_new, st2.mean, INF))
-        ranks = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
-        accept_new = accept_new & (ranks < still_needed)
-
+        accept_new, rejected = acceptance_step(
+            st2.mean, ci, st2.exact, st2.accepted, st2.rejected, k,
+            epsilon=cfg.epsilon, eliminate=eliminate)
         accepted = st2.accepted | accept_new
         accept_order = jnp.where(
             accept_new, st2.rounds, st2.accept_order)
-
-        rejected = st2.rejected
-        if eliminate:
-            # arm can't be top-k if its LCB > k-th smallest UCB (over non-rejected)
-            ucb_alive = jnp.where(~rejected, ucb, INF)
-            kth_ucb = -jax.lax.top_k(-ucb_alive, k)[0][k - 1]
-            rejected = rejected | (candidate & ~accept_new & ((st2.mean - ci) > kth_ucb))
 
         return st2._replace(accepted=accepted, rejected=rejected,
                             accept_order=accept_order,
@@ -216,10 +250,7 @@ def race_topk(
 
     # output: accepted arms first (by mean), then best remaining by LCB
     ci = ci_radius(st)
-    score = jnp.where(st.accepted, st.mean - 1e9, jnp.where(st.rejected, INF, st.mean - ci))
-    _, topk = jax.lax.top_k(-score, k)
-    order = jnp.argsort(st.mean[topk])
-    topk = topk[order]
+    topk, _ = topk_from_state(st.mean, ci, st.accepted, st.rejected, k)
     return RaceResult(
         topk=topk,
         topk_values=st.mean[topk],

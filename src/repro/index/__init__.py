@@ -1,0 +1,16 @@
+"""repro.index — persistent, mutable, batched-racing BMO-NN index service.
+
+Build once (``build_index``), serve many (``index_knn`` / ``IndexStore.query``
+— cross-query batched racing), mutate online (``insert``/``delete``/
+``compact``), persist through the checkpoint layer (``save_index``/
+``load_index``). See DESIGN.md §3.
+"""
+from repro.index.batched_race import batched_race_topk, index_knn
+from repro.index.builder import build_index, load_index, save_index
+from repro.index.mutable import compact, delete, insert
+from repro.index.store import IndexStore
+
+__all__ = [
+    "IndexStore", "batched_race_topk", "build_index", "compact", "delete",
+    "index_knn", "insert", "load_index", "save_index",
+]

@@ -1,0 +1,313 @@
+"""Cross-query batched racing (DESIGN.md §3.2) — the index-serving driver
+that replaces per-query ``jax.lax.map`` over ``core.ucb.race_topk``.
+
+The per-query path runs Q *sequential* while-loops; every round launches a
+tiny (B, P) pull. Under serving traffic that shape is wrong twice over:
+wall-clock is the SUM of per-query rounds, and each round's kernel is too
+small to fill the machine. Here one ``(Q, B)`` arm frontier races
+simultaneously:
+
+  * one ``kernels/ops.block_pull_multi`` launch serves every active query
+    per round (per-round overhead paid once, corpus rows fetched for one
+    query's frontier ride in the same launch as everyone else's),
+  * wall-clock is the MAX of per-query rounds, not the sum,
+  * queries that finish early are masked out (no pulls, no cost) while the
+    stragglers drain.
+
+Correctness is the per-query algorithm's, unchanged: selection, Welford
+updates, CI radii, and the Alg. 1 acceptance/rejection step
+(``core.ucb.acceptance_step``) are applied per query via ``vmap``; the only
+coupling across queries is the shared kernel launch. Warm-start priors from
+the IndexStore enter through ``confidence.empirical_sigma_sq_prior`` —
+variance estimates only, never CI sample counts.
+
+Tombstoned (dead) slots enter the race pre-rejected (mutable.py): they are
+never selected, never pulled, and can never be returned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import BMOConfig
+from repro.core import confidence as conf
+from repro.core.bmo_nn import KNNResult, sparse_exact_theta, sparse_pull_one
+from repro.core.datasets import SparseDataset
+from repro.core.ucb import INF, acceptance_step, topk_from_state
+from repro.kernels import ops as kops
+
+
+class BatchedRaceState(NamedTuple):
+    mean: jax.Array        # (Q, n)
+    count: jax.Array       # (Q, n)
+    m2: jax.Array          # (Q, n)
+    exact: jax.Array       # (Q, n) bool
+    accepted: jax.Array    # (Q, n) bool
+    rejected: jax.Array    # (Q, n) bool
+    coord_ops: jax.Array   # (Q,)
+    rounds: jax.Array      # (Q,) rounds spent while the query was active
+    done: jax.Array        # (Q,) bool
+    round_no: jax.Array    # () int32
+    rng: jax.Array
+
+
+def batched_race_topk(
+    pull_fn: Callable,          # (sel (Q, B), rng) -> (Q, B, P) samples
+    exact_fn: Callable,         # (sel (Q, B)) -> (Q, B) exact θ
+    n: int,
+    Q: int,
+    max_pulls,                  # scalar, (n,) or (Q, n)
+    pull_cost: float,
+    exact_cost,                 # scalar, (n,) or (Q, n)
+    cfg: BMOConfig,
+    rng: jax.Array,
+    *,
+    eliminate: bool = True,
+    dead: Optional[jax.Array] = None,       # (n,) bool tombstones
+    prior_var: Optional[jax.Array] = None,  # (n,) warm-start variance prior
+    prior_weight: float = 0.0,
+    max_pulls_static: int = 0,
+) -> KNNResult:
+    k = cfg.k
+    B = min(cfg.batch_arms, n)
+    P = cfg.pulls_per_round
+    max_pulls_arr = jnp.broadcast_to(
+        jnp.asarray(max_pulls, jnp.float32), (Q, n))
+    exact_cost_arr = jnp.broadcast_to(
+        jnp.asarray(exact_cost, jnp.float32), (Q, n))
+    max_pulls_hi = max_pulls_static or int(np.max(np.asarray(max_pulls)))
+    log_term = float(np.log(2.0 / conf.delta_prime(cfg.delta, n, max_pulls_hi)))
+    max_rounds = cfg.max_rounds or int(
+        2 * math.ceil(n * max_pulls_hi / max(B * P, 1)) + n + 16)
+
+    alive = jnp.ones((n,), bool) if dead is None else ~dead
+    alive_f = alive.astype(jnp.float32)
+    n_alive = jnp.sum(alive_f)
+    if prior_var is None:
+        prior_var = jnp.zeros((n,), jnp.float32)
+        prior_weight = 0.0
+    prior_pool = jnp.sum(prior_var * alive_f) / jnp.maximum(n_alive, 1.0)
+    qi = jnp.arange(Q)[:, None]
+
+    def ci_radius(st: BatchedRaceState) -> jax.Array:
+        if cfg.sigma is not None:
+            sig_sq = jnp.full((Q, n), float(cfg.sigma) ** 2, jnp.float32)
+        else:
+            # per-query pooled variance, warm-started by the build-time prior
+            num = jnp.sum(st.m2 * alive_f, 1) + prior_weight * prior_pool
+            den = (jnp.sum(jnp.maximum(st.count - 1.0, 0.0) * alive_f, 1)
+                   + prior_weight)
+            global_var = num / jnp.maximum(den, 1.0)         # (Q,)
+            sig_sq = conf.empirical_sigma_sq_prior(
+                st.m2, st.count, 1e-12, global_var[:, None],
+                prior_var[None, :], prior_weight)
+        c = conf.hoeffding_radius(sig_sq, st.count, log_term)
+        return jnp.where(st.exact, 0.0, c)
+
+    def init_state(rng):
+        # wide init (paper App. D-A): every alive arm of every query gets
+        # init_pulls samples, as reps of ONE (Q, n, P) launch
+        n_init = max(cfg.init_pulls, 2)
+        reps = max(1, n_init // P)
+        mean = jnp.zeros((Q, n), jnp.float32)
+        count = jnp.zeros((Q, n), jnp.float32)
+        m2 = jnp.zeros((Q, n), jnp.float32)
+        all_arms = jnp.broadcast_to(jnp.arange(n)[None], (Q, n))
+        mask = jnp.broadcast_to(alive_f[None], (Q, n)).reshape(-1)
+
+        def rep_body(carry, _):
+            mean, count, m2, rng = carry
+            rng, sub = jax.random.split(rng)
+            vals = pull_fn(all_arms, sub)                    # (Q, n, P)
+            nm, nc, n2 = conf.welford_batch_update(
+                mean.reshape(-1), count.reshape(-1), m2.reshape(-1),
+                vals.reshape(Q * n, P), mask)
+            return (nm.reshape(Q, n), nc.reshape(Q, n), n2.reshape(Q, n),
+                    rng), None
+
+        (mean, count, m2, rng), _ = jax.lax.scan(
+            rep_body, (mean, count, m2, rng), None, length=reps)
+        return BatchedRaceState(
+            mean=mean, count=count, m2=m2,
+            exact=jnp.zeros((Q, n), bool),
+            accepted=jnp.zeros((Q, n), bool),
+            rejected=jnp.broadcast_to(~alive[None], (Q, n)),
+            coord_ops=jnp.full((Q,), float(reps * P * pull_cost)) * n_alive,
+            rounds=jnp.zeros((Q,), jnp.int32),
+            done=jnp.zeros((Q,), bool),
+            round_no=jnp.zeros((), jnp.int32),
+            rng=rng,
+        )
+
+    def cond(st: BatchedRaceState):
+        return (~jnp.all(st.done)) & (st.round_no < max_rounds)
+
+    def body(st: BatchedRaceState):
+        ci = ci_radius(st)
+        lcb = st.mean - ci
+        candidate = ~st.accepted & ~st.rejected
+        need = candidate & ~st.exact & ~st.done[:, None]
+
+        # ---- selection: per query, B lowest-LCB candidates ---------------
+        sel_score = jnp.where(need, lcb, INF)
+        _, sel = jax.lax.top_k(-sel_score, B)                # (Q, B)
+        sel_valid = jnp.take_along_axis(need, sel, axis=1)   # (Q, B)
+
+        rng, sub = jax.random.split(st.rng)
+        vals = pull_fn(sel, sub)                             # (Q, B, P)
+        cm, cc, c2 = st.mean[qi, sel], st.count[qi, sel], st.m2[qi, sel]
+        nm, nc, n2 = conf.welford_batch_update(
+            cm.reshape(-1), cc.reshape(-1), c2.reshape(-1),
+            vals.reshape(Q * B, P), sel_valid.reshape(-1).astype(jnp.float32))
+        mean = st.mean.at[qi, sel].set(nm.reshape(Q, B))
+        count = st.count.at[qi, sel].set(nc.reshape(Q, B))
+        m2 = st.m2.at[qi, sel].set(n2.reshape(Q, B))
+        coord_ops = st.coord_ops + jnp.sum(sel_valid, 1) * P * pull_cost
+
+        # ---- lazy exact evaluation for arms that crossed MAX_PULLS -------
+        crossed = ((count[qi, sel] >= max_pulls_arr[qi, sel])
+                   & sel_valid & ~st.exact[qi, sel])
+        exact_vals = jax.lax.cond(
+            jnp.any(crossed),
+            lambda s: exact_fn(s),
+            lambda s: jnp.zeros((Q, B), jnp.float32),
+            sel)
+        mean = mean.at[qi, sel].set(
+            jnp.where(crossed, exact_vals, mean[qi, sel]))
+        exact = st.exact.at[qi, sel].set(st.exact[qi, sel] | crossed)
+        coord_ops = coord_ops + jnp.sum(crossed * exact_cost_arr[qi, sel], 1)
+
+        st2 = st._replace(mean=mean, count=count, m2=m2, exact=exact,
+                          coord_ops=coord_ops, rng=rng)
+
+        # ---- per-query acceptance / rejection (shared Alg. 1 step) -------
+        ci2 = ci_radius(st2)
+        accept_new, rejected = jax.vmap(
+            lambda m, c, e, a, r: acceptance_step(
+                m, c, e, a, r, k, epsilon=cfg.epsilon, eliminate=eliminate)
+        )(st2.mean, ci2, st2.exact, st2.accepted, st2.rejected)
+        accepted = st2.accepted | accept_new
+        # freeze finished queries
+        frozen = st.done[:, None]
+        accepted = jnp.where(frozen, st.accepted, accepted)
+        rejected = jnp.where(frozen, st.rejected, rejected)
+
+        done = st.done | (jnp.sum(accepted, 1) >= k)
+        rounds = jnp.where(st.done, st.rounds, st.rounds + 1)
+        return st2._replace(accepted=accepted, rejected=rejected,
+                            rounds=rounds, done=done,
+                            round_no=st.round_no + 1)
+
+    st = init_state(rng)
+    st = jax.lax.while_loop(cond, body, st)
+
+    ci = ci_radius(st)
+    topk, topk_vals = jax.vmap(
+        lambda m, c, a, r: topk_from_state(m, c, a, r, k)
+    )(st.mean, ci, st.accepted, st.rejected)
+    return KNNResult(indices=topk, values=topk_vals, coord_ops=st.coord_ops,
+                     rounds=st.rounds, n_exact=jnp.sum(st.exact, 1))
+
+
+# ---------------------------------------------------------------------------
+# IndexStore front-ends
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block", "d", "impl",
+                                             "eliminate", "prior_weight"))
+def _dense_index_knn(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
+                     block: int, d: int, impl: str, eliminate: bool,
+                     prior_weight: float) -> KNNResult:
+    n, d_pad = x.shape
+    Q = qs.shape[0]
+    nb = d_pad // block
+
+    def pull(sel, key):
+        blk = jax.random.randint(key, sel.shape + (cfg.pulls_per_round,), 0, nb)
+        return kops.block_pull_multi(x, qs, sel, blk, block=block,
+                                     metric=cfg.metric, impl=impl)
+
+    def exact(sel):
+        rows = x[sel]                                        # (Q, B, d_pad)
+        diff = rows - qs[:, None, :]
+        if cfg.metric == "l1":
+            dist = jnp.sum(jnp.abs(diff), -1)
+        else:
+            dist = jnp.sum(diff * diff, -1)
+        return dist / d
+
+    return batched_race_topk(
+        pull, exact, n=n, Q=Q,
+        max_pulls=float(d_pad // block),
+        pull_cost=float(block),
+        exact_cost=float(d),
+        cfg=cfg, rng=rng, eliminate=eliminate,
+        dead=~alive, prior_var=prior_var, prior_weight=prior_weight,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "d", "eliminate",
+                                             "prior_weight"))
+def _sparse_index_knn(indices, values, nnz, alive, prior_var,
+                      q_idx, q_val, q_nnz, rng, *, cfg: BMOConfig, d: int,
+                      eliminate: bool, prior_weight: float) -> KNNResult:
+    n, m = indices.shape
+    Q, mq = q_idx.shape
+    ds = SparseDataset(indices=indices, values=values, nnz=nnz, d=d)
+    P = cfg.pulls_per_round
+
+    def pull(sel, key):
+        B = sel.shape[1]
+        keys = jax.random.split(key, Q * B * P).reshape(Q, B, P, 2)
+        per_pull = lambda qi_, qv_, qn_, a, kk: sparse_pull_one(
+            ds, qi_, qv_, qn_, a, kk)
+        over_p = jax.vmap(per_pull, in_axes=(None, None, None, None, 0))
+        over_b = jax.vmap(over_p, in_axes=(None, None, None, 0, 0))
+        over_q = jax.vmap(over_b, in_axes=(0, 0, 0, 0, 0))
+        return over_q(q_idx, q_val, q_nnz, sel, keys).astype(jnp.float32)
+
+    def exact(sel):
+        return jax.vmap(lambda qi_, qv_, s: sparse_exact_theta(ds, qi_, qv_, s))(
+            q_idx, q_val, sel)
+
+    exact_cost = (nnz[None, :] + q_nnz[:, None]).astype(jnp.float32)  # (Q, n)
+    max_pulls = jnp.maximum(exact_cost, 8.0)
+    return batched_race_topk(
+        pull, exact, n=n, Q=Q,
+        max_pulls=max_pulls, pull_cost=1.0, exact_cost=exact_cost,
+        cfg=cfg, rng=rng, eliminate=eliminate,
+        dead=~alive, prior_var=prior_var, prior_weight=prior_weight,
+        max_pulls_static=int(m + mq),
+    )
+
+
+def index_knn(store, queries, rng: jax.Array, *, k=None, impl: str = "auto",
+              eliminate: bool = True, warm_start: bool = True) -> KNNResult:
+    """Batched k-NN against an IndexStore (slot indices; tombstones are
+    excluded). Drop-in for ``bmo_nn.knn`` on the serving path — same
+    KNNResult fields, one batched race instead of Q sequential ones."""
+    cfg = store.cfg if k is None else dataclasses.replace(store.cfg, k=k)
+    n_live = store.n_live
+    if cfg.k > n_live:
+        raise ValueError(
+            f"k={cfg.k} exceeds the index's {n_live} live slots — "
+            "tombstoned slots can never be returned")
+    w = store.prior_weight if warm_start else 0.0
+    if store.kind == "sparse":
+        q_idx, q_val, q_nnz = queries
+        return _sparse_index_knn(
+            store.indices, store.values, store.nnz, store.alive,
+            store.prior_var, q_idx, q_val, q_nnz, rng,
+            cfg=cfg, d=store.d, eliminate=eliminate, prior_weight=w)
+    qs = store.prepare_queries(queries)
+    return _dense_index_knn(
+        store.x, qs, store.alive, store.prior_var, rng,
+        cfg=cfg, block=store.block, d=store.d, impl=impl,
+        eliminate=eliminate, prior_weight=w)

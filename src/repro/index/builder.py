@@ -1,0 +1,132 @@
+"""One-time index preprocessing (DESIGN.md §3.1): corpus → IndexStore.
+
+Everything the per-call ``bmo_nn.knn`` path recomputes per query batch is
+done once here and amortized across the index's lifetime:
+
+  * dense:   blocked/padded corpus layout,
+  * rotated: the §IV-B Hadamard rotation is *cached* — the sign vector and
+    the pre-rotated corpus are stored, so serving only rotates the (Q, d)
+    query batch (O(Q d log d)) instead of corpus + queries every call,
+  * sparse:  padded-CSR layout (§IV-A box),
+  * per-arm block statistics (mean/variance of each row's block values),
+    the warm-start priors for the racing CIs.
+
+Persistence goes through checkpoint/manager.py's atomic save, so an index
+directory is bit-compatible with the training checkpoints' tooling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import BMOConfig
+from repro.core.datasets import SparseDataset, next_pow2
+from repro.index.store import IndexStore
+from repro.utils import get_logger
+
+log = get_logger("repro.index")
+
+
+def _row_block_stats(x: jax.Array, block: int, metric: str):
+    """Per-arm variance across blocks of the row's block values — the
+    query-independent component of the pull-value variance (the pull is the
+    block mean of |x_t − q_t|^p; its spread across blocks is bounded below
+    by the spread of the row's own block energies)."""
+    n, d_pad = x.shape
+    xb = x.reshape(n, d_pad // block, block)
+    v = jnp.mean(jnp.abs(xb) if metric == "l1" else xb * xb, axis=-1)  # (n, nb)
+    return jnp.var(v, axis=-1)
+
+
+def _sparse_prior(values: jax.Array, nnz: jax.Array, d: int):
+    """Eq. 12 pull values are (tot/2d)·(1+…)·|v|: scale the per-row value
+    variance by the squared support mass so empty/light rows start tight."""
+    m = values.shape[1]
+    mask = jnp.arange(m)[None, :] < nnz[:, None]
+    cnt = jnp.maximum(nnz.astype(jnp.float32), 1.0)
+    mean = jnp.sum(jnp.abs(values) * mask, 1) / cnt
+    var = jnp.sum(jnp.square(jnp.abs(values) - mean[:, None]) * mask, 1) / cnt
+    scale = (nnz.astype(jnp.float32) / d) ** 2
+    return var * scale
+
+
+def build_index(corpus, cfg: BMOConfig, rng: jax.Array, *,
+                capacity: Optional[int] = None,
+                impl: str = "auto") -> IndexStore:
+    """Preprocess ``corpus`` into an IndexStore ready for batched serving.
+
+    corpus: (n, d) array (dense; also the input for the rotated/sparse boxes
+    — ``cfg.rotate`` / ``cfg.sparse`` select the §IV box exactly like
+    ``bmo_nn.knn``). ``capacity``: total slots (≥ n); defaults to the next
+    power of two so early inserts don't force a growth.
+    """
+    if cfg.sparse:
+        return _build_sparse(corpus, cfg, capacity)
+    x = jnp.asarray(corpus, jnp.float32)
+    n, d = x.shape
+    kind = "rotated" if cfg.rotate else "dense"
+    signs = None
+    if cfg.rotate:
+        assert cfg.metric == "l2", "rotation preserves only ℓ2"
+        assert cfg.block & (cfg.block - 1) == 0, \
+            "rotated box needs a power-of-two block"
+        from repro.kernels import ops as kops
+        dp = max(next_pow2(d), cfg.block)
+        x = jnp.pad(x, ((0, 0), (0, dp - d)))
+        signs = jax.random.rademacher(rng, (dp,), jnp.float32)
+        x = kops.fwht(x * signs[None, :], impl=impl)
+    # blocked layout
+    pad = (-x.shape[1]) % cfg.block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        if signs is not None:  # keep signs aligned with d_pad for queries
+            signs = jnp.pad(signs, (0, pad), constant_values=1.0)
+    cap = capacity or next_pow2(n)
+    assert cap >= n
+    if cap > n:
+        x = jnp.pad(x, ((0, cap - n), (0, 0)))
+    alive = jnp.arange(cap) < n
+    prior_var = _row_block_stats(x, cfg.block, cfg.metric)
+    log.info("built %s index: n=%d cap=%d d=%d d_pad=%d block=%d",
+             kind, n, cap, d, x.shape[1], cfg.block)
+    return IndexStore(kind=kind, cfg=cfg, d=d, alive=alive, x=x,
+                      block=cfg.block, signs=signs, prior_var=prior_var)
+
+
+def _build_sparse(corpus, cfg: BMOConfig, capacity: Optional[int]) -> IndexStore:
+    ds = corpus if isinstance(corpus, SparseDataset) else SparseDataset.build(
+        np.asarray(corpus))
+    n, m, d = ds.n, ds.m, ds.d
+    cap = capacity or next_pow2(n)
+    assert cap >= n
+    indices = jnp.pad(ds.indices, ((0, cap - n), (0, 0)), constant_values=d)
+    values = jnp.pad(ds.values, ((0, cap - n), (0, 0)))
+    nnz = jnp.pad(ds.nnz, (0, cap - n))
+    alive = jnp.arange(cap) < n
+    prior_var = _sparse_prior(values, nnz, d)
+    log.info("built sparse index: n=%d cap=%d d=%d m=%d", n, cap, d, m)
+    return IndexStore(kind="sparse", cfg=cfg, d=d, alive=alive,
+                      indices=indices, values=values, nnz=nnz,
+                      prior_var=prior_var)
+
+
+# ---------------------------------------------------------------------------
+# persistence (checkpoint/manager.py)
+# ---------------------------------------------------------------------------
+
+
+def save_index(store: IndexStore, path: str) -> None:
+    """Atomic write of the store's arrays + meta (checkpoint layout)."""
+    from repro import checkpoint
+    checkpoint.manager.save(path, store.arrays(), meta=store.meta())
+
+
+def load_index(path: str) -> IndexStore:
+    from repro import checkpoint
+    arrays = checkpoint.manager.load_arrays(path)
+    meta = checkpoint.manager.read_meta(path)
+    return IndexStore.from_arrays(arrays, meta)

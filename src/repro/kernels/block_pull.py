@@ -9,6 +9,11 @@ operands, so HBM traffic per pull is exactly ``block`` elements — the whole
 point of the adaptive subsampling.
 
 grid = (B, P): one program per (selected arm, pull).
+
+The multi-query variant (``block_pull_multi_pallas``) extends the grid to
+(Q, B, P) for the index-serving path: one launch races every active query's
+arm frontier, so per-round kernel overhead is paid once instead of Q times
+and the scalar-prefetched index operands cover the whole batch.
 """
 from __future__ import annotations
 
@@ -58,3 +63,42 @@ def block_pull_pallas(x: jax.Array, q: jax.Array, arm_idx: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, P), jnp.float32),
         interpret=interpret,
     )(arm_idx.astype(jnp.int32), blk_idx.astype(jnp.int32), x, q2)
+
+
+def _pull_multi_kernel(arm_ref, blk_ref, x_ref, q_ref, o_ref, *, block: int,
+                       metric: str):
+    diff = x_ref[...].astype(jnp.float32) - q_ref[...].astype(jnp.float32)
+    if metric == "l1":
+        v = jnp.sum(jnp.abs(diff))
+    else:
+        v = jnp.sum(diff * diff)
+    o_ref[0, 0, 0] = v / block
+
+
+def block_pull_multi_pallas(x: jax.Array, qs: jax.Array, arm_idx: jax.Array,
+                            blk_idx: jax.Array, *, block: int,
+                            metric: str = "l2",
+                            interpret: bool = False) -> jax.Array:
+    """x (n, d_pad); qs (Q, d_pad); arm_idx (Q, B) int32; blk_idx (Q, B, P)
+    int32.  Returns (Q, B, P) fp32 per-block mean coordinate-wise distances."""
+    n, d_pad = x.shape
+    Q, B, P = blk_idx.shape
+    assert d_pad % block == 0 and arm_idx.shape == (Q, B)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Q, B, P),
+        in_specs=[
+            pl.BlockSpec((1, block),
+                         lambda q, i, p, arm, blk: (arm[q, i], blk[q, i, p])),
+            pl.BlockSpec((1, block),
+                         lambda q, i, p, arm, blk: (q, blk[q, i, p])),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1), lambda q, i, p, arm, blk: (q, i, p)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pull_multi_kernel, block=block, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, B, P), jnp.float32),
+        interpret=interpret,
+    )(arm_idx.astype(jnp.int32), blk_idx.astype(jnp.int32), x, qs)

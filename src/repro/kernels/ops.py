@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as kref
-from repro.kernels.block_pull import block_pull_pallas
+from repro.kernels.block_pull import block_pull_multi_pallas, block_pull_pallas
 from repro.kernels.fwht import fwht_pallas
 from repro.kernels.pairwise_dist import pairwise_dist_pallas
 
@@ -43,6 +43,17 @@ def block_pull(x, q, arm_idx, blk_idx, *, block: int, metric: str = "l2",
         return kref.block_pull_ref(x, q, arm_idx, blk_idx, block, metric)
     return block_pull_pallas(x, q, arm_idx, blk_idx, block=block, metric=metric,
                              interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "metric", "impl"))
+def block_pull_multi(x, qs, arm_idx, blk_idx, *, block: int, metric: str = "l2",
+                     impl: str = "auto"):
+    """Cross-query batched pull: arm_idx (Q, B), blk_idx (Q, B, P) → (Q, B, P)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return kref.block_pull_multi_ref(x, qs, arm_idx, blk_idx, block, metric)
+    return block_pull_multi_pallas(x, qs, arm_idx, blk_idx, block=block,
+                                   metric=metric, interpret=(impl == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "impl"))

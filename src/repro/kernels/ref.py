@@ -46,6 +46,27 @@ def block_pull_ref(x: jax.Array, q: jax.Array, arm_idx: jax.Array,
     return (v / block).astype(jnp.float32)
 
 
+def block_pull_multi_ref(x: jax.Array, qs: jax.Array, arm_idx: jax.Array,
+                         blk_idx: jax.Array, block: int,
+                         metric: str = "l2") -> jax.Array:
+    """Cross-query batched pull (the index-serving hot loop): one gather
+    serves every query's arm frontier.  x (n, d_pad); qs (Q, d_pad);
+    arm_idx (Q, B); blk_idx (Q, B, P).  Returns (Q, B, P)."""
+    n, d_pad = x.shape
+    Q = qs.shape[0]
+    nb = d_pad // block
+    xb = x.reshape(n, nb, block)
+    qb = qs.reshape(Q, nb, block)
+    rows = xb[arm_idx[:, :, None], blk_idx]              # (Q, B, P, block)
+    qrows = qb[jnp.arange(Q)[:, None, None], blk_idx]    # (Q, B, P, block)
+    diff = rows.astype(jnp.float32) - qrows.astype(jnp.float32)
+    if metric == "l1":
+        v = jnp.sum(jnp.abs(diff), axis=-1)
+    else:
+        v = jnp.sum(diff * diff, axis=-1)
+    return (v / block).astype(jnp.float32)
+
+
 def pairwise_dist_ref(qs: jax.Array, x: jax.Array, metric: str = "l2",
                       chunk: int = 2048) -> jax.Array:
     """Exact distances. qs (Q, d), x (n, d) -> (Q, n) SUM-form distances

@@ -3,6 +3,10 @@ kNN-LM retrieval hook (the paper's technique in the serving path).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
       --batch 4 --prompt-len 16 --new-tokens 32 --knn-lm
+
+Retrieval is served from a persistent IndexStore. ``--index-dir`` reuses a
+saved index across launches (build-once/serve-many: loaded when present,
+built+saved when not); ``--index-append`` grows the datastore during decode.
 """
 from __future__ import annotations
 
@@ -32,6 +36,12 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=None)
     ap.add_argument("--knn-lm", action="store_true")
+    ap.add_argument("--index-dir", default=None,
+                    help="load the retrieval IndexStore from this directory "
+                         "if it exists, else build it there once")
+    ap.add_argument("--index-append", action="store_true",
+                    help="insert each decode step's (hidden, token) pairs "
+                         "back into the index")
     ap.add_argument("--datastore-size", type=int, default=2048)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
@@ -49,18 +59,34 @@ def main(argv=None):
     params = init_params(model.param_specs(), rng)
     max_seq = args.max_seq or (args.prompt_len + args.new_tokens + 8)
 
-    knn_cfg = datastore = None
+    knn_cfg = datastore = index = None
     if args.knn_lm:
+        import os
+
         from repro.configs.base import BMOConfig
+        from repro.index import build_index, load_index, save_index
         ds_rng = np.random.default_rng(0)
         keys = ds_rng.normal(size=(args.datastore_size, cfg.d_model)).astype(np.float32)
         next_ids = ds_rng.integers(0, cfg.vocab_size, args.datastore_size).astype(np.int32)
-        datastore = (jax.numpy.asarray(keys), jax.numpy.asarray(next_ids))
         knn_cfg = KNNLMConfig(lam=0.2, bmo=BMOConfig(
             k=8, delta=0.05, block=min(64, cfg.d_model), batch_arms=16))
+        if args.index_dir and os.path.exists(args.index_dir):
+            index = load_index(args.index_dir)
+            datastore = (None, next_ids)
+            log.info("loaded index from %s (%d live slots)", args.index_dir,
+                     index.n_live)
+        elif args.index_dir:
+            index = build_index(jax.numpy.asarray(keys), knn_cfg.bmo,
+                                jax.random.PRNGKey(7))
+            save_index(index, args.index_dir)
+            datastore = (None, next_ids)
+            log.info("built + saved index to %s", args.index_dir)
+        else:
+            datastore = (jax.numpy.asarray(keys), jax.numpy.asarray(next_ids))
 
     engine = ServeEngine(model, params, plan, mesh, batch_size=args.batch,
-                         max_seq=max_seq, knn_lm=knn_cfg, datastore=datastore)
+                         max_seq=max_seq, knn_lm=knn_cfg, datastore=datastore,
+                         index=index, index_append=args.index_append)
     prompts = np.random.default_rng(1).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
     t0 = time.time()

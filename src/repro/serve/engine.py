@@ -5,6 +5,15 @@ This is deliberately a *small* engine (slot-based static batching, greedy
 sampling): the point is end-to-end runnability of (prefill → decode →
 retrieve → interpolate) on the same substrate the dry-run proves out at mesh
 scale.
+
+Retrieval goes through a held ``repro.index.IndexStore`` built once at
+engine construction (or passed in pre-built/loaded from disk): the corpus
+layout, cached rotation, and CI warm-start priors are amortized across every
+decode step, and each step's whole batch races in ONE batched launch
+(index.batched_race) instead of per-query ``lax.map``. With
+``index_append=True`` the engine inserts each step's (hidden, next-token)
+pairs back into the index — the datastore grows during decode, true kNN-LM
+behaviour.
 """
 from __future__ import annotations
 
@@ -30,7 +39,12 @@ class ServeEngine:
     def __init__(self, model, params, plan: ParallelPlan, mesh, *,
                  batch_size: int, max_seq: int,
                  knn_lm: Optional[KNNLMConfig] = None,
-                 datastore=None):
+                 datastore=None, index=None, index_append: bool = False):
+        """``datastore``: (keys (N, d), next_token_ids (N,)) — preprocessed
+        into an IndexStore at construction. ``index``: a pre-built/loaded
+        IndexStore instead (pass next-token ids per slot via
+        ``datastore=(None, ids)``). ``index_append``: insert each decode
+        step's (hidden, token) pairs back into the index."""
         self.model = model
         self.params = params
         self.mesh = mesh
@@ -40,6 +54,33 @@ class ServeEngine:
         self.prefill_step = jax.jit(self.prefill_step, donate_argnums=2)
         self.knn_lm = knn_lm
         self.datastore = datastore      # (keys (N, d), next_token_ids (N,))
+        self.index = None
+        self.index_append = index_append
+        self._next_ids = None           # (capacity,) slot-aligned payload
+        if knn_lm is not None and (index is not None or datastore is not None):
+            from repro.index import build_index
+            next_ids = None
+            if index is None:
+                keys, next_ids = datastore
+                index = build_index(jnp.asarray(keys), knn_lm.bmo,
+                                    jax.random.PRNGKey(7))
+            elif datastore is not None:
+                next_ids = datastore[1]
+            self.index = index
+            self._next_ids = np.zeros((index.capacity,), np.int32)
+            if next_ids is not None:
+                next_ids = np.asarray(next_ids, np.int32)
+                if len(next_ids) > index.capacity:
+                    raise ValueError(
+                        f"next-token payload ({len(next_ids)}) exceeds index "
+                        f"capacity ({index.capacity}) — wrong index for this "
+                        "datastore?")
+                if len(next_ids) < index.n_live:
+                    raise ValueError(
+                        f"next-token payload ({len(next_ids)}) does not cover "
+                        f"the index's {index.n_live} live slots — uncovered "
+                        "slots would silently vote token 0")
+                self._next_ids[: len(next_ids)] = next_ids
         if knn_lm is not None:
             # hidden-state decode (DenseLM exposes return_hidden)
             def _decode(params, cache, tokens):
@@ -58,16 +99,25 @@ class ServeEngine:
 
     # -- kNN-LM hook (the paper's technique in the serving path) ------------
     def _knn_logits(self, hidden, rng):
-        from repro.core import bmo_nn
-        keys, next_ids = self.datastore
-        res = bmo_nn.knn(keys, hidden, self.knn_lm.bmo, rng)
+        from repro.index import index_knn
+        res = index_knn(self.index, hidden, rng)        # one batched race
         V = self.model.cfg.vocab_size
         # distance-weighted vote over retrieved next-tokens
         w = jax.nn.softmax(-jnp.asarray(res.values) / self.knn_lm.temperature, axis=-1)
-        toks = next_ids[res.indices]                      # (B, k)
+        toks = jnp.asarray(self._next_ids)[res.indices]   # (B, k)
         knn_probs = jnp.zeros((hidden.shape[0], V), jnp.float32)
         knn_probs = knn_probs.at[jnp.arange(hidden.shape[0])[:, None], toks].add(w)
         return jnp.log(knn_probs + 1e-9), res.coord_ops
+
+    def _append_to_index(self, hidden, tok):
+        """Fold this step's (hidden, next-token) pairs into the live index."""
+        from repro.index import insert
+        self.index, slots = insert(self.index, np.asarray(hidden))
+        if self.index.capacity > len(self._next_ids):
+            grown = np.zeros((self.index.capacity,), np.int32)
+            grown[: len(self._next_ids)] = self._next_ids
+            self._next_ids = grown
+        self._next_ids[slots] = np.asarray(tok)[:, 0]
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int, rng=None):
         """prompts (B, S0) int32 -> (B, max_new_tokens) int32 greedy tokens.
@@ -84,7 +134,7 @@ class ServeEngine:
         for _ in range(max_new_tokens - 1):
             logits, cache, hidden = self.decode_step(self.params, cache, tok)
             mix = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32))
-            if self.knn_lm is not None and self.datastore is not None:
+            if self.knn_lm is not None and self.index is not None:
                 rng, sub = jax.random.split(rng)
                 knn_logits, ops = self._knn_logits(hidden, sub)
                 retrieval_ops += float(jnp.sum(ops))
@@ -93,6 +143,9 @@ class ServeEngine:
                     jnp.log1p(-lam) + mix,
                     jnp.log(lam) + jax.nn.log_softmax(knn_logits))
             tok = jnp.argmax(mix, -1).astype(jnp.int32)[:, None]
+            if (self.knn_lm is not None and self.index is not None
+                    and self.index_append):
+                self._append_to_index(hidden, tok)
             out.append(tok)
         self.cache = cache
         return np.asarray(jnp.concatenate(out, axis=1)), retrieval_ops

@@ -1,0 +1,86 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed (the pinned
+container has no network access, so property tests fall back to seeded random
+sampling over the same strategy ranges).
+
+Covers exactly the surface this test suite uses: ``given``, ``settings``,
+``strategies.{integers,floats,booleans,lists,sampled_from}``. Examples are
+drawn from a per-test deterministic generator so failures reproduce.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(size)]
+
+        return _Strategy(draw)
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        inner = fn
+
+        # NB: zero-arg wrapper with no __wrapped__, so pytest does not try
+        # to resolve the strategy-filled parameters as fixtures
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            # crc32, not hash(): str hashing is salted per process, and the
+            # whole point is that a failing draw reproduces across runs
+            seed = zlib.crc32(
+                f"{inner.__module__}.{inner.__qualname__}".encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                drawn = tuple(s.draw(rng) for s in strats)
+                try:
+                    inner(*drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {drawn!r}") from e
+
+        for attr in ("__name__", "__qualname__", "__module__", "__doc__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+
+    return deco

@@ -8,6 +8,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # and benches must see the real single device; multi-device tests spawn
 # subprocesses with their own XLA_FLAGS.
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # container without hypothesis: seeded-random fallback
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+
 import numpy as np
 import pytest
 

@@ -1,0 +1,225 @@
+"""Index subsystem tests: batched-racing parity with per-query knn(),
+mutation (insert/delete/compact) correctness, checkpoint round-trip, and
+warm-start plumbing."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import BMOConfig
+from repro.core import bmo_nn, oracle
+from repro.core.datasets import SparseDataset
+from repro.data.synthetic import clustered_sparse, make_knn_benchmark_data
+from repro.index import (IndexStore, build_index, compact, delete, index_knn,
+                         insert, load_index, save_index)
+
+
+def _sets(idx):
+    return [set(np.asarray(idx[i]).tolist()) for i in range(idx.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# batched racing parity: index.batched_race == per-query knn() top-k
+# ---------------------------------------------------------------------------
+
+
+def test_batched_parity_dense():
+    corpus, queries = make_knn_benchmark_data("dense", 400, 1024, 6, seed=1)
+    cfg = BMOConfig(k=3, delta=0.01, block=64, batch_arms=16,
+                    pulls_per_round=2, metric="l2")
+    per = bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(0))
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    res = index_knn(store, queries, jax.random.PRNGKey(1))
+    assert _sets(res.indices) == _sets(per.indices)
+    # both exact → values agree too (sorted ascending per row)
+    np.testing.assert_allclose(np.asarray(res.values), np.asarray(per.values),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_batched_parity_rotated():
+    corpus, queries = make_knn_benchmark_data("dense", 300, 512, 4, seed=2)
+    cfg = BMOConfig(k=3, delta=0.01, block=64, batch_arms=16, metric="l2",
+                    rotate=True)
+    per = bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(0))
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    res = index_knn(store, queries, jax.random.PRNGKey(1))
+    assert _sets(res.indices) == _sets(per.indices)
+
+
+def test_batched_parity_sparse():
+    corpus = clustered_sparse(200, 2048, seed=4)
+    ds = SparseDataset.build(corpus)
+    qi, qv, qn = ds.indices[:4], ds.values[:4], ds.nnz[:4]
+    cfg = BMOConfig(k=3, delta=0.01, block=1, batch_arms=16,
+                    pulls_per_round=8, init_pulls=16, metric="l1", sparse=True)
+    per = bmo_nn.knn(ds, (qi, qv, qn), cfg, jax.random.PRNGKey(3))
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    res = index_knn(store, (qi, qv, qn), jax.random.PRNGKey(5))
+    assert _sets(res.indices) == _sets(per.indices)
+
+
+def test_k_exceeding_live_slots_raises():
+    corpus = np.random.default_rng(0).normal(size=(8, 256)).astype(np.float32)
+    cfg = BMOConfig(k=5, delta=0.05, block=32, batch_arms=4, metric="l2")
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    store = delete(store, [0, 1, 2, 3, 4, 5])
+    with pytest.raises(ValueError, match="live slots"):
+        index_knn(store, corpus[:1], jax.random.PRNGKey(1))
+
+
+def test_batched_respects_k_override_and_cold_start():
+    corpus, queries = make_knn_benchmark_data("dense", 128, 256, 2, seed=7)
+    cfg = BMOConfig(k=5, delta=0.05, block=32, batch_arms=16, metric="l2")
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    ex = oracle.exact_knn(corpus, queries, 2, "l2")
+    res = index_knn(store, queries, jax.random.PRNGKey(1), k=2,
+                    warm_start=False)
+    assert res.indices.shape == (2, 2)
+    assert _sets(res.indices) == _sets(ex.indices)
+
+
+# ---------------------------------------------------------------------------
+# mutation: insert / delete / compact
+# ---------------------------------------------------------------------------
+
+
+def _fresh_equals(store, corpus_rows, queries, cfg, slot_of_row):
+    """Post-mutation top-k == fresh build on the mutated corpus (slot ids
+    mapped through ``slot_of_row``)."""
+    fresh = build_index(np.asarray(corpus_rows), cfg, jax.random.PRNGKey(0))
+    want = index_knn(fresh, queries, jax.random.PRNGKey(9))
+    got = index_knn(store, queries, jax.random.PRNGKey(9))
+    want_slots = [set(int(slot_of_row[j]) for j in row)
+                  for row in np.asarray(want.indices)]
+    got_slots = _sets(got.indices)
+    assert got_slots == want_slots
+
+
+def test_mutation_round_trip_dense():
+    corpus, queries = make_knn_benchmark_data("dense", 200, 512, 3, seed=11)
+    cfg = BMOConfig(k=3, delta=0.01, block=64, batch_arms=16, metric="l2")
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    ex = oracle.exact_knn(corpus, queries, 3, "l2")
+
+    # delete the two best arms of query 0: they must disappear from results
+    kill = np.asarray(ex.indices[0])[:2].tolist()
+    store = delete(store, kill)
+    res = index_knn(store, queries, jax.random.PRNGKey(1))
+    for row in _sets(res.indices):
+        assert not (row & set(kill))
+    # equivalent fresh build on the corpus without the deleted rows
+    mask = np.ones(len(corpus), bool)
+    mask[kill] = False
+    slot_of_row = np.nonzero(mask)[0]
+    _fresh_equals(store, corpus[mask], queries, cfg, slot_of_row)
+
+    # insert near-duplicates of the queries: they must become the top-1,
+    # landing in the freed slots
+    store, slots = insert(store, queries + 1e-3)
+    assert set(slots.tolist()) <= set(kill) | set(
+        range(200, store.capacity))
+    res = index_knn(store, queries, jax.random.PRNGKey(2))
+    for i in range(len(queries)):
+        assert int(np.asarray(res.indices[i])[0]) == int(slots[i])
+
+    # compact: same results through the old→new slot mapping
+    before = index_knn(store, queries, jax.random.PRNGKey(3))
+    store2, old_ids = compact(store)
+    assert store2.n_live == store.n_live
+    after = index_knn(store2, queries, jax.random.PRNGKey(3))
+    remapped = [set(int(old_ids[j]) for j in row)
+                for row in np.asarray(after.indices)]
+    assert remapped == _sets(before.indices)
+
+
+def test_mutation_growth_and_widen_sparse():
+    corpus = clustered_sparse(60, 512, seed=6)
+    cfg = BMOConfig(k=2, delta=0.01, block=1, batch_arms=16,
+                    pulls_per_round=8, init_pulls=16, metric="l1", sparse=True)
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0), capacity=64)
+    m0 = store.m
+    # a denser row than any existing one forces a column widen; 5 rows force
+    # a capacity growth (64 - 60 = 4 free)
+    rng = np.random.default_rng(0)
+    dense_rows = np.where(rng.random((5, 512)) < 0.5,
+                          rng.exponential(1.0, (5, 512)), 0).astype(np.float32)
+    store, slots = insert(store, dense_rows)
+    assert store.capacity > 64 and store.m > m0 and len(slots) == 5
+    ds_q = SparseDataset.build(dense_rows[:1])
+    res = index_knn(store, (ds_q.indices, ds_q.values, ds_q.nnz),
+                    jax.random.PRNGKey(1))
+    assert int(np.asarray(res.indices[0])[0]) == int(slots[0])
+
+
+# ---------------------------------------------------------------------------
+# persistence via checkpoint/manager.py
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind_cfg", [
+    ("dense", dict(metric="l2", block=64)),
+    ("rotated", dict(metric="l2", block=64, rotate=True)),
+    ("sparse", dict(metric="l1", block=1, pulls_per_round=8, init_pulls=16,
+                    sparse=True)),
+])
+def test_save_load_round_trip(tmp_path, kind_cfg):
+    kind, kw = kind_cfg
+    cfg = BMOConfig(k=3, delta=0.01, batch_arms=16, **kw)
+    if kind == "sparse":
+        corpus = clustered_sparse(100, 512, seed=3)
+        ds = SparseDataset.build(corpus)
+        queries = (ds.indices[:2], ds.values[:2], ds.nnz[:2])
+    else:
+        corpus, queries = make_knn_benchmark_data("dense", 100, 256, 2, seed=3)
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "idx")
+    save_index(store, path)
+    store2 = load_index(path)
+    assert isinstance(store2, IndexStore) and store2.kind == store.kind
+    r1 = index_knn(store, queries, jax.random.PRNGKey(1))
+    r2 = index_knn(store2, queries, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(r1.indices), np.asarray(r2.indices))
+    np.testing.assert_allclose(np.asarray(r1.values), np.asarray(r2.values))
+
+
+# ---------------------------------------------------------------------------
+# degenerate sparse arms (satellite regression: empty-support path)
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_empty_support_arm():
+    """All-zero corpus rows (nnz == 0) must race cleanly: θ̂ pulls are 0 when
+    the support union is empty, finite otherwise, and the racer returns the
+    right neighbours."""
+    d = 64
+    corpus = np.zeros((6, d), np.float32)
+    corpus[0, [1, 5]] = [1.0, 2.0]
+    corpus[1, [2]] = [0.5]
+    # rows 2..5 all-zero
+    ds = SparseDataset.build(corpus)
+    assert int(ds.nnz[2]) == 0
+
+    # pulls against an empty query AND an empty arm are exactly 0
+    key = jax.random.PRNGKey(0)
+    empty_q = SparseDataset.build(np.zeros((1, d), np.float32))
+    vals = jax.vmap(lambda kk: bmo_nn.sparse_pull_one(
+        ds, empty_q.indices[0], empty_q.values[0], empty_q.nnz[0], 2, kk))(
+        jax.random.split(key, 32))
+    np.testing.assert_array_equal(np.asarray(vals), 0.0)
+
+    # a zero query's nearest neighbours are the zero rows (θ = 0)
+    cfg = BMOConfig(k=3, delta=0.05, block=1, batch_arms=4, pulls_per_round=4,
+                    init_pulls=8, metric="l1", sparse=True)
+    res = bmo_nn.knn(ds, (empty_q.indices, empty_q.values, empty_q.nnz),
+                     cfg, jax.random.PRNGKey(1))
+    assert set(np.asarray(res.indices[0]).tolist()) <= {2, 3, 4, 5}
+    np.testing.assert_allclose(np.asarray(res.values[0]), 0.0, atol=1e-6)
+
+    # and the batched index path handles tombstoned + empty rows together
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    store = delete(store, [2])
+    bres = index_knn(store, (empty_q.indices, empty_q.values, empty_q.nnz),
+                     jax.random.PRNGKey(2))
+    got = set(np.asarray(bres.indices[0]).tolist())
+    assert got <= {3, 4, 5} and 2 not in got

@@ -84,6 +84,30 @@ def test_block_pull_dtypes(rng, dtype):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.parametrize("Q,n,d,block,B,P", [
+    (3, 16, 256, 128, 4, 2),
+    (5, 32, 512, 64, 8, 3),
+    (2, 8, 1024, 256, 8, 1),
+])
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+def test_block_pull_multi_matches_ref(rng, Q, n, d, block, B, P, metric):
+    X = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    qs = jnp.asarray(rng.normal(size=(Q, d)).astype(np.float32))
+    arm = jnp.asarray(rng.integers(0, n, (Q, B)), jnp.int32)
+    blk = jnp.asarray(rng.integers(0, d // block, (Q, B, P)), jnp.int32)
+    got = ops.block_pull_multi(X, qs, arm, blk, block=block, metric=metric,
+                               impl="interpret")
+    want = ops.block_pull_multi(X, qs, arm, blk, block=block, metric=metric,
+                                impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+    # row q of the multi-query pull == the single-query pull for that query
+    for qidx in range(Q):
+        single = ops.block_pull(X, qs[qidx], arm[qidx], blk[qidx],
+                                block=block, metric=metric, impl="ref")
+        np.testing.assert_allclose(np.asarray(got[qidx]), np.asarray(single),
+                                   rtol=1e-5)
+
+
 def test_block_pull_full_coverage_equals_exact(rng):
     """Pulling every block once averages to the exact θ."""
     n, d, block = 6, 512, 128

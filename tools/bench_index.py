@@ -1,0 +1,66 @@
+"""Fast smoke entry for the index-serving benchmark (<60 s on CPU):
+a scaled-down fig8 run plus a mutation round-trip, for CI and pre-commit.
+
+    PYTHONPATH=src python tools/bench_index.py
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs.base import BMOConfig
+from repro.core import bmo_nn, oracle
+from repro.data.synthetic import make_knn_benchmark_data
+from repro.index import build_index, compact, delete, index_knn, insert
+
+
+def main(n: int = 1024, d: int = 1024, Q: int = 16, k: int = 5):
+    t_start = time.perf_counter()
+    corpus, queries = make_knn_benchmark_data("dense", n, d, Q, seed=8)
+    cfg = BMOConfig(k=k, delta=0.01, block=128, batch_arms=32,
+                    pulls_per_round=2, metric="l2")
+    ex = oracle.exact_knn(corpus, queries, k, "l2")
+
+    def timed(fn):
+        fn()                                   # warm
+        t0 = time.perf_counter()
+        r = fn()
+        jax.block_until_ready(r.values)
+        return r, time.perf_counter() - t0
+
+    base, t_base = timed(
+        lambda: bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(0)))
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    batched, t_batch = timed(
+        lambda: index_knn(store, queries, jax.random.PRNGKey(1)))
+
+    def acc(idx):
+        return float(np.mean([set(np.asarray(idx[i]).tolist())
+                              == set(np.asarray(ex.indices[i]).tolist())
+                              for i in range(Q)]))
+
+    print(f"per-query lax.map: {Q / t_base:8.1f} qps  acc={acc(base.indices):.3f}")
+    print(f"batched index:     {Q / t_batch:8.1f} qps  acc={acc(batched.indices):.3f}"
+          f"  speedup={t_base / t_batch:.2f}x")
+
+    # mutation smoke: delete the true NN of query 0, insert a closer point
+    nn0 = int(np.asarray(ex.indices[0])[0])
+    store = delete(store, [nn0])
+    store, slots = insert(store, queries[:1])
+    res = index_knn(store, queries[:1], jax.random.PRNGKey(2))
+    top = int(np.asarray(res.indices[0])[0])
+    assert top == int(slots[0]), (top, slots)
+    store, old_ids = compact(store)
+    res = index_knn(store, queries[:1], jax.random.PRNGKey(3))
+    assert int(old_ids[int(np.asarray(res.indices[0])[0])]) == int(slots[0])
+    print(f"mutation round-trip OK (insert/delete/compact), "
+          f"total {time.perf_counter() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()
