@@ -1,14 +1,29 @@
-"""Fig. 8 (ours, beyond-paper): index-serving throughput — cross-query
-batched racing (repro.index.batched_race) vs the per-query ``lax.map``
-baseline (core.bmo_nn.knn), same corpus, same box, same exactness.
+"""Fig. 8 (ours, beyond-paper): index-serving throughput — the epoch-fused,
+survivor-compacted driver (DESIGN.md §4) vs the PR-1 per-round batched
+driver vs the per-query ``lax.map`` baseline, same corpus, same box, same
+exactness.
 
-The per-query path's wall-clock is the SUM of per-query round counts and
-every round launches a tiny (B, P) pull; the batched path's wall-clock is
-the MAX of round counts with one (Q, B, P) launch per round. The acceptance
-bar for this figure: ≥ 2× queries/sec at Q=32, n=4096, d=4096 on CPU.
+The PR-1 driver pays one kernel launch and O(Q·n) bookkeeping (CI radii,
+top-k selection, acceptance masks) *every round*, even late in the race when
+nearly every arm is rejected. The fused driver runs R rounds per launch
+(on-chip Welford, double-buffered corpus DMA), runs acceptance only at epoch
+boundaries, and compacts the survivor frontier into shrinking power-of-two
+buckets — bookkeeping scales with survivors, not n.
+
+Acceptance bar: ≥ 2× queries/sec over the PR-1 driver at Q=32, n=16384,
+d=4096 on CPU. Results are emitted both as the CSV convention
+(benchmarks/common.py) and as machine-readable ``BENCH_fig8.json``
+(qps / rounds / coord_ops per entry) so the perf trajectory is diffable
+across PRs.
+
+    PYTHONPATH=src python -m benchmarks.fig8_batched_serve            # full
+    PYTHONPATH=src python -m benchmarks.fig8_batched_serve --smoke    # CI
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
+import json
 import time
 
 import jax
@@ -21,37 +36,140 @@ from repro.data.synthetic import make_knn_benchmark_data
 from repro.index import build_index, index_knn
 
 
-def _time(fn, reps: int = 3) -> float:
-    fn()                                   # warm (compile)
+def _time(fn, reps: int):
+    """(seconds per call, last result) — the timed calls double as the
+    stats source, no extra un-timed race."""
+    jax.block_until_ready(fn().values)     # warm (compile), fully drained
     t0 = time.perf_counter()
     for _ in range(reps):
-        jax.block_until_ready(fn().values)
-    return (time.perf_counter() - t0) / reps
+        res = fn()
+        jax.block_until_ready(res.values)
+    return (time.perf_counter() - t0) / reps, res
 
 
-def main(n: int = 4096, d: int = 4096, Q: int = 32, k: int = 5):
-    corpus, queries = make_knn_benchmark_data("dense", n, d, Q, seed=8)
-    cfg = BMOConfig(k=k, delta=0.01, block=128, batch_arms=32,
-                    pulls_per_round=2, metric="l2")
-    ex = oracle.exact_knn(corpus, queries, k, "l2")
+def _bench(fn, mode: str, Q: int, reps: int, exact_idx):
+    """One timed entry — every driver row in BENCH_fig8.json shares this
+    shape, so a field/unit change cannot drift between modes."""
+    t, res = _time(fn, reps)
+    return {
+        "mode": mode,
+        "time_per_query_us": t * 1e6 / Q,
+        "qps": Q / t,
+        "mean_rounds": float(np.mean(np.asarray(res.rounds))),
+        "coord_ops": float(np.sum(np.asarray(res.coord_ops))),
+        "acc": set_accuracy(res.indices, exact_idx),
+    }
 
-    base = lambda: bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(0))
-    t_base = _time(base)
-    acc_base = set_accuracy(base().indices, ex.indices)
 
-    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
-    batched = lambda: index_knn(store, queries, jax.random.PRNGKey(1))
-    t_batch = _time(batched)
-    acc_batch = set_accuracy(batched().indices, ex.indices)
+def _bench_mode(store, queries, mode: str, Q: int, reps: int, exact_idx):
+    fn = lambda: index_knn(store, queries, jax.random.PRNGKey(1), mode=mode)
+    return _bench(fn, mode, Q, reps, exact_idx)
 
-    qps_base = Q / t_base
-    qps_batch = Q / t_batch
-    emit("fig8_per_query_laxmap", t_base * 1e6 / Q,
-         f"qps={qps_base:.1f} acc={acc_base:.3f}")
-    emit("fig8_batched_index", t_batch * 1e6 / Q,
-         f"qps={qps_batch:.1f} acc={acc_batch:.3f} "
-         f"speedup={qps_batch / qps_base:.2f}x")
+
+# (Q, n) grid, R sweep, d, reps, lax.map baseline per preset. "quick" is the
+# benchmarks/run.py harness entry (old fig8 scale, no JSON unless asked);
+# "smoke" is the CI step; "full" is the committed-evidence run.
+PRESETS = {
+    "smoke": dict(d=1024, reps=1, with_permap=True,
+                  qn_grid=[(8, 1024)], r_grid=[2, 4]),
+    "quick": dict(d=4096, reps=2, with_permap=True,
+                  qn_grid=[(32, 4096)], r_grid=[]),
+    "full": dict(d=4096, reps=2, with_permap=False,
+                 qn_grid=[(8, 4096), (32, 4096), (32, 16384)],
+                 r_grid=[1, 2, 4, 8]),
+}
+
+
+def main(preset: str = "quick", k: int = 5, out: str = "",
+         reps: int = 0, with_permap: bool = False):
+    p = PRESETS[preset]
+    d = p["d"]
+    reps = reps or p["reps"]
+    with_permap = with_permap or p["with_permap"]
+    qn_grid, r_grid = p["qn_grid"], p["r_grid"]
+
+    entries = []
+    data = {}               # (Q, n) -> (corpus, queries, store-less exact)
+
+    def get_data(Q, n_):
+        if (Q, n_) not in data:
+            corpus, queries = make_knn_benchmark_data("dense", n_, d, Q, seed=8)
+            ex = oracle.exact_knn(corpus, queries, k, "l2")
+            data[(Q, n_)] = (corpus, queries, ex)
+        return data[(Q, n_)]
+
+    base_cfg = BMOConfig(k=k, delta=0.01, block=128, batch_arms=32,
+                         pulls_per_round=2, metric="l2")
+
+    # ---- (Q, n) sweep: fused vs PR-1 rounds driver -----------------------
+    for Q, n_ in qn_grid:
+        corpus, queries, ex = get_data(Q, n_)
+        store = build_index(corpus, base_cfg, jax.random.PRNGKey(0))
+        if with_permap:
+            row_b = _bench(
+                lambda: bmo_nn.knn(corpus, queries, base_cfg,
+                                   jax.random.PRNGKey(0)),
+                "per_query_laxmap", Q, reps, ex.indices)
+            row_b.update(Q=Q, n=n_, d=d, R=0)
+            entries.append(row_b)
+            emit(f"fig8_per_query_laxmap_Q{Q}_n{n_}",
+                 row_b["time_per_query_us"],
+                 f"qps={row_b['qps']:.1f} acc={row_b['acc']:.3f}")
+        row_r = _bench_mode(store, queries, "rounds", Q, reps, ex.indices)
+        row_f = _bench_mode(store, queries, "fused", Q, reps, ex.indices)
+        # R = 0 marks drivers with no epoch structure (lax.map, rounds)
+        row_r.update(Q=Q, n=n_, d=d, R=0)
+        row_f.update(Q=Q, n=n_, d=d, R=base_cfg.epoch_rounds)
+        entries.extend([row_r, row_f])
+        row_f["speedup_vs_rounds"] = row_f["qps"] / row_r["qps"]
+        emit(f"fig8_rounds_Q{Q}_n{n_}", row_r["time_per_query_us"],
+             f"qps={row_r['qps']:.1f} acc={row_r['acc']:.3f}")
+        emit(f"fig8_fused_Q{Q}_n{n_}", row_f["time_per_query_us"],
+             f"qps={row_f['qps']:.1f} acc={row_f['acc']:.3f} "
+             f"speedup={row_f['speedup_vs_rounds']:.2f}x")
+
+    # ---- R sweep: rounds fused per epoch at the mid shape ----------------
+    if r_grid:
+        Q, n_ = qn_grid[min(1, len(qn_grid) - 1)]
+        corpus, queries, ex = get_data(Q, n_)
+        store0 = build_index(corpus, base_cfg, jax.random.PRNGKey(0))
+        for R in r_grid:
+            # only the driver reads epoch_rounds — rebind cfg, reuse the
+            # built corpus layout/priors
+            store = dataclasses.replace(
+                store0, cfg=dataclasses.replace(base_cfg, epoch_rounds=R))
+            row = _bench_mode(store, queries, "fused", Q, reps, ex.indices)
+            row.update(Q=Q, n=n_, d=d, R=R)
+            entries.append(row)
+            emit(f"fig8_fused_R{R}_Q{Q}_n{n_}", row["time_per_query_us"],
+                 f"qps={row['qps']:.1f} acc={row['acc']:.3f}")
+
+    if out:
+        payload = {
+            "bench": "fig8_batched_serve",
+            "backend": jax.default_backend(),
+            "preset": preset,
+            "d": d, "k": k, "reps": reps,
+            "entries": entries,
+        }
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {out} ({len(entries)} entries)")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="full",
+                    help="smoke = CI shapes (<~60 s), quick = harness "
+                         "comparison, full = the committed evidence sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="alias for --preset smoke")
+    ap.add_argument("--reps", type=int, default=0,
+                    help="0 = the preset's default")
+    ap.add_argument("--with-permap", action="store_true",
+                    help="also run the per-query lax.map baseline")
+    ap.add_argument("--out", default="BENCH_fig8.json",
+                    help="JSON output path ('' disables)")
+    args = ap.parse_args()
+    main(preset="smoke" if args.smoke else args.preset, reps=args.reps,
+         with_permap=args.with_permap, out=args.out)

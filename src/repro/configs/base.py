@@ -30,6 +30,8 @@ class ModelConfig:
     moe_d_ff: int = 0
     first_dense_layers: int = 0
     router_type: str = "softmax"     # softmax | sigmoid (deepseek-v3)
+    moe_capacity_factor: float = 1.25  # expert capacity = tokens·k/E·factor;
+                                     # ≥ E/k makes dispatch dropless
     moe_seq_chunk: int = 8192        # dispatch ≤ this many tokens/shard at once
     # --- MLA (deepseek-v3) ---
     use_mla: bool = False
@@ -125,3 +127,6 @@ class BMOConfig:
     epsilon: float = 0.0             # >0 → PAC variant (Thm 2)
     sigma: Optional[float] = None    # sub-Gaussian bound; None = empirical (App. D-A)
     max_rounds: int = 0              # 0 = derived from d/block
+    epoch_rounds: int = 4            # racing rounds fused per kernel launch
+                                     # (epoch-fused serving driver; grows as
+                                     # the survivor frontier shrinks)

@@ -32,8 +32,14 @@ CONFIG = ModelConfig(
 PLAN = ParallelPlan(fsdp=True, tp=True, sp=True, ep=True,
                     grad_accum=16, optimizer="adafactor", param_dtype="bfloat16")
 
+# DeepSeek-V3 routes droplessly (aux-loss-free balancing, "no token
+# dropping", §4.2 of the tech report); at smoke scale droplessness is
+# realized exactly with factor = E/k, so prefill/decode/full-pass logits are
+# bit-consistent (test_decode_consistency). The real config keeps the
+# capacity approximation — factor E/k = 32 would blow the dispatch buffer to
+# E×T×d at 32k prefill.
 SMOKE = CONFIG.scaled(
     n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256,
     n_experts=8, n_experts_active=2, moe_d_ff=32, first_dense_layers=1,
     q_lora_rank=32, kv_lora_rank=16, qk_rope_dim=8, qk_nope_dim=16,
-    v_head_dim=16, head_dim=24, mtp_depth=1)
+    v_head_dim=16, head_dim=24, mtp_depth=1, moe_capacity_factor=4.0)

@@ -23,8 +23,29 @@ def hoeffding_radius(sigma_sq, count, log_term):
     return jnp.sqrt(2.0 * sigma_sq * log_term / c)
 
 
+def welford_merge(mean, count, m2, b_mean, b_count, b_m2, mask):
+    """Merge pre-reduced batch statistics into running (mean, count, m2)
+    (Chan's parallel Welford update).
+
+    mean/count/m2:        current per-arm stats.
+    b_mean/b_count/b_m2:  batch stats — e.g. the (mean, M2) pair a fused
+                          epoch kernel reduced on-chip over its R·P pulls.
+    mask:                 1.0 for real updates, 0.0 for padded/masked arms.
+    Returns new (mean, count, m2) — unchanged where mask = 0.
+    """
+    tot = count + b_count
+    delta = b_mean - mean
+    new_mean = mean + delta * (b_count / jnp.maximum(tot, 1.0))
+    new_m2 = m2 + b_m2 + jnp.square(delta) * count * b_count / jnp.maximum(
+        tot, 1.0)
+    keep = mask > 0
+    return (jnp.where(keep, new_mean, mean),
+            jnp.where(keep, tot, count),
+            jnp.where(keep, new_m2, m2))
+
+
 def welford_batch_update(mean, count, m2, batch_vals, batch_mask):
-    """Merge a batch of P samples per arm into running (mean, count, m2).
+    """Merge a batch of P raw samples per arm into running (mean, count, m2).
 
     mean/count/m2: (B,) current stats for the B arms being updated.
     batch_vals:    (B, P) new samples.
@@ -34,15 +55,7 @@ def welford_batch_update(mean, count, m2, batch_vals, batch_mask):
     P = batch_vals.shape[1]
     b_mean = jnp.mean(batch_vals, axis=1)
     b_m2 = jnp.sum(jnp.square(batch_vals - b_mean[:, None]), axis=1)
-    tot = count + P
-    delta = b_mean - mean
-    new_mean = mean + delta * (P / jnp.maximum(tot, 1.0))
-    new_m2 = m2 + b_m2 + jnp.square(delta) * count * P / jnp.maximum(tot, 1.0)
-    new_count = tot
-    keep = batch_mask > 0
-    return (jnp.where(keep, new_mean, mean),
-            jnp.where(keep, new_count, count),
-            jnp.where(keep, new_m2, m2))
+    return welford_merge(mean, count, m2, b_mean, float(P), b_m2, batch_mask)
 
 
 def empirical_sigma_sq(m2, count, floor_sq, global_var, shrink_weight: float = 4.0):
@@ -81,3 +94,10 @@ def pooled_variance(m2, count):
     num = jnp.sum(m2)
     den = jnp.sum(jnp.maximum(count - 1.0, 0.0))
     return num / jnp.maximum(den, 1.0)
+
+
+def hoeffding_radius_masked(sigma_sq, count, log_term, valid):
+    """Compacted-state CI radius: padding entries (``valid`` = False) get a
+    zero radius so LCB = UCB = mean — combined with their pre-rejected
+    status in the masked acceptance step they can never influence a race."""
+    return jnp.where(valid, hoeffding_radius(sigma_sq, count, log_term), 0.0)

@@ -113,6 +113,19 @@ def acceptance_step(mean, ci, exact, accepted, rejected, k: int, *,
     return accept_new, rejected_new
 
 
+def acceptance_step_masked(mean, ci, exact, accepted, rejected, valid, k: int,
+                           *, epsilon: float = 0.0, eliminate: bool = True):
+    """Compacted-state (index/frontier.py) variant of ``acceptance_step``:
+    state arrays hold a *bucketed survivor frontier* — width W ≪ n — whose
+    padding entries carry ``valid`` = False. Padding is treated as
+    pre-rejected, so it can never be accepted, never sets the min-LCB bar,
+    and never occupies one of the k UCB slots of the eliminate rule.
+    Returns ``(accept_new, rejected_new)`` over the W-wide buffers;
+    ``rejected_new`` includes the padding."""
+    return acceptance_step(mean, ci, exact, accepted, rejected | ~valid, k,
+                           epsilon=epsilon, eliminate=eliminate)
+
+
 def topk_from_state(mean, ci, accepted, rejected, k: int):
     """Final ranking: accepted arms first (by mean), then best remaining by
     LCB; rejected arms last. Returns (topk indices, topk means), sorted."""
@@ -121,6 +134,14 @@ def topk_from_state(mean, ci, accepted, rejected, k: int):
     order = jnp.argsort(mean[topk])
     topk = topk[order]
     return topk, mean[topk]
+
+
+def topk_from_state_masked(mean, ci, accepted, rejected, valid, ids, k: int):
+    """Compacted-state variant of ``topk_from_state``: ranks the W-wide
+    frontier buffers (padding pre-rejected via ``valid``) and translates the
+    winning *positions* back to original arm/slot ids through ``ids``."""
+    pos, vals = topk_from_state(mean, ci, accepted, rejected | ~valid, k)
+    return ids[pos], vals
 
 
 def race_topk(

@@ -5,12 +5,15 @@ Build once (``build_index``), serve many (``index_knn`` / ``IndexStore.query``
 ``compact``), persist through the checkpoint layer (``save_index``/
 ``load_index``). See DESIGN.md §3.
 """
-from repro.index.batched_race import batched_race_topk, index_knn
+from repro.index.batched_race import (batched_race_topk, fused_race_topk,
+                                      index_knn)
 from repro.index.builder import build_index, load_index, save_index
-from repro.index.mutable import compact, delete, insert
+from repro.index.frontier import FrontierState, compact_frontier
+from repro.index.mutable import compact, delete, insert, maybe_compact
 from repro.index.store import IndexStore
 
 __all__ = [
-    "IndexStore", "batched_race_topk", "build_index", "compact", "delete",
-    "index_knn", "insert", "load_index", "save_index",
+    "FrontierState", "IndexStore", "batched_race_topk", "build_index",
+    "compact", "compact_frontier", "delete", "fused_race_topk", "index_knn",
+    "insert", "load_index", "maybe_compact", "save_index",
 ]

@@ -1,18 +1,22 @@
-"""Cross-query batched racing (DESIGN.md §3.2) — the index-serving driver
-that replaces per-query ``jax.lax.map`` over ``core.ucb.race_topk``.
+"""Cross-query batched racing (DESIGN.md §3.2/§4) — the index-serving
+drivers that replace per-query ``jax.lax.map`` over ``core.ucb.race_topk``.
 
-The per-query path runs Q *sequential* while-loops; every round launches a
-tiny (B, P) pull. Under serving traffic that shape is wrong twice over:
-wall-clock is the SUM of per-query rounds, and each round's kernel is too
-small to fill the machine. Here one ``(Q, B)`` arm frontier races
-simultaneously:
+Two drivers share this module:
 
-  * one ``kernels/ops.block_pull_multi`` launch serves every active query
-    per round (per-round overhead paid once, corpus rows fetched for one
-    query's frontier ride in the same launch as everyone else's),
-  * wall-clock is the MAX of per-query rounds, not the sum,
-  * queries that finish early are masked out (no pulls, no cost) while the
-    stragglers drain.
+``batched_race_topk`` (PR-1, DESIGN.md §3.2) races one ``(Q, B)`` arm
+frontier with one ``block_pull_multi`` launch *per round*: wall-clock is the
+MAX of per-query rounds instead of the SUM, but every round still pays one
+launch plus O(Q·n) bookkeeping (CI radii, top-k selection, acceptance) even
+late in the race when nearly every arm is rejected.
+
+The *epoch-fused* driver (``fused_race_topk`` + ``index/frontier.py``,
+DESIGN.md §4) restructures that loop into a two-level epoch loop: the inner
+R pull-rounds are fused into one ``kernels/ops.fused_epoch_pull`` launch
+(on-chip Welford, double-buffered corpus DMA), acceptance runs only at epoch
+boundaries, and between epochs the still-candidate arms are gathered into
+shrinking power-of-two buckets so bookkeeping scales with *survivors*
+instead of n. It serves the dense/rotated boxes; the sparse box stays on the
+per-round driver.
 
 Correctness is the per-query algorithm's, unchanged: selection, Welford
 updates, CI radii, and the Alg. 1 acceptance/rejection step
@@ -39,7 +43,10 @@ from repro.configs.base import BMOConfig
 from repro.core import confidence as conf
 from repro.core.bmo_nn import KNNResult, sparse_exact_theta, sparse_pull_one
 from repro.core.datasets import SparseDataset
-from repro.core.ucb import INF, acceptance_step, topk_from_state
+from repro.core.ucb import (INF, acceptance_step, acceptance_step_masked,
+                            topk_from_state, topk_from_state_masked)
+from repro.index.frontier import (FrontierState, bucket_width,
+                                  compact_frontier, survivors)
 from repro.kernels import ops as kops
 
 
@@ -216,6 +223,256 @@ def batched_race_topk(
 
 
 # ---------------------------------------------------------------------------
+# Epoch-fused driver (DESIGN.md §4): R rounds per launch, survivor-compacted
+# bookkeeping. Dense/rotated boxes only — the pulls are corpus-block reads.
+# ---------------------------------------------------------------------------
+
+
+def _dense_exact_theta(x, qs, sel, metric: str, d: int):
+    """Exact θ for selected slots: full-row distance / d (the Alg. 1 lazy
+    exact evaluation both dense drivers share). sel (Q, B) → (Q, B)."""
+    rows = x[sel]                                            # (Q, B, d_pad)
+    diff = rows - qs[:, None, :]
+    if metric == "l1":
+        dist = jnp.sum(jnp.abs(diff), -1)
+    else:
+        dist = jnp.sum(diff * diff, -1)
+    return dist / d
+
+
+def _frontier_ci(st: FrontierState, cfg: BMOConfig, log_term: float,
+                 prior_pool, prior_weight: float) -> jax.Array:
+    """Masked CI radii over the compacted frontier. The variance pool is
+    taken over *survivors* (not all alive arms as in the PR-1 driver) so the
+    radii — and therefore every accept/reject decision — are invariant under
+    frontier compaction, which only ever removes rejected entries."""
+    Q, W = st.mean.shape
+    if cfg.sigma is not None:
+        sig_sq = jnp.full((Q, W), float(cfg.sigma) ** 2, jnp.float32)
+    else:
+        pool_f = survivors(st).astype(jnp.float32)
+        num = jnp.sum(st.m2 * pool_f, 1) + prior_weight * prior_pool
+        den = (jnp.sum(jnp.maximum(st.count - 1.0, 0.0) * pool_f, 1)
+               + prior_weight)
+        global_var = num / jnp.maximum(den, 1.0)              # (Q,)
+        sig_sq = conf.empirical_sigma_sq_prior(
+            st.m2, st.count, 1e-12, global_var[:, None], st.prior,
+            prior_weight)
+    c = conf.hoeffding_radius_masked(sig_sq, st.count, log_term, st.valid)
+    return jnp.where(st.exact, 0.0, c)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block", "impl",
+                                             "prior_weight"))
+def _fused_init(x, qs, alive, prior_var, rng, *, cfg: BMOConfig, block: int,
+                impl: str, prior_weight: float):
+    """Full-width frontier after the paper's wide init: every alive arm of
+    every query gets ``init_pulls`` samples from ONE fused launch. Returns
+    (state, prior_pool) — the pool term is frozen here so it stays invariant
+    across compactions."""
+    n = x.shape[0]
+    Q = qs.shape[0]
+    nb = x.shape[1] // block
+    P = cfg.pulls_per_round
+    T0 = max(1, max(cfg.init_pulls, 2) // P) * P
+
+    alive_f = alive.astype(jnp.float32)
+    n_alive = jnp.sum(alive_f)
+    prior_pool = jnp.sum(prior_var * alive_f) / jnp.maximum(n_alive, 1.0)
+
+    rng, sub = jax.random.split(rng)
+    all_arms = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (Q, n))
+    blk = jax.random.randint(sub, (Q, n, T0), 0, nb)
+    stats = kops.fused_epoch_pull(x, qs, all_arms, blk, block=block,
+                                  metric=cfg.metric, impl=impl)
+    zeros = jnp.zeros((Q, n), jnp.float32)
+    mask = jnp.broadcast_to(alive_f[None], (Q, n))
+    mean, count, m2 = conf.welford_merge(
+        zeros, zeros, zeros, stats[..., 0], float(T0), stats[..., 1], mask)
+    st = FrontierState(
+        ids=all_arms,
+        mean=mean, count=count, m2=m2,
+        prior=jnp.broadcast_to(prior_var[None], (Q, n)),
+        exact=jnp.zeros((Q, n), bool),
+        accepted=jnp.zeros((Q, n), bool),
+        rejected=jnp.broadcast_to(~alive[None], (Q, n)),
+        valid=jnp.broadcast_to(alive[None], (Q, n)),
+        coord_ops=jnp.full((Q,), float(T0 * block)) * n_alive,
+        n_exact=jnp.zeros((Q,), jnp.int32),
+        rounds=jnp.zeros((Q,), jnp.int32),
+        done=jnp.zeros((Q,), bool),
+        rng=rng,
+    )
+    return st, prior_pool
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "block", "d", "impl", "eliminate", "prior_weight", "log_term",
+    "T"))
+def _fused_epoch_step(x, qs, st: FrontierState, prior_pool, *,
+                      cfg: BMOConfig, block: int, d: int, impl: str,
+                      eliminate: bool, prior_weight: float, log_term: float,
+                      T: int):
+    """One epoch: select B lowest-LCB candidates per query, pull each T
+    times in one fused launch, merge the on-chip Welford stats, lazily
+    exact-evaluate arms that crossed MAX_PULLS, then run acceptance ONCE.
+    Everything is O(Q·W) with W the current bucket width."""
+    Q, W = st.mean.shape
+    k = cfg.k
+    B = min(cfg.batch_arms, W)
+    nb = x.shape[1] // block
+    max_pulls = float(nb)
+    qi = jnp.arange(Q)[:, None]
+
+    ci = _frontier_ci(st, cfg, log_term, prior_pool, prior_weight)
+    need = (st.valid & ~st.accepted & ~st.rejected & ~st.exact
+            & ~st.done[:, None])
+
+    # ---- selection: per query, B lowest-LCB candidates -------------------
+    sel_score = jnp.where(need, st.mean - ci, INF)
+    _, sel = jax.lax.top_k(-sel_score, B)                    # (Q, B) positions
+    sel_valid = jnp.take_along_axis(need, sel, axis=1)
+    slot = jnp.take_along_axis(st.ids, sel, axis=1)
+    slot_safe = jnp.where(sel_valid, slot, 0)
+
+    # ---- one fused launch: T pulls per selected arm, reduced on-chip -----
+    rng, sub = jax.random.split(st.rng)
+    blk = jax.random.randint(sub, (Q, B, T), 0, nb)
+    stats = kops.fused_epoch_pull(x, qs, slot_safe, blk, block=block,
+                                  metric=cfg.metric, impl=impl)
+    cm = jnp.take_along_axis(st.mean, sel, axis=1)
+    cc = jnp.take_along_axis(st.count, sel, axis=1)
+    c2 = jnp.take_along_axis(st.m2, sel, axis=1)
+    nm, nc, n2 = conf.welford_merge(
+        cm, cc, c2, stats[..., 0], float(T), stats[..., 1],
+        sel_valid.astype(jnp.float32))
+    coord_ops = st.coord_ops + jnp.sum(sel_valid, 1) * float(T * block)
+
+    # ---- lazy exact evaluation for arms that crossed MAX_PULLS -----------
+    crossed = ((nc >= max_pulls) & sel_valid
+               & ~jnp.take_along_axis(st.exact, sel, axis=1))
+    exact_vals = jax.lax.cond(
+        jnp.any(crossed),
+        lambda s: _dense_exact_theta(x, qs, s, cfg.metric, d),
+        lambda s: jnp.zeros((Q, B), jnp.float32), slot_safe)
+    nm = jnp.where(crossed, exact_vals, nm)
+    mean = st.mean.at[qi, sel].set(nm)
+    count = st.count.at[qi, sel].set(nc)
+    m2 = st.m2.at[qi, sel].set(n2)
+    exact = st.exact.at[qi, sel].set(
+        jnp.take_along_axis(st.exact, sel, axis=1) | crossed)
+    coord_ops = coord_ops + jnp.sum(crossed, 1) * float(d)
+
+    st2 = st._replace(mean=mean, count=count, m2=m2, exact=exact,
+                      coord_ops=coord_ops,
+                      n_exact=st.n_exact + jnp.sum(crossed, 1, dtype=jnp.int32),
+                      rng=rng)
+
+    # ---- acceptance / rejection, ONCE per epoch --------------------------
+    ci2 = _frontier_ci(st2, cfg, log_term, prior_pool, prior_weight)
+    accept_new, rejected = jax.vmap(
+        lambda m, c, e, a, r, v: acceptance_step_masked(
+            m, c, e, a, r, v, k, epsilon=cfg.epsilon, eliminate=eliminate)
+    )(st2.mean, ci2, st2.exact, st2.accepted, st2.rejected, st2.valid)
+    accepted = st2.accepted | accept_new
+    frozen = st.done[:, None]
+    accepted = jnp.where(frozen, st.accepted, accepted)
+    rejected = jnp.where(frozen, st.rejected, rejected)
+
+    done = st.done | (jnp.sum(accepted, 1) >= k)
+    # a finished query owes its unresolved candidates nothing: retire them
+    # so its survivor set is exactly its k accepted arms — without this a
+    # done query could freeze a large candidate set and either pin the
+    # bucket width or (worse) have compaction truncate it, breaking the
+    # compaction-invariance guarantee.
+    rejected = jnp.where(done[:, None], rejected | ~accepted, rejected)
+    R = max(1, T // cfg.pulls_per_round)
+    rounds = jnp.where(st.done, st.rounds, st.rounds + R)
+    st2 = st2._replace(accepted=accepted, rejected=rejected,
+                       rounds=rounds, done=done)
+    n_surv = jnp.sum((st2.valid & ~st2.rejected & ~st2.done[:, None]), 1)
+    return st2, n_surv, done
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "log_term",
+                                             "prior_weight"))
+def _fused_finalize(st: FrontierState, prior_pool, *, cfg: BMOConfig,
+                    log_term: float, prior_weight: float):
+    ci = _frontier_ci(st, cfg, log_term, prior_pool, prior_weight)
+    topk, topk_vals = jax.vmap(
+        lambda m, c, a, r, v, i: topk_from_state_masked(
+            m, c, a, r, v, i, cfg.k)
+    )(st.mean, ci, st.accepted, st.rejected, st.valid, st.ids)
+    return topk, topk_vals, st.n_exact
+
+
+def fused_race_topk(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
+                    block: int, d: int, impl: str, eliminate: bool,
+                    prior_weight: float, compaction: bool = True,
+                    _return_state: bool = False):
+    """Epoch-fused, survivor-compacted dense/rotated race (DESIGN.md §4).
+
+    Two-level loop: the *host* iterates epochs (re-jitted per bucket width —
+    a bounded, ~log₂ n-sized specialization cache), each epoch running R
+    fused pull-rounds in one kernel launch and one acceptance pass. Pulls
+    per epoch are reallocated adaptively: as the frontier shrinks by c×, R
+    scales up by c× (capped at MAX_PULLS worth), so stragglers drain in a
+    handful of launches instead of hundreds of rounds.
+
+    ``compaction=False`` keeps the full-width buffers (used by the
+    invariance tests — decisions must match exactly).
+    ``_return_state`` additionally returns the final FrontierState.
+    """
+    n = x.shape[0]
+    Q = qs.shape[0]
+    k = cfg.k
+    P = cfg.pulls_per_round
+    nb = x.shape[1] // block
+    B0 = min(cfg.batch_arms, n)
+    log_term = float(np.log(2.0 / conf.delta_prime(cfg.delta, n, nb)))
+    max_rounds = cfg.max_rounds or int(
+        2 * math.ceil(n * nb / max(B0 * P, 1)) + n + 16)
+    R0 = max(cfg.epoch_rounds, 1)
+    R_cap = max(1, -(-nb // P))          # one epoch never overshoots exact
+    floor_w = min(n, bucket_width(max(B0, 2 * k, 32), floor=1, current=n))
+
+    st, prior_pool = _fused_init(x, qs, alive, prior_var, rng, cfg=cfg,
+                                 block=block, impl=impl,
+                                 prior_weight=prior_weight)
+    W0 = st.width
+    rounds_spent = 0
+    n_surv = np.full((Q,), n)
+    done = np.zeros((Q,), bool)
+    while not done.all() and rounds_spent < max_rounds:
+        # adaptive reallocation (Neufeld et al. style): as the candidate
+        # frontier shrinks by c×, fuse c× more rounds into the next launch —
+        # the same pull budget per epoch, concentrated on the survivors.
+        # Keyed off the *survivor count*, not the buffer width, so the pull
+        # schedule is identical with compaction on or off (tested).
+        need = int(n_surv[~done].max(initial=1))
+        if compaction:
+            W_new = bucket_width(need, floor=floor_w, current=st.width)
+            if W_new < st.width:
+                st = compact_frontier(st, W_new=W_new)
+        R = min(R0 * max(1, W0 // max(need, 1)), R_cap)
+        st, n_surv_d, done_d = _fused_epoch_step(
+            x, qs, st, prior_pool, cfg=cfg, block=block, d=d, impl=impl,
+            eliminate=eliminate, prior_weight=prior_weight,
+            log_term=log_term, T=R * P)
+        rounds_spent += R
+        n_surv = np.asarray(n_surv_d)
+        done = np.asarray(done_d)
+
+    topk, topk_vals, n_exact = _fused_finalize(
+        st, prior_pool, cfg=cfg, log_term=log_term, prior_weight=prior_weight)
+    res = KNNResult(indices=topk, values=topk_vals, coord_ops=st.coord_ops,
+                    rounds=st.rounds, n_exact=n_exact)
+    if _return_state:
+        return res, st
+    return res
+
+
+# ---------------------------------------------------------------------------
 # IndexStore front-ends
 # ---------------------------------------------------------------------------
 
@@ -235,13 +492,7 @@ def _dense_index_knn(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
                                      metric=cfg.metric, impl=impl)
 
     def exact(sel):
-        rows = x[sel]                                        # (Q, B, d_pad)
-        diff = rows - qs[:, None, :]
-        if cfg.metric == "l1":
-            dist = jnp.sum(jnp.abs(diff), -1)
-        else:
-            dist = jnp.sum(diff * diff, -1)
-        return dist / d
+        return _dense_exact_theta(x, qs, sel, cfg.metric, d)
 
     return batched_race_topk(
         pull, exact, n=n, Q=Q,
@@ -289,25 +540,41 @@ def _sparse_index_knn(indices, values, nnz, alive, prior_var,
 
 
 def index_knn(store, queries, rng: jax.Array, *, k=None, impl: str = "auto",
-              eliminate: bool = True, warm_start: bool = True) -> KNNResult:
+              eliminate: bool = True, warm_start: bool = True,
+              mode: str = "auto") -> KNNResult:
     """Batched k-NN against an IndexStore (slot indices; tombstones are
     excluded). Drop-in for ``bmo_nn.knn`` on the serving path — same
-    KNNResult fields, one batched race instead of Q sequential ones."""
+    KNNResult fields, one batched race instead of Q sequential ones.
+
+    ``mode``: "fused" — the epoch-fused, survivor-compacted driver
+    (DESIGN.md §4; dense/rotated only); "rounds" — the PR-1 one-launch-per-
+    round driver; "auto" — fused where available, rounds for sparse.
+    """
     cfg = store.cfg if k is None else dataclasses.replace(store.cfg, k=k)
     n_live = store.n_live
     if cfg.k > n_live:
         raise ValueError(
             f"k={cfg.k} exceeds the index's {n_live} live slots — "
             "tombstoned slots can never be returned")
+    if mode not in ("auto", "fused", "rounds"):
+        raise ValueError(f"unknown mode {mode!r}")
     w = store.prior_weight if warm_start else 0.0
     if store.kind == "sparse":
+        if mode == "fused":
+            raise ValueError("the fused epoch driver pulls corpus blocks — "
+                             "sparse boxes race on the per-round driver")
         q_idx, q_val, q_nnz = queries
         return _sparse_index_knn(
             store.indices, store.values, store.nnz, store.alive,
             store.prior_var, q_idx, q_val, q_nnz, rng,
             cfg=cfg, d=store.d, eliminate=eliminate, prior_weight=w)
     qs = store.prepare_queries(queries)
-    return _dense_index_knn(
+    if mode == "rounds":
+        return _dense_index_knn(
+            store.x, qs, store.alive, store.prior_var, rng,
+            cfg=cfg, block=store.block, d=store.d, impl=impl,
+            eliminate=eliminate, prior_weight=w)
+    return fused_race_topk(
         store.x, qs, store.alive, store.prior_var, rng,
         cfg=cfg, block=store.block, d=store.d, impl=impl,
         eliminate=eliminate, prior_weight=w)

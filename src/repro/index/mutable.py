@@ -17,7 +17,7 @@ insert/delete traffic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -112,6 +112,32 @@ def delete(store: IndexStore, slot_ids) -> IndexStore:
     """Tombstone slots (O(1)); data stays until ``compact``."""
     sl = jnp.asarray(np.atleast_1d(np.asarray(slot_ids, np.int64)))
     return dataclasses.replace(store, alive=store.alive.at[sl].set(False))
+
+
+def tombstone_fraction(store: IndexStore) -> float:
+    """Fraction of capacity occupied by dead slots (tombstones + never-used
+    tail): the state every race still pays a mask for."""
+    return 1.0 - store.n_live / max(store.capacity, 1)
+
+
+def maybe_compact(store: IndexStore, *, threshold: float = 0.5,
+                  ) -> Tuple[IndexStore, Optional[np.ndarray]]:
+    """Auto-compaction policy (ROADMAP): rebuild the dense slot layout once
+    the tombstone fraction crosses ``threshold``. Returns
+    ``(store, old_ids)`` — ``old_ids`` is None when no compaction ran, else
+    the old→new slot map for payload reindexing (see ``compact``).
+
+    Only worthwhile when it actually shrinks capacity: with a power-of-two
+    slot layout, dropping tombstones pays off (smaller race buffers, a fresh
+    jit specialization) only once live < capacity/2, so thresholds below 0.5
+    would trigger rebuilds into the *same* capacity — the shrink check runs
+    on plain ints BEFORE the O(capacity·d) gather, so an over-eager
+    threshold costs nothing per call. Callers amortize this into mutation
+    traffic (serve/engine.py folds it into the per-step index append)."""
+    if (store.capacity and tombstone_fraction(store) > threshold
+            and next_pow2(max(store.n_live, 1)) < store.capacity):
+        return compact(store)
+    return store, None
 
 
 def compact(store: IndexStore) -> Tuple[IndexStore, np.ndarray]:

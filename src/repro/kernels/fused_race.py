@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: the *round-fused* BMO racing pull (DESIGN.md §4).
+
+``block_pull_multi`` launches once per racing round: (Q, B, P) programs, each
+fetching one corpus block, with all selection/CI bookkeeping back on the host
+side of the launch. At serving scale the launch+bookkeeping overhead per
+round dominates once most arms are rejected. This kernel fuses a whole
+*epoch* — R rounds × P pulls — into one launch:
+
+  grid = (Q, B): one program per (query, selected arm). Each program streams
+  its arm's T = R·P sampled corpus blocks HBM→VMEM with *double-buffered*
+  async DMA (the next block is in flight while the current one reduces
+  against the query row) and folds every pulled block-mean distance into a
+  per-arm Welford accumulator (count is the static T; mean/M2 live in VMEM
+  scratch). Output is (Q, B, 2): the epoch's (mean, M2) batch statistics,
+  merged into the running per-arm state by ``confidence.welford_merge``.
+
+HBM traffic per program is exactly T·block elements of corpus plus one query
+row (reused across the B inner grid steps — the index map pins it per q, so
+Pallas's pipeline keeps it resident). Acceptance/selection run once per
+epoch at the launch boundary, cutting host-side (Q, n) bookkeeping and
+launch count by R× — see index/frontier.py for the other half of the story.
+
+The (arm, block) index operands are scalar-prefetched so the DMA source
+addresses are known before the body runs; corpus stays in ANY/HBM memory
+space and is never materialized in VMEM beyond the two streaming slots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific grid spec (scalar prefetch); interpret mode supports it
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+N_BUF = 2  # double buffering: one slot reduces while the other streams
+
+
+def _fused_epoch_kernel(arm_ref, blk_ref, x_ref, q_ref, o_ref, buf, sem, *,
+                        block: int, metric: str):
+    qid = pl.program_id(0)
+    b = pl.program_id(1)
+    arm = arm_ref[qid, b]
+    T = blk_ref.shape[2]
+
+    def dma(slot, t):
+        blk = blk_ref[qid, b, t]
+        return pltpu.make_async_copy(
+            x_ref.at[arm, pl.ds(blk * block, block)],
+            buf.at[slot, 0],
+            sem.at[slot],
+        )
+
+    dma(0, 0).start()
+
+    def body(t, carry):
+        mean, m2 = carry
+        cur = jax.lax.rem(t, N_BUF)
+
+        # stream the next block while the current one is reduced
+        @pl.when(t + 1 < T)
+        def _():
+            dma(jax.lax.rem(t + 1, N_BUF), t + 1).start()
+
+        dma(cur, t).wait()
+        blk = blk_ref[qid, b, t]
+        qv = q_ref[0, pl.ds(blk * block, block)].astype(jnp.float32)
+        diff = buf[cur, 0, :].astype(jnp.float32) - qv
+        if metric == "l1":
+            v = jnp.sum(jnp.abs(diff)) / block
+        else:
+            v = jnp.sum(diff * diff) / block
+
+        # running Welford over the epoch's T pulls
+        delta = v - mean
+        mean = mean + delta / (t + 1).astype(jnp.float32)
+        m2 = m2 + delta * (v - mean)
+        return mean, m2
+
+    mean, m2 = jax.lax.fori_loop(0, T, body, (0.0, 0.0))
+    o_ref[0, 0, 0] = mean
+    o_ref[0, 0, 1] = m2
+
+
+def fused_epoch_pull_pallas(x: jax.Array, qs: jax.Array, arm_idx: jax.Array,
+                            blk_idx: jax.Array, *, block: int,
+                            metric: str = "l2",
+                            interpret: bool = False) -> jax.Array:
+    """x (n, d_pad); qs (Q, d_pad); arm_idx (Q, B) int32; blk_idx (Q, B, T)
+    int32, T = rounds·pulls_per_round.  Returns (Q, B, 2) fp32: per-arm
+    (mean, M2) Welford statistics of the T pulled block distances."""
+    n, d_pad = x.shape
+    Q, B, T = blk_idx.shape
+    assert d_pad % block == 0 and arm_idx.shape == (Q, B)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Q, B),
+        in_specs=[
+            # corpus stays off-chip; blocks are DMA'd manually
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            # one query row per program, constant across the B inner steps
+            pl.BlockSpec((1, d_pad), lambda q, i, arm, blk: (q, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 2), lambda q, i, arm, blk: (q, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((N_BUF, 1, block), x.dtype),
+            pltpu.SemaphoreType.DMA((N_BUF,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_epoch_kernel, block=block, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, B, 2), jnp.float32),
+        interpret=interpret,
+    )(arm_idx.astype(jnp.int32), blk_idx.astype(jnp.int32), x, qs)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as kref
 from repro.kernels.block_pull import block_pull_multi_pallas, block_pull_pallas
+from repro.kernels.fused_race import fused_epoch_pull_pallas
 from repro.kernels.fwht import fwht_pallas
 from repro.kernels.pairwise_dist import pairwise_dist_pallas
 
@@ -54,6 +55,19 @@ def block_pull_multi(x, qs, arm_idx, blk_idx, *, block: int, metric: str = "l2",
         return kref.block_pull_multi_ref(x, qs, arm_idx, blk_idx, block, metric)
     return block_pull_multi_pallas(x, qs, arm_idx, blk_idx, block=block,
                                    metric=metric, interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "metric", "impl"))
+def fused_epoch_pull(x, qs, arm_idx, blk_idx, *, block: int,
+                     metric: str = "l2", impl: str = "auto"):
+    """Round-fused epoch pull: arm_idx (Q, B), blk_idx (Q, B, R·P) →
+    (Q, B, 2) per-arm (mean, M2) Welford batch statistics."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return kref.fused_epoch_pull_ref(x, qs, arm_idx, blk_idx, block, metric)
+    return fused_epoch_pull_pallas(x, qs, arm_idx, blk_idx, block=block,
+                                   metric=metric,
+                                   interpret=(impl == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "impl"))

@@ -67,6 +67,19 @@ def block_pull_multi_ref(x: jax.Array, qs: jax.Array, arm_idx: jax.Array,
     return (v / block).astype(jnp.float32)
 
 
+def fused_epoch_pull_ref(x: jax.Array, qs: jax.Array, arm_idx: jax.Array,
+                         blk_idx: jax.Array, block: int,
+                         metric: str = "l2") -> jax.Array:
+    """Round-fused epoch pull (kernels/fused_race.py): T = R·P block pulls
+    per selected arm, reduced to per-arm Welford batch statistics.
+    x (n, d_pad); qs (Q, d_pad); arm_idx (Q, B); blk_idx (Q, B, T).
+    Returns (Q, B, 2) fp32: (mean, M2) of each arm's T pulled values."""
+    vals = block_pull_multi_ref(x, qs, arm_idx, blk_idx, block, metric)
+    mean = jnp.mean(vals, axis=-1)
+    m2 = jnp.sum(jnp.square(vals - mean[..., None]), axis=-1)
+    return jnp.stack([mean, m2], axis=-1)
+
+
 def pairwise_dist_ref(qs: jax.Array, x: jax.Array, metric: str = "l2",
                       chunk: int = 2048) -> jax.Array:
     """Exact distances. qs (Q, d), x (n, d) -> (Q, n) SUM-form distances

@@ -113,7 +113,7 @@ def _moe_local(cfg: ModelConfig, p: dict, x2d: jax.Array, *,
     frac = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
     aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
 
-    cap = _capacity(T, k, E)
+    cap = _capacity(T, k, E, factor=getattr(cfg, "moe_capacity_factor", 1.25))
     flat_e = top_i.reshape(-1)                      # (T*k,)
     flat_t = jnp.repeat(jnp.arange(T), k)
     flat_w = top_w.reshape(-1)

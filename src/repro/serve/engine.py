@@ -17,6 +17,7 @@ behaviour.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional
 
@@ -25,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import BMOConfig, ParallelPlan
+from repro.core.datasets import next_pow2
 from repro.serve.steps import init_cache, make_decode_step, make_prefill_step
 
 
@@ -33,6 +35,52 @@ class KNNLMConfig:
     lam: float = 0.25          # interpolation weight toward the kNN dist
     temperature: float = 1.0
     bmo: BMOConfig = dataclasses.field(default_factory=lambda: BMOConfig(k=8))
+    cache_size: int = 256      # query LRU entries (0 disables)
+    compact_threshold: float = 0.5  # auto-compact when tombstones cross this
+                                    # (>=1 disables)
+
+
+class QueryCache:
+    """LRU of query-hash → cached top-k (ROADMAP: serving traffic repeats
+    queries). Keys are the raw query bytes — only *exact* repeats hit, which
+    is the safe contract for a δ-PAC result (a near-repeat query gets a
+    fresh race; CI warm-starts for near-repeats stay future work). Any index
+    mutation invalidates the whole cache: slot ids and the live set both
+    shift under insert/delete/compact. IndexStores are immutable (every
+    mutation builds a new instance), so the engine detects mutation by
+    identity at lookup time — external ``engine.index = delete(...)``-style
+    updates are caught too, not just the engine's own appends."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self._od: collections.OrderedDict = collections.OrderedDict()
+
+    @staticmethod
+    def key(row: np.ndarray) -> bytes:
+        return np.ascontiguousarray(row, np.float32).tobytes()
+
+    def get(self, key: bytes):
+        hit = self._od.get(key)
+        if hit is not None:
+            self._od.move_to_end(key)
+            self.hits += 1
+            return hit
+        self.misses += 1
+        return None
+
+    def put(self, key: bytes, value) -> None:
+        self._od[key] = value
+        self._od.move_to_end(key)
+        while len(self._od) > self.capacity:
+            self._od.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._od)
+
+    def clear(self) -> None:
+        self._od.clear()
 
 
 class ServeEngine:
@@ -57,6 +105,12 @@ class ServeEngine:
         self.index = None
         self.index_append = index_append
         self._next_ids = None           # (capacity,) slot-aligned payload
+        self.query_cache = (QueryCache(knn_lm.cache_size)
+                            if knn_lm is not None and knn_lm.cache_size > 0
+                            else None)
+        self._cache_index = None        # IndexStore the cache was filled from
+        self._stats = {"knn_races": 0, "knn_raced_queries": 0,
+                       "index_compactions": 0}
         if knn_lm is not None and (index is not None or datastore is not None):
             from repro.index import build_index
             next_ids = None
@@ -98,26 +152,93 @@ class ServeEngine:
         self.cache = init_cache(model, batch_size, max_seq)
 
     # -- kNN-LM hook (the paper's technique in the serving path) ------------
-    def _knn_logits(self, hidden, rng):
+    @property
+    def stats(self) -> dict:
+        """Serving counters: query-cache hits/misses, races run, raced
+        queries (cache misses that actually paid a race), compactions."""
+        out = dict(self._stats)
+        if self.query_cache is not None:
+            out["knn_cache_hits"] = self.query_cache.hits
+            out["knn_cache_misses"] = self.query_cache.misses
+            out["knn_cache_entries"] = len(self.query_cache)
+        return out
+
+    def _knn_topk(self, hidden, rng):
+        """Top-k per row through the query LRU: only cache-missing rows race
+        (padded to a power-of-two sub-batch so the jitted executables stay
+        warm), hits are served from memory at zero coordinate-ops."""
         from repro.index import index_knn
-        res = index_knn(self.index, hidden, rng)        # one batched race
+        B = hidden.shape[0]
+        k = self.index.cfg.k
+        if self.query_cache is None:    # no cache: race the batch directly
+            res = index_knn(self.index, jnp.asarray(hidden), rng)
+            self._stats["knn_races"] += 1
+            self._stats["knn_raced_queries"] += B
+            return (np.asarray(res.indices), np.asarray(res.values),
+                    float(np.asarray(res.coord_ops).sum()))
+        hid = np.asarray(hidden, np.float32)
+        idx = np.zeros((B, k), np.int32)
+        vals = np.zeros((B, k), np.float32)
+        if self._cache_index is not self.index:
+            self.query_cache.clear()    # index mutated since the cache filled
+            self._cache_index = self.index
+        miss, keys = [], [QueryCache.key(row) for row in hid]
+        for i in range(B):
+            got = self.query_cache.get(keys[i])
+            if got is None:
+                miss.append(i)
+            else:
+                idx[i], vals[i] = got
+        ops = 0.0
+        if miss:
+            sub = hid[miss]
+            pad = next_pow2(len(miss)) - len(miss)
+            if pad:
+                sub = np.concatenate([sub, np.repeat(sub[:1], pad, 0)], 0)
+            res = index_knn(self.index, jnp.asarray(sub), rng)
+            r_idx = np.asarray(res.indices)
+            r_vals = np.asarray(res.values)
+            for j, i in enumerate(miss):
+                idx[i], vals[i] = r_idx[j], r_vals[j]
+                self.query_cache.put(keys[i], (r_idx[j], r_vals[j]))
+            ops = float(np.asarray(res.coord_ops)[: len(miss)].sum())
+            self._stats["knn_races"] += 1
+            self._stats["knn_raced_queries"] += len(miss)
+        return idx, vals, ops
+
+    def _knn_logits(self, hidden, rng):
+        idx, vals, ops = self._knn_topk(hidden, rng)
         V = self.model.cfg.vocab_size
         # distance-weighted vote over retrieved next-tokens
-        w = jax.nn.softmax(-jnp.asarray(res.values) / self.knn_lm.temperature, axis=-1)
-        toks = jnp.asarray(self._next_ids)[res.indices]   # (B, k)
+        w = jax.nn.softmax(-jnp.asarray(vals) / self.knn_lm.temperature, axis=-1)
+        toks = jnp.asarray(self._next_ids)[jnp.asarray(idx)]   # (B, k)
         knn_probs = jnp.zeros((hidden.shape[0], V), jnp.float32)
         knn_probs = knn_probs.at[jnp.arange(hidden.shape[0])[:, None], toks].add(w)
-        return jnp.log(knn_probs + 1e-9), res.coord_ops
+        return jnp.log(knn_probs + 1e-9), ops
 
     def _append_to_index(self, hidden, tok):
-        """Fold this step's (hidden, next-token) pairs into the live index."""
-        from repro.index import insert
+        """Fold this step's (hidden, next-token) pairs into the live index;
+        mutation shifts the live set, so cached top-k is invalidated, and
+        tombstone debt is amortized here (ROADMAP: auto-compaction folded
+        into decode steps)."""
+        from repro.index import insert, maybe_compact
         self.index, slots = insert(self.index, np.asarray(hidden))
         if self.index.capacity > len(self._next_ids):
             grown = np.zeros((self.index.capacity,), np.int32)
             grown[: len(self._next_ids)] = self._next_ids
             self._next_ids = grown
         self._next_ids[slots] = np.asarray(tok)[:, 0]
+        self.index, old_ids = maybe_compact(
+            self.index, threshold=self.knn_lm.compact_threshold)
+        if old_ids is not None:
+            remapped = np.zeros((self.index.capacity,), np.int32)
+            live = old_ids >= 0
+            remapped[live] = self._next_ids[old_ids[live]]
+            self._next_ids = remapped
+            self._stats["index_compactions"] += 1
+        if self.query_cache is not None:
+            self.query_cache.clear()
+            self._cache_index = self.index  # release the pre-mutation store
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int, rng=None):
         """prompts (B, S0) int32 -> (B, max_new_tokens) int32 greedy tokens.

@@ -12,7 +12,8 @@ from repro.core import bmo_nn, oracle
 from repro.core.datasets import SparseDataset
 from repro.data.synthetic import clustered_sparse, make_knn_benchmark_data
 from repro.index import (IndexStore, build_index, compact, delete, index_knn,
-                         insert, load_index, save_index)
+                         insert, load_index, maybe_compact, save_index)
+from repro.index.batched_race import fused_race_topk
 
 
 def _sets(idx):
@@ -77,6 +78,91 @@ def test_batched_respects_k_override_and_cold_start():
                     warm_start=False)
     assert res.indices.shape == (2, 2)
     assert _sets(res.indices) == _sets(ex.indices)
+
+
+# ---------------------------------------------------------------------------
+# epoch-fused driver (DESIGN.md §4): parity + frontier-compaction invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rotate", [False, True])
+def test_fused_vs_rounds_driver_parity(rotate):
+    """The epoch-fused survivor-compacted driver and the PR-1 per-round
+    driver certify the same top-k (both exact w.h.p.) on dense/rotated."""
+    corpus, queries = make_knn_benchmark_data("dense", 500, 1024, 5, seed=21)
+    cfg = BMOConfig(k=3, delta=0.01, block=64, batch_arms=16,
+                    pulls_per_round=2, metric="l2", rotate=rotate)
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    fused = index_knn(store, queries, jax.random.PRNGKey(1), mode="fused")
+    rounds = index_knn(store, queries, jax.random.PRNGKey(1), mode="rounds")
+    ex = oracle.exact_knn(corpus, queries, 3, "l2")
+    assert _sets(fused.indices) == _sets(rounds.indices) == _sets(ex.indices)
+    np.testing.assert_allclose(np.asarray(fused.values),
+                               np.asarray(rounds.values), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_mode_rejected_for_sparse():
+    corpus = clustered_sparse(50, 256, seed=9)
+    cfg = BMOConfig(k=2, delta=0.05, block=1, batch_arms=8, pulls_per_round=8,
+                    init_pulls=16, metric="l1", sparse=True)
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    ds = SparseDataset.build(corpus[:1])
+    with pytest.raises(ValueError, match="sparse"):
+        index_knn(store, (ds.indices, ds.values, ds.nnz),
+                  jax.random.PRNGKey(1), mode="fused")
+
+
+def test_frontier_compaction_invariant():
+    """Compaction only drops rejected/padding entries: the race must make
+    *identical* decisions with and without it — same accepted ids, same
+    surviving candidate ids, same top-k, same rounds and coordinate-ops."""
+    corpus, queries = make_knn_benchmark_data("dense", 300, 1024, 4, seed=33)
+    cfg = BMOConfig(k=3, delta=0.01, block=64, batch_arms=16,
+                    pulls_per_round=2, metric="l2")
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    qs = store.prepare_queries(queries)
+    kw = dict(cfg=cfg, block=store.block, d=store.d, impl="auto",
+              eliminate=True, prior_weight=store.prior_weight,
+              _return_state=True)
+    res_c, st_c = fused_race_topk(store.x, qs, store.alive, store.prior_var,
+                                  jax.random.PRNGKey(5), compaction=True, **kw)
+    res_u, st_u = fused_race_topk(store.x, qs, store.alive, store.prior_var,
+                                  jax.random.PRNGKey(5), compaction=False, **kw)
+    assert st_c.width < st_u.width  # compaction actually shrank the buffers
+
+    def id_sets(st, mask):
+        m, ids = np.asarray(mask), np.asarray(st.ids)
+        return [set(ids[q][m[q]].tolist()) for q in range(ids.shape[0])]
+
+    acc_c = id_sets(st_c, st_c.accepted & st_c.valid)
+    acc_u = id_sets(st_u, st_u.accepted & st_u.valid)
+    assert acc_c == acc_u
+    surv_c = id_sets(st_c, st_c.valid & ~st_c.rejected & ~st_c.accepted)
+    surv_u = id_sets(st_u, st_u.valid & ~st_u.rejected & ~st_u.accepted)
+    assert surv_c == surv_u
+    np.testing.assert_array_equal(np.asarray(res_c.indices),
+                                  np.asarray(res_u.indices))
+    np.testing.assert_allclose(np.asarray(res_c.values),
+                               np.asarray(res_u.values), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(res_c.rounds),
+                                  np.asarray(res_u.rounds))
+    np.testing.assert_array_equal(np.asarray(res_c.n_exact),
+                                  np.asarray(res_u.n_exact))
+    np.testing.assert_allclose(np.asarray(res_c.coord_ops),
+                               np.asarray(res_u.coord_ops), rtol=1e-6)
+
+
+def test_fused_driver_respects_tombstones_and_k_override():
+    corpus, queries = make_knn_benchmark_data("dense", 200, 512, 3, seed=12)
+    cfg = BMOConfig(k=4, delta=0.01, block=64, batch_arms=16, metric="l2")
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    ex = oracle.exact_knn(corpus, queries, 4, "l2")
+    kill = np.asarray(ex.indices[0])[:2].tolist()
+    store = delete(store, kill)
+    res = index_knn(store, queries, jax.random.PRNGKey(2), k=2, mode="fused")
+    assert res.indices.shape == (3, 2)
+    for row in _sets(res.indices):
+        assert not (row & set(kill))
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +236,27 @@ def test_mutation_growth_and_widen_sparse():
     res = index_knn(store, (ds_q.indices, ds_q.values, ds_q.nnz),
                     jax.random.PRNGKey(1))
     assert int(np.asarray(res.indices[0])[0]) == int(slots[0])
+
+
+def test_maybe_compact_threshold_policy():
+    """Auto-compaction (ROADMAP): no-op below the tombstone threshold, a
+    real capacity-shrinking compact above it, old→new map returned."""
+    corpus, queries = make_knn_benchmark_data("dense", 120, 256, 2, seed=17)
+    cfg = BMOConfig(k=2, delta=0.05, block=32, batch_arms=16, metric="l2")
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))   # cap 128
+    same, old_ids = maybe_compact(store, threshold=0.5)
+    assert old_ids is None and same is store                  # 8/128 dead
+
+    store = delete(store, list(range(60, 120)))               # 68/128 dead
+    compacted, old_ids = maybe_compact(store, threshold=0.5)
+    assert old_ids is not None
+    assert compacted.capacity == 64 and compacted.n_live == 60
+    # results identical through the slot map
+    want = index_knn(store, queries, jax.random.PRNGKey(3))
+    got = index_knn(compacted, queries, jax.random.PRNGKey(3))
+    remapped = [set(int(old_ids[j]) for j in row)
+                for row in np.asarray(got.indices)]
+    assert remapped == _sets(want.indices)
 
 
 # ---------------------------------------------------------------------------

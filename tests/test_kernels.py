@@ -122,6 +122,59 @@ def test_block_pull_full_coverage_equals_exact(rng):
 
 
 # ---------------------------------------------------------------------------
+# fused_epoch_pull (round-fused racing kernel, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Q,n,d,block,B,T", [
+    (3, 16, 256, 128, 4, 6),     # T = R·P for (R, P) = (3, 2)
+    (5, 32, 512, 64, 8, 2),      # single-round epoch (R = 1)
+    (2, 8, 1024, 256, 6, 12),
+    (4, 64, 384, 128, 16, 9),    # odd T, d_pad not a power of two
+])
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+def test_fused_epoch_pull_matches_ref(rng, Q, n, d, block, B, T, metric):
+    X = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    qs = jnp.asarray(rng.normal(size=(Q, d)).astype(np.float32))
+    arm = jnp.asarray(rng.integers(0, n, (Q, B)), jnp.int32)
+    blk = jnp.asarray(rng.integers(0, d // block, (Q, B, T)), jnp.int32)
+    got = ops.fused_epoch_pull(X, qs, arm, blk, block=block, metric=metric,
+                               impl="interpret")
+    want = ops.fused_epoch_pull(X, qs, arm, blk, block=block, metric=metric,
+                                impl="ref")
+    assert got.shape == (Q, B, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_fused_epoch_pull_stats_match_raw_pulls(rng):
+    """The kernel's on-chip (mean, M2) reduction over T pulls must merge
+    into running state exactly like feeding the T raw per-round pull values
+    through the per-round Welford update."""
+    from repro.core import confidence as conf
+    Q, n, d, block, B, T = 2, 16, 512, 64, 4, 8
+    X = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    qs = jnp.asarray(rng.normal(size=(Q, d)).astype(np.float32))
+    arm = jnp.asarray(rng.integers(0, n, (Q, B)), jnp.int32)
+    blk = jnp.asarray(rng.integers(0, d // block, (Q, B, T)), jnp.int32)
+    raw = ops.block_pull_multi(X, qs, arm, blk, block=block, impl="ref")
+    stats = ops.fused_epoch_pull(X, qs, arm, blk, block=block,
+                                 impl="interpret")
+
+    mean0 = jnp.asarray(rng.normal(size=(Q * B,)).astype(np.float32))
+    count0 = jnp.asarray(rng.integers(2, 10, (Q * B,)).astype(np.float32))
+    m20 = jnp.abs(jnp.asarray(rng.normal(size=(Q * B,)).astype(np.float32)))
+    mask = jnp.ones((Q * B,), jnp.float32)
+    want = conf.welford_batch_update(mean0, count0, m20,
+                                     raw.reshape(Q * B, T), mask)
+    got = conf.welford_merge(mean0, count0, m20,
+                             stats[..., 0].reshape(-1), float(T),
+                             stats[..., 1].reshape(-1), mask)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # pairwise_dist
 # ---------------------------------------------------------------------------
 

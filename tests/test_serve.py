@@ -75,3 +75,72 @@ def test_knn_lm_hook_runs_and_counts_ops():
     out, retrieval_ops = engine.generate(prompts, 4)
     assert out.shape == (2, 4)
     assert retrieval_ops > 0  # BMO retrieval actually sampled coordinates
+
+
+def test_query_cache_serves_repeats_for_free():
+    """Repeat queries hit the LRU: zero coordinate-ops, identical top-k,
+    counters surfaced in engine stats (ROADMAP: query cache)."""
+    engine, cfg = _engine(knn=True)
+    hidden = jnp.asarray(np.random.default_rng(7).normal(
+        size=(2, cfg.d_model)).astype(np.float32))
+    logits1, ops1 = engine._knn_logits(hidden, jax.random.PRNGKey(0))
+    assert ops1 > 0
+    st = engine.stats
+    assert st["knn_cache_misses"] == 2 and st["knn_cache_hits"] == 0
+    assert st["knn_races"] == 1 and st["knn_raced_queries"] == 2
+
+    # different rng — must not matter, results come from the cache
+    logits2, ops2 = engine._knn_logits(hidden, jax.random.PRNGKey(9))
+    assert ops2 == 0.0
+    st = engine.stats
+    assert st["knn_cache_hits"] == 2 and st["knn_races"] == 1
+    np.testing.assert_array_equal(np.asarray(logits1), np.asarray(logits2))
+
+    # partial repeat: one cached row, one new row → only the miss races
+    hidden2 = jnp.concatenate([hidden[:1], hidden[1:] + 1.0], axis=0)
+    _, ops3 = engine._knn_logits(hidden2, jax.random.PRNGKey(1))
+    assert ops3 > 0
+    st = engine.stats
+    assert st["knn_cache_hits"] == 3 and st["knn_raced_queries"] == 3
+
+    # EXTERNAL mutation (not via the engine's append) must invalidate too:
+    # IndexStores are immutable, so the engine detects the swap by identity
+    from repro.index import delete as index_delete, index_knn
+    top0 = int(np.asarray(index_knn(engine.index, hidden[:1],
+                                    jax.random.PRNGKey(2)).indices[0, 0]))
+    engine.index = index_delete(engine.index, [top0])
+    _, ops4 = engine._knn_logits(hidden, jax.random.PRNGKey(2))
+    assert ops4 > 0                       # raced fresh — no stale cache hit
+    res = index_knn(engine.index, hidden[:1], jax.random.PRNGKey(3))
+    assert top0 not in set(np.asarray(res.indices[0]).tolist())
+
+
+def test_index_append_invalidates_cache_and_auto_compacts():
+    """Decode-time appends invalidate cached top-k; tombstone debt crossing
+    the threshold triggers auto-compaction with payload remapping."""
+    from repro.index import delete as index_delete
+    engine, cfg = _engine(knn=True)
+    hidden = jnp.asarray(np.random.default_rng(8).normal(
+        size=(2, cfg.d_model)).astype(np.float32))
+    engine._knn_logits(hidden, jax.random.PRNGKey(0))
+    assert engine.stats["knn_cache_entries"] == 2
+
+    # tombstone 100 of 128 slots, then append: fraction crosses 0.5
+    engine.index = index_delete(engine.index, list(range(20, 120)))
+    tok = np.asarray([[1], [2]], np.int32)
+    before = engine._next_ids.copy()
+    engine._append_to_index(np.asarray(hidden), tok)
+    st = engine.stats
+    assert st["index_compactions"] == 1
+    assert engine.stats["knn_cache_entries"] == 0     # invalidated
+    assert engine.index.capacity == 32                # 30 live → pow2 cover
+    assert engine.index.n_live == 30
+    # the payload rode along: compaction keeps live slots in ascending
+    # order, so old slots 0..19 land on new slots 0..19 and the two rows
+    # appended into freed slots follow
+    assert len(engine._next_ids) == engine.index.capacity
+    np.testing.assert_array_equal(engine._next_ids[:20], before[:20])
+    assert set(engine._next_ids[20:22].tolist()) == {1, 2}
+    # retrieval still works end-to-end on the compacted index
+    logits, ops = engine._knn_logits(hidden, jax.random.PRNGKey(2))
+    assert np.isfinite(np.asarray(logits)).all() and ops > 0
