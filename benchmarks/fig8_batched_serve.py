@@ -68,7 +68,10 @@ def _bench_mode(store, queries, mode: str, Q: int, reps: int, exact_idx):
 
 # (Q, n) grid, R sweep, d, reps, lax.map baseline per preset. "quick" is the
 # benchmarks/run.py harness entry (old fig8 scale, no JSON unless asked);
-# "smoke" is the CI step; "full" is the committed-evidence run.
+# "smoke" is the CI step; "full" is the committed-evidence run. The
+# "sharded_*" presets bench the mesh-spanning ShardedIndexStore (DESIGN.md
+# §5) against the single-shard fused driver — they need
+# max(shard_grid) visible devices (CI forces a host-platform mesh).
 PRESETS = {
     "smoke": dict(d=1024, reps=1, with_permap=True,
                   qn_grid=[(8, 1024)], r_grid=[2, 4]),
@@ -77,12 +80,80 @@ PRESETS = {
     "full": dict(d=4096, reps=2, with_permap=False,
                  qn_grid=[(8, 4096), (32, 4096), (32, 16384)],
                  r_grid=[1, 2, 4, 8]),
+    "sharded_smoke": dict(d=1024, reps=1, qn_grid=[(8, 1024)],
+                          shard_grid=[2, 4]),
+    "sharded_full": dict(d=4096, reps=2, qn_grid=[(32, 16384)],
+                         shard_grid=[1, 2, 4, 8]),
 }
+
+
+def _sharded_sweep(p, k: int, reps: int, out: str):
+    """Sharded columns: the single-shard fused driver vs the sharded index
+    at each shard count, same corpus/box/exactness. Per entry: qps, rounds,
+    coord_ops, per-shard balance (live slots + coordinate-ops per shard)."""
+    import jax
+
+    from repro.index import build_sharded_index
+    from repro.index.placement import balance
+
+    d = p["d"]
+    entries = []
+    for Q, n_ in p["qn_grid"]:
+        corpus, queries = make_knn_benchmark_data("dense", n_, d, Q, seed=8)
+        ex = oracle.exact_knn(corpus, queries, k, "l2")
+        cfg = BMOConfig(k=k, delta=0.01, block=128, batch_arms=32,
+                        pulls_per_round=2, metric="l2")
+        store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+        row = _bench_mode(store, queries, "fused", Q, reps, ex.indices)
+        row.update(Q=Q, n=n_, d=d, R=cfg.epoch_rounds, shards=1)
+        entries.append(row)
+        base_qps = row["qps"]
+        emit(f"fig8_fused_single_Q{Q}_n{n_}", row["time_per_query_us"],
+             f"qps={row['qps']:.1f} acc={row['acc']:.3f}")
+        for S in p["shard_grid"]:
+            sharded, gids = build_sharded_index(
+                corpus, cfg, jax.random.PRNGKey(0), shards=S)
+            row_of = np.full(sharded.capacity, -1)
+            row_of[gids] = np.arange(n_)
+            fn = lambda: index_knn(sharded, queries, jax.random.PRNGKey(1))
+            row = _bench(fn, f"sharded{S}", Q, reps, ex.indices)
+            res = fn()       # acc recomputed below through the gid map
+            rows = row_of[np.asarray(res.indices)]
+            row["acc"] = float(np.mean(
+                [set(rows[i].tolist())
+                 == set(np.asarray(ex.indices[i]).tolist())
+                 for i in range(Q)]))
+            row.update(
+                Q=Q, n=n_, d=d, R=cfg.epoch_rounds, shards=S,
+                speedup_vs_single=row["qps"] / base_qps,
+                shard_balance=balance(sharded.live_per_shard),
+                shard_live=sharded.live_per_shard,
+                shard_coord_ops=np.asarray(res.shard_coord_ops).tolist(),
+                shard_rounds=np.asarray(res.shard_rounds).tolist(),
+            )
+            entries.append(row)
+            emit(f"fig8_sharded{S}_Q{Q}_n{n_}", row["time_per_query_us"],
+                 f"qps={row['qps']:.1f} acc={row['acc']:.3f} "
+                 f"vs_single={row['speedup_vs_single']:.2f}x "
+                 f"balance={row['shard_balance']:.2f}")
+    if out:
+        payload = {
+            "bench": "fig8_batched_serve_sharded",
+            "backend": jax.default_backend(),
+            "devices": jax.device_count(),
+            "d": d, "k": k, "reps": reps,
+            "entries": entries,
+        }
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {out} ({len(entries)} entries)")
 
 
 def main(preset: str = "quick", k: int = 5, out: str = "",
          reps: int = 0, with_permap: bool = False):
     p = PRESETS[preset]
+    if "shard_grid" in p:
+        return _sharded_sweep(p, k, reps or p["reps"], out)
     d = p["d"]
     reps = reps or p["reps"]
     with_permap = with_permap or p["with_permap"]

@@ -1,16 +1,24 @@
-"""Distributed BMO-NN on the production mesh (see DESIGN.md §2).
+"""Distributed BMO-NN on the production mesh — now a thin wrapper over the
+``repro.index.sharded`` subsystem (DESIGN.md §5), which owns the shard-local
+racing + certified all-gather top-k merge this module pioneered.
 
 Sharding: arms (corpus rows) over the data axis — each data row of the mesh
-races its own n/D arms; coordinates over the model axis — every pull samples
-one block per model shard (stratified) and `pmean`s the partial block-means,
-so a single pull costs block×M coordinate reads spread across the TP group.
-Queries are replicated across data shards and coordinate-sharded.
+races its own n/D arms via the cross-query batched driver
+(``index.sharded.local_dense_race``); coordinates over the model axis —
+every pull samples one block per model shard (stratified) and ``pmean``s the
+partial block-means, so a single pull costs block×M coordinate reads spread
+across the TP group. Queries are replicated across data shards and
+coordinate-sharded.
 
-Final merge: every shard's certified local top-k is `all_gather`ed over the
-data axis and reduced to the global top-k (the global top-k is contained in
-the union of per-shard top-ks). Collectives per round: one (B, P) fp32 pmean
-over "model"; at the end one (D, Q, 2k) gather over "data" — this is the
-collective pattern the roofline analysis studies.
+Final merge: every shard's certified local top-k is exact-evaluated (see
+sharded.py on why the merge needs exact values), ``all_gather``ed over the
+data axis and reduced to the global top-k. Collectives per round: one
+(Q, B, P) fp32 pmean over "model"; at the end one (D, Q, 2k) gather over
+"data" — the collective pattern the roofline analysis studies.
+
+This path stays a single jittable program (launch/dryrun.py lowers it for
+roofline cells); the *persistent* sharded index in ``index/sharded.py`` is
+the stateful sibling with the host-side epoch loop.
 """
 from __future__ import annotations
 
@@ -20,11 +28,12 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import BMOConfig
-from repro.core.ucb import race_topk
-from repro.kernels import ops as kops
+from repro.index.sharded import (flat_axis_index, guard_local_topk,
+                                 local_dense_race, merge_local_topk)
+from repro.index.batched_race import _dense_exact_theta
 
 
 class DistKNNResult(NamedTuple):
@@ -34,80 +43,31 @@ class DistKNNResult(NamedTuple):
     rounds: jax.Array     # () max rounds across shards
 
 
-def _axis_size(axes):
-    return jax.lax.psum(1, axes)
-
-
-def _flat_axis_index(axes):
-    """Flattened index across one or more mesh axes (row-major)."""
-    if isinstance(axes, str):
-        return jax.lax.axis_index(axes)
-    idx = jnp.zeros((), jnp.int32)
-    for ax in axes:
-        idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
-    return idx
-
-
 def _local_knn(x_loc, qs_loc, rng, *, cfg: BMOConfig, d: int, n_loc: int,
                dp_axes, impl: str):
-    """Body run per device under shard_map."""
-    d_loc = x_loc.shape[1]
-    block = cfg.block
-    assert d_loc % block == 0, (d_loc, block)
-    nb_loc = d_loc // block
-    M = jax.lax.psum(1, "model")
-
-    def make_pull(q_loc):
-        def pull(arm_idx, key):
-            key = jax.random.fold_in(key, jax.lax.axis_index("model"))
-            blk = jax.random.randint(key, (arm_idx.shape[0], cfg.pulls_per_round),
-                                     0, nb_loc)
-            vals = kops.block_pull(x_loc, q_loc, arm_idx, blk, block=block,
-                                   metric=cfg.metric, impl=impl)
-            return jax.lax.pmean(vals, "model")
-        return pull
-
-    def make_exact(q_loc):
-        def exact(arm_idx):
-            rows = x_loc[arm_idx]
-            part = kops.pairwise_dist(q_loc[None], rows, metric=cfg.metric,
-                                      impl=impl)[0]
-            return jax.lax.psum(part, "model") / d
-        return exact
-
-    def run_query(args):
-        q_loc, key = args
-        res = race_topk(
-            make_pull(q_loc), make_exact(q_loc),
-            n=n_loc,
-            max_pulls=nb_loc,
-            pull_cost=float(block),        # per model shard; psum'd below
-            exact_cost=float(d_loc),
-            cfg=cfg, rng=key, eliminate=True,
-        )
-        return res.topk, res.topk_values, res.coord_ops, res.rounds
-
+    """Body run per device under shard_map: the shard-local batched race of
+    the index subsystem, with pulls additionally stratified over "model"."""
     Q = qs_loc.shape[0]
-    keys = jax.random.split(rng, Q)
-    topk_i, topk_v, ops, rounds = jax.lax.map(run_query, (qs_loc, keys))
+    shard = flat_axis_index(dp_axes)
+    rng = jax.random.fold_in(rng, shard)
+    alive = jnp.ones((n_loc,), bool)
+    prior = jnp.zeros((n_loc,), jnp.float32)
+    res = local_dense_race(x_loc, qs_loc, alive, prior, rng, cfg=cfg,
+                           block=cfg.block, d=d, impl=impl, eliminate=True,
+                           prior_weight=0.0, model_axis="model")
+    # exact-evaluate the certified local top-k so the merge compares exact
+    # θ values (partial over the model axis → psum), then gather + reduce
+    part = _dense_exact_theta(x_loc, qs_loc, res.indices, cfg.metric, d)
+    vals = guard_local_topk(res.indices, jax.lax.psum(part, "model"), alive)
+    topk_g = res.indices.astype(jnp.int32) + shard * n_loc
+    merged_idx, merged_vals = merge_local_topk(vals, topk_g, dp_axes, cfg.k)
 
-    # local arm ids -> global corpus ids
-    shard = _flat_axis_index(dp_axes)
-    topk_g = topk_i.astype(jnp.int32) + shard * n_loc
-
-    # merge across the data axis
-    vals_all = jax.lax.all_gather(topk_v, dp_axes, tiled=True)   # (D*Q? no: (D, Q, k)) tiled -> (D*Q, k)
-    idx_all = jax.lax.all_gather(topk_g, dp_axes, tiled=True)
-    D = vals_all.shape[0] // Q
-    vals_all = vals_all.reshape(D, Q, cfg.k).transpose(1, 0, 2).reshape(Q, D * cfg.k)
-    idx_all = idx_all.reshape(D, Q, cfg.k).transpose(1, 0, 2).reshape(Q, D * cfg.k)
-    neg, pos = jax.lax.top_k(-vals_all, cfg.k)
-    merged_idx = jnp.take_along_axis(idx_all, pos, axis=1)
-    total_ops = jax.lax.psum(jnp.sum(ops), ("model",) + (
-        (dp_axes,) if isinstance(dp_axes, str) else tuple(dp_axes)))
-    max_rounds = jax.lax.pmax(jnp.max(rounds), (
-        (dp_axes,) if isinstance(dp_axes, str) else tuple(dp_axes)))
-    return merged_idx, -neg, total_ops, max_rounds
+    axes = ("model",) + ((dp_axes,) if isinstance(dp_axes, str)
+                         else tuple(dp_axes))
+    total_ops = jax.lax.psum(jnp.sum(res.coord_ops)
+                             + float(cfg.k * x_loc.shape[1]) * Q, axes)
+    max_rounds = jax.lax.pmax(jnp.max(res.rounds), axes)
+    return merged_idx, merged_vals, total_ops, max_rounds
 
 
 def distributed_knn(x, queries, cfg: BMOConfig, mesh: Mesh, rng, *,
@@ -121,8 +81,12 @@ def distributed_knn(x, queries, cfg: BMOConfig, mesh: Mesh, rng, *,
     dp_size = int(np.prod([mesh.shape[a] for a in
                            ((dp_axes,) if isinstance(dp_axes, str) else dp_axes)]))
     n_loc = n // dp_size
+    # each shard races at δ/D so the per-interval budget matches the
+    # single-machine union bound over all n arms (sharded.py)
+    import dataclasses
+    cfg_loc = dataclasses.replace(cfg, delta=cfg.delta / dp_size)
 
-    fn = functools.partial(_local_knn, cfg=cfg, d=d, n_loc=n_loc,
+    fn = functools.partial(_local_knn, cfg=cfg_loc, d=d, n_loc=n_loc,
                            dp_axes=dp_axes, impl=impl)
     sm = jax.shard_map(
         fn, mesh=mesh,

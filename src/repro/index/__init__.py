@@ -4,16 +4,33 @@ Build once (``build_index``), serve many (``index_knn`` / ``IndexStore.query``
 — cross-query batched racing), mutate online (``insert``/``delete``/
 ``compact``), persist through the checkpoint layer (``save_index``/
 ``load_index``). See DESIGN.md §3.
+
+One index can span a mesh: ``build_sharded_index`` partitions the slot axis
+across a named mesh axis (``ShardedIndexStore``), races each shard locally
+and merges certified per-shard top-ks — same lifecycle (``sharded_insert``/
+``sharded_delete``/``sharded_maybe_compact``), per-shard checkpoints plus a
+manifest (``save_sharded_index``/``load_sharded_index``, re-shardable on
+load). See DESIGN.md §5. ``index_knn`` dispatches on the store type.
 """
 from repro.index.batched_race import (batched_race_topk, fused_race_topk,
                                       index_knn)
 from repro.index.builder import build_index, load_index, save_index
 from repro.index.frontier import FrontierState, compact_frontier
 from repro.index.mutable import compact, delete, insert, maybe_compact
+from repro.index.sharded import (ShardedIndexStore, ShardedKNNResult,
+                                 build_sharded_index, is_sharded_index_dir,
+                                 load_sharded_index, reshard,
+                                 save_sharded_index, sharded_compact,
+                                 sharded_delete, sharded_index_knn,
+                                 sharded_insert, sharded_maybe_compact)
 from repro.index.store import IndexStore
 
 __all__ = [
-    "FrontierState", "IndexStore", "batched_race_topk", "build_index",
-    "compact", "compact_frontier", "delete", "fused_race_topk", "index_knn",
-    "insert", "load_index", "maybe_compact", "save_index",
+    "FrontierState", "IndexStore", "ShardedIndexStore", "ShardedKNNResult",
+    "batched_race_topk", "build_index", "build_sharded_index", "compact",
+    "compact_frontier", "delete", "fused_race_topk", "index_knn", "insert",
+    "is_sharded_index_dir", "load_index", "load_sharded_index",
+    "maybe_compact", "reshard", "save_index", "save_sharded_index",
+    "sharded_compact", "sharded_delete", "sharded_index_knn",
+    "sharded_insert", "sharded_maybe_compact",
 ]

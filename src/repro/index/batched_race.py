@@ -99,7 +99,11 @@ def batched_race_topk(
     if prior_var is None:
         prior_var = jnp.zeros((n,), jnp.float32)
         prior_weight = 0.0
-    prior_pool = jnp.sum(prior_var * alive_f) / jnp.maximum(n_alive, 1.0)
+    # priors may be per-arm (n,) — the build-time block statistics — or
+    # per-query (Q, n) when the caller seeds them (near-repeat warm starts)
+    prior2 = (jnp.broadcast_to(prior_var[None], (Q, n))
+              if prior_var.ndim == 1 else prior_var)
+    prior_pool = jnp.sum(prior2 * alive_f[None], 1) / jnp.maximum(n_alive, 1.0)
     qi = jnp.arange(Q)[:, None]
 
     def ci_radius(st: BatchedRaceState) -> jax.Array:
@@ -113,7 +117,7 @@ def batched_race_topk(
             global_var = num / jnp.maximum(den, 1.0)         # (Q,)
             sig_sq = conf.empirical_sigma_sq_prior(
                 st.m2, st.count, 1e-12, global_var[:, None],
-                prior_var[None, :], prior_weight)
+                prior2, prior_weight)
         c = conf.hoeffding_radius(sig_sq, st.count, log_term)
         return jnp.where(st.exact, 0.0, c)
 
@@ -205,7 +209,14 @@ def batched_race_topk(
         accepted = jnp.where(frozen, st.accepted, accepted)
         rejected = jnp.where(frozen, st.rejected, rejected)
 
-        done = st.done | (jnp.sum(accepted, 1) >= k)
+        # a query is finished when it has its k certified arms — or when no
+        # candidate is left at all, which a full-corpus race can only reach
+        # *after* k acceptances (elimination keeps ≥ k arms non-rejected) but
+        # a sharded shard-local race with fewer than k live slots reaches
+        # with every live arm certified (sharded.py races such shards for
+        # their entire live set; the cross-shard merge tops it back up).
+        no_candidates = jnp.sum(~accepted & ~rejected, 1) == 0
+        done = st.done | (jnp.sum(accepted, 1) >= k) | no_candidates
         rounds = jnp.where(st.done, st.rounds, st.rounds + 1)
         return st2._replace(accepted=accepted, rejected=rejected,
                             rounds=rounds, done=done,
@@ -278,7 +289,11 @@ def _fused_init(x, qs, alive, prior_var, rng, *, cfg: BMOConfig, block: int,
 
     alive_f = alive.astype(jnp.float32)
     n_alive = jnp.sum(alive_f)
-    prior_pool = jnp.sum(prior_var * alive_f) / jnp.maximum(n_alive, 1.0)
+    # (n,) build-time priors or (Q, n) per-query seeded priors (near-repeat
+    # warm starts) — the pool term is per query either way
+    prior2 = (jnp.broadcast_to(prior_var[None], (Q, n))
+              if prior_var.ndim == 1 else prior_var)
+    prior_pool = jnp.sum(prior2 * alive_f[None], 1) / jnp.maximum(n_alive, 1.0)
 
     rng, sub = jax.random.split(rng)
     all_arms = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (Q, n))
@@ -292,7 +307,7 @@ def _fused_init(x, qs, alive, prior_var, rng, *, cfg: BMOConfig, block: int,
     st = FrontierState(
         ids=all_arms,
         mean=mean, count=count, m2=m2,
-        prior=jnp.broadcast_to(prior_var[None], (Q, n)),
+        prior=prior2,
         exact=jnp.zeros((Q, n), bool),
         accepted=jnp.zeros((Q, n), bool),
         rejected=jnp.broadcast_to(~alive[None], (Q, n)),
@@ -379,7 +394,11 @@ def _fused_epoch_step(x, qs, st: FrontierState, prior_pool, *,
     accepted = jnp.where(frozen, st.accepted, accepted)
     rejected = jnp.where(frozen, st.rejected, rejected)
 
-    done = st.done | (jnp.sum(accepted, 1) >= k)
+    # done at k certified arms — or at candidate exhaustion, reachable only
+    # in shard-local races over fewer than k live slots (see the per-round
+    # driver's note; full-corpus races certify k first)
+    no_candidates = jnp.sum(st2.valid & ~accepted & ~rejected, 1) == 0
+    done = st.done | (jnp.sum(accepted, 1) >= k) | no_candidates
     # a finished query owes its unresolved candidates nothing: retire them
     # so its survivor set is exactly its k accepted arms — without this a
     # done query could freeze a large candidate set and either pin the
@@ -541,7 +560,7 @@ def _sparse_index_knn(indices, values, nnz, alive, prior_var,
 
 def index_knn(store, queries, rng: jax.Array, *, k=None, impl: str = "auto",
               eliminate: bool = True, warm_start: bool = True,
-              mode: str = "auto") -> KNNResult:
+              mode: str = "auto", prior_hint=None) -> KNNResult:
     """Batched k-NN against an IndexStore (slot indices; tombstones are
     excluded). Drop-in for ``bmo_nn.knn`` on the serving path — same
     KNNResult fields, one batched race instead of Q sequential ones.
@@ -549,7 +568,18 @@ def index_knn(store, queries, rng: jax.Array, *, k=None, impl: str = "auto",
     ``mode``: "fused" — the epoch-fused, survivor-compacted driver
     (DESIGN.md §4; dense/rotated only); "rounds" — the PR-1 one-launch-per-
     round driver; "auto" — fused where available, rounds for sparse.
+
+    ``prior_hint``: optional (Q, capacity) per-query CI variance priors
+    replacing the store's build-time per-arm priors — the near-repeat
+    warm-start path (serve/engine.py) seeds these from a cached neighbour's
+    result. A ``ShardedIndexStore`` (DESIGN.md §5) dispatches to the
+    mesh-spanning driver in ``index/sharded.py``.
     """
+    if hasattr(store, "shards"):      # ShardedIndexStore — mesh present
+        from repro.index.sharded import sharded_index_knn
+        return sharded_index_knn(store, queries, rng, k=k, impl=impl,
+                                 eliminate=eliminate, warm_start=warm_start,
+                                 mode=mode, prior_hint=prior_hint)
     cfg = store.cfg if k is None else dataclasses.replace(store.cfg, k=k)
     n_live = store.n_live
     if cfg.k > n_live:
@@ -559,6 +589,10 @@ def index_knn(store, queries, rng: jax.Array, *, k=None, impl: str = "auto",
     if mode not in ("auto", "fused", "rounds"):
         raise ValueError(f"unknown mode {mode!r}")
     w = store.prior_weight if warm_start else 0.0
+    prior = store.prior_var if prior_hint is None else jnp.asarray(
+        prior_hint, jnp.float32)
+    if prior_hint is not None:
+        w = store.prior_weight        # a seeded prior implies warm start
     if store.kind == "sparse":
         if mode == "fused":
             raise ValueError("the fused epoch driver pulls corpus blocks — "
@@ -566,15 +600,15 @@ def index_knn(store, queries, rng: jax.Array, *, k=None, impl: str = "auto",
         q_idx, q_val, q_nnz = queries
         return _sparse_index_knn(
             store.indices, store.values, store.nnz, store.alive,
-            store.prior_var, q_idx, q_val, q_nnz, rng,
+            prior, q_idx, q_val, q_nnz, rng,
             cfg=cfg, d=store.d, eliminate=eliminate, prior_weight=w)
     qs = store.prepare_queries(queries)
     if mode == "rounds":
         return _dense_index_knn(
-            store.x, qs, store.alive, store.prior_var, rng,
+            store.x, qs, store.alive, prior, rng,
             cfg=cfg, block=store.block, d=store.d, impl=impl,
             eliminate=eliminate, prior_weight=w)
     return fused_race_topk(
-        store.x, qs, store.alive, store.prior_var, rng,
+        store.x, qs, store.alive, prior, rng,
         cfg=cfg, block=store.block, d=store.d, impl=impl,
         eliminate=eliminate, prior_weight=w)

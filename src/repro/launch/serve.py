@@ -42,6 +42,11 @@ def main(argv=None):
     ap.add_argument("--index-append", action="store_true",
                     help="insert each decode step's (hidden, token) pairs "
                          "back into the index")
+    ap.add_argument("--index-shards", type=int, default=0,
+                    help=">1: span the retrieval index over that many mesh "
+                         "devices (one ShardedIndexStore, DESIGN.md §5); "
+                         "needs that many visible devices — on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--datastore-size", type=int, default=2048)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
@@ -64,17 +69,57 @@ def main(argv=None):
         import os
 
         from repro.configs.base import BMOConfig
-        from repro.index import build_index, load_index, save_index
+        from repro.index import (build_index, build_sharded_index,
+                                 is_sharded_index_dir, load_index,
+                                 load_sharded_index, save_index,
+                                 save_sharded_index)
         ds_rng = np.random.default_rng(0)
         keys = ds_rng.normal(size=(args.datastore_size, cfg.d_model)).astype(np.float32)
         next_ids = ds_rng.integers(0, cfg.vocab_size, args.datastore_size).astype(np.int32)
-        knn_cfg = KNNLMConfig(lam=0.2, bmo=BMOConfig(
+        knn_cfg = KNNLMConfig(lam=0.2, index_shards=args.index_shards,
+                              bmo=BMOConfig(
             k=8, delta=0.05, block=min(64, cfg.d_model), batch_arms=16))
+        sharded = args.index_shards > 1
         if args.index_dir and os.path.exists(args.index_dir):
-            index = load_index(args.index_dir)
-            datastore = (None, next_ids)
+            if is_sharded_index_dir(args.index_dir):
+                # re-shards on the way in when --index-shards differs from
+                # the saved shard count; the payload is gid-aligned, so it
+                # rides the returned remap
+                index, old_ids = load_sharded_index(
+                    args.index_dir,
+                    shards=args.index_shards if sharded else None)
+                ppath = os.path.join(args.index_dir, "payload.npy")
+                if not os.path.exists(ppath):
+                    raise FileNotFoundError(
+                        f"{args.index_dir} holds a sharded index but no "
+                        "payload.npy sidecar (the slot-aligned next-token "
+                        "ids this launcher writes when it builds with "
+                        "--index-dir) — rebuild with this CLI or add the "
+                        "sidecar")
+                payload = np.zeros((index.capacity,), np.int32)
+                manifest_ids = np.load(ppath)
+                if old_ids is None:
+                    payload[: len(manifest_ids)] = manifest_ids
+                else:
+                    live = old_ids >= 0
+                    payload[live] = manifest_ids[old_ids[live]]
+                datastore = (None, payload)
+            else:
+                index = load_index(args.index_dir)
+                datastore = (None, next_ids)
             log.info("loaded index from %s (%d live slots)", args.index_dir,
                      index.n_live)
+        elif sharded:
+            index, gids = build_sharded_index(keys, knn_cfg.bmo,
+                                              jax.random.PRNGKey(7),
+                                              shards=args.index_shards)
+            payload = np.zeros((index.capacity,), np.int32)
+            payload[gids] = next_ids
+            datastore = (None, payload)
+            if args.index_dir:
+                save_sharded_index(index, args.index_dir)
+                np.save(os.path.join(args.index_dir, "payload.npy"), payload)
+                log.info("built + saved sharded index to %s", args.index_dir)
         elif args.index_dir:
             index = build_index(jax.numpy.asarray(keys), knn_cfg.bmo,
                                 jax.random.PRNGKey(7))
@@ -95,6 +140,13 @@ def main(argv=None):
     log.info("generated %s tokens in %.2fs (%.1f tok/s)%s",
              out.shape, dt, out.size / dt,
              f"; retrieval coord-ops={retrieval_ops:.0f}" if args.knn_lm else "")
+    if args.knn_lm:
+        st = engine.stats
+        log.info("engine stats: %s", st)
+        if "knn_shard_coord_ops" in st:
+            log.info("per-shard coord-ops %s, max rounds %s",
+                     [f"{v:.3g}" for v in st["knn_shard_coord_ops"]],
+                     st["knn_shard_rounds"])
     print(out[:, :16])
 
 

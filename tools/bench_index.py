@@ -2,9 +2,13 @@
 a scaled-down fig8 run plus a mutation round-trip, for CI and pre-commit.
 
     PYTHONPATH=src python tools/bench_index.py
+    # sharded smoke (needs N visible devices):
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python tools/bench_index.py --shards 4
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -17,6 +21,68 @@ from repro.configs.base import BMOConfig
 from repro.core import bmo_nn, oracle
 from repro.data.synthetic import make_knn_benchmark_data
 from repro.index import build_index, compact, delete, index_knn, insert
+
+
+def main_sharded(shards: int, n: int = 1024, d: int = 1024, Q: int = 16,
+                 k: int = 5):
+    """Sharded smoke: parity + qps vs the single-shard fused driver, plus a
+    mutation round-trip through global ids (DESIGN.md §5)."""
+    from repro.index import (build_sharded_index, sharded_delete,
+                             sharded_insert, sharded_maybe_compact)
+    from repro.index.placement import balance
+    t_start = time.perf_counter()
+    corpus, queries = make_knn_benchmark_data("dense", n, d, Q, seed=8)
+    cfg = BMOConfig(k=k, delta=0.01, block=128, batch_arms=32,
+                    pulls_per_round=2, metric="l2")
+    ex = oracle.exact_knn(corpus, queries, k, "l2")
+
+    def timed(fn):
+        fn()                                   # warm
+        t0 = time.perf_counter()
+        r = fn()
+        jax.block_until_ready(r.values)
+        return r, time.perf_counter() - t0
+
+    single = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    base, t_single = timed(
+        lambda: index_knn(single, queries, jax.random.PRNGKey(1)))
+    store, gids = build_sharded_index(corpus, cfg, jax.random.PRNGKey(0),
+                                      shards=shards)
+    res, t_shard = timed(
+        lambda: index_knn(store, queries, jax.random.PRNGKey(1)))
+    row_of = np.full(store.capacity, -1)
+    row_of[gids] = np.arange(len(gids))
+
+    def acc(idx, rows=False):
+        got = row_of[np.asarray(idx)] if rows else np.asarray(idx)
+        return float(np.mean([set(got[i].tolist())
+                              == set(np.asarray(ex.indices[i]).tolist())
+                              for i in range(Q)]))
+
+    print(f"single-shard fused: {Q / t_single:8.1f} qps  "
+          f"acc={acc(base.indices):.3f}")
+    print(f"sharded (S={shards}):  {Q / t_shard:8.1f} qps  "
+          f"acc={acc(res.indices, rows=True):.3f}  "
+          f"balance={balance(store.live_per_shard):.2f}  "
+          f"shard_ops={np.asarray(res.shard_coord_ops).astype(int).tolist()}")
+    assert acc(res.indices, rows=True) == 1.0
+
+    # mutation smoke over global ids: delete q0's true NN, insert a closer
+    # point (least-loaded routing), compact with the returned remap
+    nn0 = int(np.asarray(ex.indices[0])[0])
+    store = sharded_delete(store, [gids[nn0]])
+    store, slots, _ = sharded_insert(store, queries[:1])
+    r2 = index_knn(store, queries[:1], jax.random.PRNGKey(2))
+    assert int(np.asarray(r2.indices[0])[0]) == int(slots[0])
+    # (skip nn0: the insert may have reused its freed slot)
+    store = sharded_delete(
+        store, gids[[r for r in range(n // 2 - 16, n) if r != nn0]])
+    store, old_ids = sharded_maybe_compact(store, threshold=0.4)
+    assert old_ids is not None
+    r3 = index_knn(store, queries[:1], jax.random.PRNGKey(3))
+    assert int(old_ids[int(np.asarray(r3.indices[0])[0])]) == int(slots[0])
+    print(f"sharded mutation round-trip OK (insert/delete/compact), "
+          f"total {time.perf_counter() - t_start:.1f}s")
 
 
 def main(n: int = 1024, d: int = 1024, Q: int = 16, k: int = 5):
@@ -63,4 +129,12 @@ def main(n: int = 1024, d: int = 1024, Q: int = 16, k: int = 5):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", type=int, default=0,
+                    help=">1: run the sharded smoke instead (needs that many "
+                         "visible devices)")
+    args = ap.parse_args()
+    if args.shards > 1:
+        main_sharded(args.shards)
+    else:
+        main()
