@@ -30,10 +30,10 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, set_accuracy
+from repro.api import Index
 from repro.configs.base import BMOConfig
 from repro.core import bmo_nn, oracle
 from repro.data.synthetic import make_knn_benchmark_data
-from repro.index import build_index, index_knn
 
 
 def _time(fn, reps: int):
@@ -61,8 +61,11 @@ def _bench(fn, mode: str, Q: int, reps: int, exact_idx):
     }
 
 
-def _bench_mode(store, queries, mode: str, Q: int, reps: int, exact_idx):
-    fn = lambda: index_knn(store, queries, jax.random.PRNGKey(1), mode=mode)
+def _bench_mode(handle: Index, queries, mode: str, Q: int, reps: int,
+                exact_idx):
+    # cache bypassed: the bench measures the racing drivers, not the LRU
+    fn = lambda: handle.query(queries, jax.random.PRNGKey(1), mode=mode,
+                              cache="bypass")
     return _bench(fn, mode, Q, reps, exact_idx)
 
 
@@ -90,10 +93,10 @@ PRESETS = {
 def _sharded_sweep(p, k: int, reps: int, out: str):
     """Sharded columns: the single-shard fused driver vs the sharded index
     at each shard count, same corpus/box/exactness. Per entry: qps, rounds,
-    coord_ops, per-shard balance (live slots + coordinate-ops per shard)."""
+    coord_ops, per-shard balance (live slots + coordinate-ops per shard),
+    and the handle's typed ServeStats snapshot."""
     import jax
 
-    from repro.index import build_sharded_index
     from repro.index.placement import balance
 
     d = p["d"]
@@ -103,19 +106,20 @@ def _sharded_sweep(p, k: int, reps: int, out: str):
         ex = oracle.exact_knn(corpus, queries, k, "l2")
         cfg = BMOConfig(k=k, delta=0.01, block=128, batch_arms=32,
                         pulls_per_round=2, metric="l2")
-        store = build_index(corpus, cfg, jax.random.PRNGKey(0))
-        row = _bench_mode(store, queries, "fused", Q, reps, ex.indices)
+        handle = Index.build(corpus, cfg, jax.random.PRNGKey(0))
+        row = _bench_mode(handle, queries, "fused", Q, reps, ex.indices)
         row.update(Q=Q, n=n_, d=d, R=cfg.epoch_rounds, shards=1)
         entries.append(row)
         base_qps = row["qps"]
         emit(f"fig8_fused_single_Q{Q}_n{n_}", row["time_per_query_us"],
              f"qps={row['qps']:.1f} acc={row['acc']:.3f}")
         for S in p["shard_grid"]:
-            sharded, gids = build_sharded_index(
-                corpus, cfg, jax.random.PRNGKey(0), shards=S)
+            sharded = Index.build(corpus, cfg, jax.random.PRNGKey(0),
+                                  shards=S)
             row_of = np.full(sharded.capacity, -1)
-            row_of[gids] = np.arange(n_)
-            fn = lambda: index_knn(sharded, queries, jax.random.PRNGKey(1))
+            row_of[sharded.build_gids] = np.arange(n_)
+            fn = lambda: sharded.query(queries, jax.random.PRNGKey(1),
+                                       cache="bypass")
             row = _bench(fn, f"sharded{S}", Q, reps, ex.indices)
             res = fn()       # acc recomputed below through the gid map
             rows = row_of[np.asarray(res.indices)]
@@ -126,10 +130,11 @@ def _sharded_sweep(p, k: int, reps: int, out: str):
             row.update(
                 Q=Q, n=n_, d=d, R=cfg.epoch_rounds, shards=S,
                 speedup_vs_single=row["qps"] / base_qps,
-                shard_balance=balance(sharded.live_per_shard),
-                shard_live=sharded.live_per_shard,
-                shard_coord_ops=np.asarray(res.shard_coord_ops).tolist(),
-                shard_rounds=np.asarray(res.shard_rounds).tolist(),
+                shard_balance=balance(sharded.store.live_per_shard),
+                shard_live=sharded.store.live_per_shard,
+                shard_coord_ops=res.shard_coord_ops,
+                shard_rounds=res.shard_rounds,
+                serve_stats=sharded.stats.as_dict(),
             )
             entries.append(row)
             emit(f"fig8_sharded{S}_Q{Q}_n{n_}", row["time_per_query_us"],
@@ -175,7 +180,7 @@ def main(preset: str = "quick", k: int = 5, out: str = "",
     # ---- (Q, n) sweep: fused vs PR-1 rounds driver -----------------------
     for Q, n_ in qn_grid:
         corpus, queries, ex = get_data(Q, n_)
-        store = build_index(corpus, base_cfg, jax.random.PRNGKey(0))
+        store = Index.build(corpus, base_cfg, jax.random.PRNGKey(0))
         if with_permap:
             row_b = _bench(
                 lambda: bmo_nn.knn(corpus, queries, base_cfg,
@@ -203,12 +208,13 @@ def main(preset: str = "quick", k: int = 5, out: str = "",
     if r_grid:
         Q, n_ = qn_grid[min(1, len(qn_grid) - 1)]
         corpus, queries, ex = get_data(Q, n_)
-        store0 = build_index(corpus, base_cfg, jax.random.PRNGKey(0))
+        store0 = Index.build(corpus, base_cfg, jax.random.PRNGKey(0))
         for R in r_grid:
-            # only the driver reads epoch_rounds — rebind cfg, reuse the
-            # built corpus layout/priors
-            store = dataclasses.replace(
-                store0, cfg=dataclasses.replace(base_cfg, epoch_rounds=R))
+            # only the driver reads epoch_rounds — rebind cfg on the
+            # wrapped store, reuse the built corpus layout/priors
+            store = Index.open(dataclasses.replace(
+                store0.store,
+                cfg=dataclasses.replace(base_cfg, epoch_rounds=R)))
             row = _bench_mode(store, queries, "fused", Q, reps, ex.indices)
             row.update(Q=Q, n=n_, d=d, R=R)
             entries.append(row)

@@ -1,21 +1,26 @@
 """End-to-end serving driver: a small LM serving batched requests with the
-BMO-NN kNN-LM retrieval hook — the paper's technique live in the decode loop.
+BMO-NN kNN-LM retrieval hook — the paper's technique live in the decode
+loop, driven entirely through the unified ``repro.api`` surface.
 
     PYTHONPATH=src python examples/knn_serve.py
 
 Flow: run the model over a corpus to collect (hidden, next-token) pairs →
-**build** a persistent IndexStore from them (blocked layout + CI warm-start
-priors, one-time cost) → **save** it through the checkpoint layer →
-**load** it back (what a serving replica would do at boot) → **serve**:
-every decode step's whole batch races the index in one batched launch
-(repro.index.batched_race), and with ``index_append`` the generated tokens
-are folded back into the datastore as they are produced.
+``Index.build`` a persistent index from them with the next-token ids
+attached as the handle's payload (blocked layout + CI warm-start priors,
+one-time cost) → ``Index.save`` through the checkpoint layer →
+``Index.load`` it back (what a serving replica would do at boot; the
+payload sidecar rides along) → serve: every decode step's whole batch is
+one ``Index.query`` (typed ``QuerySpec`` protocol, query LRU + near-repeat
+warm starts behind ``CachePolicy``), and with ``index_append`` the
+generated tokens are folded back into the datastore as they are produced
+(``CompactionPolicy`` amortizes tombstone debt).
 
-With ``--shards N`` the walkthrough instead spans ONE index over an
-N-device mesh (repro.index.sharded, DESIGN.md §5): build sharded →
-save (per-shard checkpoints + manifest) → **reload at a different shard
-count** (save at N, load at N//2 — elastic re-sharding with the global-id
-remap applied to the payload) → serve with per-shard stats:
+With ``--shards N`` the walkthrough spans ONE index over an N-device mesh
+and exercises the PR-4 admin ops on the LIVE handle (DESIGN.md §6.3):
+build sharded → save → load → **``Index.reshard(N//2)`` on the running
+handle** (no checkpoint round-trip: quiesce → uniform-stride remap → swap
+under the epoch fence, payload realigned automatically) →
+``Index.add_replicas(2)`` read fan-out → serve with per-shard stats:
 
     PYTHONPATH=src python examples/knn_serve.py --shards 4
 """
@@ -44,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Index
 from repro.configs import get_arch
 from repro.configs.base import BMOConfig
 from repro.data.synthetic import lm_batch
@@ -63,8 +69,8 @@ def build_datastore(model, params, vocab, n_seqs=8, seq=64):
                                         return_hidden=True)
         keys.append(np.asarray(hidden[0, :-1].astype(jnp.float32)))
         next_ids.append(np.asarray(batch["tokens"][0, 1:]))
-    return (jnp.asarray(np.concatenate(keys)),
-            jnp.asarray(np.concatenate(next_ids).astype(np.int32)))
+    return (np.concatenate(keys),
+            np.concatenate(next_ids).astype(np.int32))
 
 
 def main():
@@ -77,71 +83,71 @@ def main():
     mesh = make_host_mesh(1, 1)
 
     print("building kNN-LM datastore from model hidden states ...")
-    datastore = build_datastore(model, params, cfg.vocab_size)
-    print(f"datastore: {datastore[0].shape[0]} keys of dim {datastore[0].shape[1]}")
+    keys, next_ids = build_datastore(model, params, cfg.vocab_size)
+    print(f"datastore: {keys.shape[0]} keys of dim {keys.shape[1]}")
 
     knn = KNNLMConfig(lam=0.25, index_shards=ARGS.shards, bmo=BMOConfig(
         k=8, delta=0.05, block=16, batch_arms=16, metric="l2"))
 
+    # ONE construction path for any shard count: the handle hides the
+    # single-shard/sharded split, and the next-token payload is attached at
+    # build so it rides every remap (growth/compaction/re-shard) for free.
     index_dir = tempfile.mkdtemp(prefix="bmo_index_") + "/idx"
-    payload = np.asarray(datastore[1], np.int32)
+    store = Index.build(keys, knn.bmo, jax.random.PRNGKey(7),
+                        shards=max(ARGS.shards, 1), payload=next_ids,
+                        cache=knn.cache_policy(),
+                        compaction=knn.compaction_policy())
+    store.save(index_dir)                  # per-shard checkpoints + manifest
+    store = Index.load(index_dir, cache=knn.cache_policy(),
+                       compaction=knn.compaction_policy())
+    print(f"index: {store.n_live} live slots / capacity {store.capacity} "
+          f"({store.n_shards} shard(s)), saved+loaded via {index_dir}")
+
     if ARGS.shards > 1:
-        # multi-shard walkthrough: build at S → save (per-shard checkpoints
-        # + manifest) → reload RE-SHARDED at S//2 — the returned old→new
-        # global-id map realigns the slot-aligned payload
-        from repro.index import (build_sharded_index, load_sharded_index,
-                                 save_sharded_index)
-        store, gids = build_sharded_index(np.asarray(datastore[0]), knn.bmo,
-                                          jax.random.PRNGKey(7),
-                                          shards=ARGS.shards)
-        slot_payload = np.zeros((store.capacity,), np.int32)
-        slot_payload[gids] = payload
-        save_sharded_index(store, index_dir)
-        reload_shards = max(ARGS.shards // 2, 1)
-        store, old_ids = load_sharded_index(index_dir, shards=reload_shards)
-        remapped = np.zeros((store.capacity,), np.int32)
-        live = old_ids >= 0
-        remapped[live] = slot_payload[old_ids[live]]
-        payload = remapped
-        print(f"sharded index: built at S={ARGS.shards}, saved via "
-              f"{index_dir}, re-sharded on load to S={store.n_shards} "
-              f"(stride {store.stride}, {store.n_live} live slots, "
-              f"per-shard {store.live_per_shard})")
-    else:
-        # build once → save → load (what a serving replica does at boot)
-        from repro.index import build_index, load_index, save_index
-        store = build_index(datastore[0], knn.bmo, jax.random.PRNGKey(7))
-        save_index(store, index_dir)
-        store = load_index(index_dir)
-        print(f"index: {store.n_live} live slots / capacity "
-              f"{store.capacity}, saved+loaded via {index_dir}")
+        # -- PR-4 admin ops on the LIVE handle (DESIGN.md §6.3) ------------
+        # elastic re-shard with NO checkpoint round-trip: quiesce appends,
+        # remap the live rows with the same deterministic uniform-stride
+        # remap the save/load path uses, swap under the epoch fence (query
+        # cache invalidated, payload realigned) — bit-identical results.
+        before = store.query(keys[:2], jax.random.PRNGKey(11))
+        toks_before = store.payload[before.indices]   # payload under OLD gids
+        store.reshard(max(ARGS.shards // 2, 1))
+        after = store.query(keys[:2], jax.random.PRNGKey(11))
+        assert toks_before.tolist() == store.payload[after.indices].tolist()
+        print(f"LIVE reshard S={ARGS.shards} -> S={store.n_shards} "
+              f"(stride {store.store.stride}, epoch {store.epoch}, "
+              f"per-shard {store.store.live_per_shard}) — no checkpoint "
+              "written, top-k identical")
+        # read fan-out: replica meshes round-robin the query batches
+        store.add_replicas(2)
+        print(f"read fan-out: {store.stats.replicas} replicas")
 
     batch_size, prompt_len, new_tokens = 4, 12, 16
     engine = ServeEngine(model, params, plan, mesh, batch_size=batch_size,
                          max_seq=prompt_len + new_tokens + 4,
-                         knn_lm=knn, index=store,
-                         datastore=(None, payload),
-                         index_append=True)
+                         knn_lm=knn, index=store, index_append=True)
 
     prompts = np.random.default_rng(1).integers(
         0, cfg.vocab_size, (batch_size, prompt_len)).astype(np.int32)
+    n_live_before = store.n_live
     t0 = time.time()
     out, retrieval_ops = engine.generate(prompts, new_tokens)
     dt = time.time() - t0
-    n_exact = datastore[0].shape[0] * datastore[0].shape[1] * new_tokens * batch_size
+    n_exact = keys.shape[0] * keys.shape[1] * new_tokens * batch_size
     print(f"generated {out.shape} tokens in {dt:.2f}s "
           f"({out.size / dt:.1f} tok/s with retrieval)")
     print(f"retrieval coordinate-ops: {retrieval_ops:.3g} "
           f"(exact search: {float(n_exact):.3g} → "
           f"{float(n_exact) / max(retrieval_ops, 1):.1f}x)")
     print(f"index grew during decode: {engine.index.n_live} live slots "
-          f"(+{engine.index.n_live - store.n_live} appended)")
-    stats = engine.stats
-    if "knn_shard_coord_ops" in stats:
+          f"(+{engine.index.n_live - n_live_before} appended)")
+    stats = engine.stats                   # typed repro.api.ServeStats
+    print(f"serve stats: {stats.as_dict()}")
+    if stats.shard_coord_ops is not None:
         print(f"per-shard coord-ops: "
-              f"{[f'{v:.3g}' for v in stats['knn_shard_coord_ops']]}, "
-              f"max rounds {stats['knn_shard_rounds']} "
-              f"(near_hits={stats['knn_near_hits']})")
+              f"{[f'{v:.3g}' for v in stats.shard_coord_ops]}, "
+              f"max rounds {stats.shard_rounds} "
+              f"(near_hits={stats.near_hits})")
     print("note: at this smoke scale (d=64, n≈500) exact search is cheap; "
           "the bandit gain appears at the paper's d≈4k–28k regime "
           "(see quickstart.py / benchmarks).")

@@ -18,17 +18,19 @@ One-shot queries (paper Algorithm 2, per-query racing)::
 
 Serving (build the index once, race whole query batches against it)::
 
-    from repro.index import build_index, index_knn, save_index, load_index
-    store = build_index(corpus, cfg, jax.random.PRNGKey(0))  # preprocess
-    save_index(store, "idx"); store = load_index("idx")      # persist
-    res = index_knn(store, queries, jax.random.PRNGKey(1))   # batched race
+    from repro.api import Index
+    idx = Index.build(corpus, cfg, jax.random.PRNGKey(0))  # one handle
+    idx.save("idx"); idx = Index.load("idx")               # persist
+    res = idx.query(queries, jax.random.PRNGKey(1))        # batched race
+    res = idx.query(queries, rng, k=10, delta=0.001)       # QuerySpec
 
-Mutation (the datastore can grow during decode — kNN-LM serving)::
+Mutation and admin (the datastore can grow during decode — kNN-LM)::
 
-    from repro.index import insert, delete, compact
-    store, slots = insert(store, new_rows)   # O(1) slot reuse / growth
-    store = delete(store, stale_slots)       # O(1) tombstones
-    store, remap = compact(store)            # rebuild when fragmented
+    gids = idx.insert(new_rows)   # O(1) slot reuse / growth, global ids
+    idx.delete(stale_gids)        # O(1) tombstones
+    idx.maybe_compact()           # CompactionPolicy rebuild
+    idx.reshard(4)                # LIVE elastic re-shard over a mesh
+    idx.add_replicas(2)           # read fan-out over replica meshes
 
 Benchmarks: ``python benchmarks/run.py`` (fig2–fig8; fig8 is the batched
 index-serving throughput vs per-query racing). End-to-end LM serving with

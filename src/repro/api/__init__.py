@@ -1,0 +1,34 @@
+"""repro.api — the unified client surface of the index subsystem
+(DESIGN.md §6).
+
+One handle (``Index``) in front of everything PRs 1–3 built: build/load/
+open, typed queries (``QuerySpec`` → ``KNNResult``), online mutation with
+automatic payload remapping, pluggable ``CachePolicy``/``CompactionPolicy``,
+typed serving counters (``ServeStats``), and first-class admin ops — LIVE
+elastic re-sharding (``Index.reshard``) and read-replica fan-out
+(``Index.add_replicas``) with no checkpoint round-trip.
+
+The pre-PR-4 ``repro.index`` free functions remain as deprecation shims.
+
+    from repro.api import Index, QuerySpec
+    idx = Index.build(corpus, cfg, rng, shards=4, payload=next_ids)
+    res = idx.query(queries, rng)                      # KNNResult
+    res = idx.query(queries, rng, k=10, delta=0.001)   # spec overrides
+    idx.insert(rows, payload=toks); idx.maybe_compact()
+    idx.reshard(8)          # live, bit-identical to save->load-at-8
+    idx.add_replicas(2)     # read fan-out over replica meshes
+"""
+from repro.api.cache import QueryCache
+from repro.api.handle import Index
+from repro.api.spec import (CachePolicy, CompactionPolicy, KNNResult,
+                            QuerySpec, ServeStats)
+
+__all__ = [
+    "CachePolicy",
+    "CompactionPolicy",
+    "Index",
+    "KNNResult",
+    "QueryCache",
+    "QuerySpec",
+    "ServeStats",
+]

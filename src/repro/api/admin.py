@@ -1,0 +1,111 @@
+"""First-class admin operations on a LIVE index handle (DESIGN.md §6.3).
+
+The ROADMAP's top open item: the checkpoint path already re-shards (save at
+S → load at S′, PR 3), but a *running* serving index had to pay a full
+save/load cycle. ``live_reshard`` does it in memory:
+
+  1. **quiesce** — the handle's admin fence rejects mutations for the
+     duration of the swap (``Index._admin_op``),
+  2. **remap** — the live rows are redistributed over S′ shards with the
+     same deterministic uniform-stride remap the checkpoint path uses
+     (``index/sharded.reshard`` — round-robin in ascending old-global-id
+     order), so the result is BIT-IDENTICAL to save→load-at-S′, with no
+     checkpoint written; the attached payload and build-row map ride the
+     returned old→new global-id map,
+  3. **swap under the epoch fence** — ``Index._swap`` installs the new
+     store, bumps ``epoch``, clears the ``QueryCache`` (global ids moved)
+     and drops materialized replicas (they re-derive lazily).
+
+``add_replicas`` is the read-throughput twin: the same store is materialized
+on r disjoint device slices (``ShardedIndexStore.device_offset``; a
+single-shard store is ``device_put`` per replica device) and ``Index.query``
+round-robins batches across them. Replicas are derived state — every
+mutation/reshard invalidates and lazily rebuilds them from the primary.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.index.sharded import ShardedIndexStore, reshard as _reshard
+from repro.utils import get_logger
+
+log = get_logger("repro.api")
+
+
+def live_reshard(handle, n_shards: int) -> np.ndarray:
+    """Elastically re-shard a live handle to ``n_shards`` without a
+    save/load cycle. Returns the old→new global-id map (compact contract)
+    for any external side state; the attached payload is already remapped."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_shards > len(jax.devices()):
+        # fail the admin op BEFORE touching the handle: an S′-shard store
+        # could not build its mesh, so swapping it in would turn every
+        # subsequent query into an outage — the whole point of the live op
+        # is that the old store keeps serving until the swap is viable
+        raise RuntimeError(
+            f"cannot live-reshard to {n_shards} shards: only "
+            f"{len(jax.devices())} devices are visible — the handle keeps "
+            "serving at the current shard count (on CPU, relaunch under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_shards})")
+    with handle._admin_op("reshard"):
+        store = handle._store
+        if not hasattr(store, "shards"):
+            # a single-shard IndexStore is the S=1 degenerate sharded store;
+            # wrapping it reuses the one deterministic remap everywhere
+            store = ShardedIndexStore([store])
+        old_s = store.n_shards
+        new_store, old_ids = _reshard(store, n_shards)
+        handle._remap(old_ids)
+        handle._swap(new_store)
+        handle._reshards += 1
+        log.info("live reshard: S=%d -> S=%d (epoch %d, %d live rows, "
+                 "no checkpoint)", old_s, n_shards, handle.epoch,
+                 new_store.n_live)
+    return old_ids
+
+
+def add_replicas(handle, n_replicas: int) -> int:
+    """Set the handle's read fan-out. Replica placement is lazy (first query
+    after the call or after any mutation); ``materialize_replicas`` below
+    does the actual device work."""
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    handle._n_replicas = n_replicas
+    handle._replica_stores = None
+    log.info("read fan-out set to %d replica(s)", n_replicas)
+    return n_replicas
+
+
+def materialize_replicas(store, n_replicas: int):
+    """Replica i of a sharded store lives on devices
+    [i·S, (i+1)·S); a single-shard store is device_put whole. When the
+    machine has too few devices the surplus replicas share the primary's
+    placement — the fan-out still round-robins (correct, just not
+    parallel), so smoke environments keep working."""
+    devs = jax.devices()
+    out = [store]
+    for i in range(1, n_replicas):
+        if hasattr(store, "shards"):
+            S = store.n_shards
+            off = i * S
+            if off + S <= len(devs):
+                out.append(dataclasses.replace(store, device_offset=off))
+            else:
+                log.warning(
+                    "replica %d needs devices [%d, %d) but only %d are "
+                    "visible — sharing the primary's mesh", i, off, off + S,
+                    len(devs))
+                out.append(store)
+        else:
+            dev = devs[i % len(devs)]
+            put = lambda a: None if a is None else jax.device_put(a, dev)
+            out.append(dataclasses.replace(
+                store, alive=put(store.alive), x=put(store.x),
+                signs=put(store.signs), indices=put(store.indices),
+                values=put(store.values), nnz=put(store.nnz),
+                prior_var=put(store.prior_var)))
+    return out

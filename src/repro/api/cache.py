@@ -1,0 +1,89 @@
+"""Query LRU for the index handle (DESIGN.md §6.2; lifted out of
+``serve/engine.py`` in PR 4 so every surface — engine, CLIs, benches —
+shares one cache implementation behind ``Index.query``).
+
+Keys are the raw query bytes — only *exact* repeats hit and short-circuit
+the race, which is the safe contract for a δ-PAC result. A *near* repeat
+(cosine similarity to a cached query above a threshold) still races, but
+``get_near`` hands the caller the cached neighbour's result so the race's
+CI variance priors can be seeded from it (priors tighten early rounds
+without faking evidence; see ``confidence.empirical_sigma_sq_prior``).
+
+Zero-norm guard: cosine similarity divides by vector norms, so zero (or
+non-finite) query vectors must MISS the near lookup rather than NaN-match,
+and zero-norm vectors are never admitted to the near-match matrix.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+import numpy as np
+
+
+class QueryCache:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self._od: collections.OrderedDict = collections.OrderedDict()
+        self._vecs: collections.OrderedDict = collections.OrderedDict()
+        self._mat = None       # cached (keys, stacked unit vectors) for
+                               # get_near; rebuilt lazily after any mutation
+
+    @staticmethod
+    def key(row: np.ndarray) -> bytes:
+        return np.ascontiguousarray(row, np.float32).tobytes()
+
+    def get(self, key: bytes):
+        hit = self._od.get(key)
+        if hit is not None:
+            self._od.move_to_end(key)
+            self.hits += 1
+            return hit
+        self.misses += 1
+        return None
+
+    def get_near(self, row: np.ndarray, threshold: float):
+        """Best cached entry with cosine(row, cached query) ≥ threshold, or
+        None. Called only on exact misses, so a match is a genuinely *near*
+        (never identical-bytes) neighbour. O(entries·d) numpy scan — the
+        cache is small by construction."""
+        if not self._vecs or threshold <= 0:
+            return None
+        norm = float(np.linalg.norm(row))
+        if norm == 0.0 or not np.isfinite(norm):
+            # a zero (or NaN/inf) query has no direction: dividing by its
+            # norm would NaN-match — it must miss instead
+            return None
+        if self._mat is None:
+            self._mat = (list(self._vecs.keys()),
+                         np.stack(list(self._vecs.values())))
+        keys, mat = self._mat
+        sims = mat @ (np.asarray(row, np.float32) / norm)
+        j = int(np.argmax(sims))
+        if not (sims[j] >= threshold):     # NaN compares False → miss
+            return None
+        return self._od[keys[j]]
+
+    def put(self, key: bytes, value, vec: Optional[np.ndarray] = None) -> None:
+        self._od[key] = value
+        self._od.move_to_end(key)
+        if vec is not None:
+            norm = float(np.linalg.norm(vec))
+            if norm > 0 and np.isfinite(norm):
+                self._vecs[key] = np.asarray(vec, np.float32) / norm
+                self._vecs.move_to_end(key)
+                self._mat = None
+        while len(self._od) > self.capacity:
+            old, _ = self._od.popitem(last=False)
+            if self._vecs.pop(old, None) is not None:
+                self._mat = None
+
+    def __len__(self) -> int:
+        return len(self._od)
+
+    def clear(self) -> None:
+        self._od.clear()
+        self._vecs.clear()
+        self._mat = None

@@ -1,0 +1,198 @@
+"""Typed query protocol for the unified index surface (DESIGN.md §6.2).
+
+Three frozen/typed records replace the ad-hoc kwargs and stringly-keyed
+dicts that accumulated across PRs 1–3:
+
+  * ``QuerySpec`` — everything a caller may vary per query batch (k, racing
+    mode/impl, a δ override, a pull-budget cap, per-query CI variance
+    priors, cache policy), validated ONCE at construction instead of
+    per-call inside every driver. A default-constructed spec is the serving
+    fast path and is the only spec the query cache serves.
+  * ``KNNResult`` — the stable result schema of ``Index.query``: host-side
+    arrays with GLOBAL slot ids, per-query cost counters, and (behind a
+    sharded store) per-shard load telemetry.
+  * ``ServeStats`` — the typed replacement for ``engine.stats``'s dict
+    (LeJeune et al. 2019 / Mason et al. 2021 treat per-query budgets and
+    priors as part of the query contract; so does this surface).
+
+Plus the two pluggable policy objects lifted out of ``ServeEngine``:
+``CachePolicy`` (query LRU + near-repeat warm starts) and
+``CompactionPolicy`` (tombstone-debt threshold).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+MODES = ("auto", "fused", "rounds")
+IMPLS = ("auto", "pallas", "ref", "xla")
+CACHE_POLICIES = ("use", "bypass", "refresh")
+
+#: schema version of KNNResult / ServeStats.as_dict() — bump on any field
+#: change so downstream JSON consumers (benchmarks, dashboards) can gate.
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """Per-query-batch contract, validated at the boundary.
+
+    ``None`` means "use the index's build-time default" for the overridable
+    fields; a default-constructed ``QuerySpec()`` is the cacheable serving
+    fast path.
+    """
+
+    k: Optional[int] = None            # top-k override (None = store cfg.k)
+    mode: str = "auto"                 # auto | fused | rounds driver
+    impl: str = "auto"                 # kernel impl (auto/pallas/ref/xla)
+    delta: Optional[float] = None      # failure-probability override
+    max_rounds: Optional[int] = None   # pull-budget cap (racing rounds)
+    eliminate: bool = True             # Alg. 1 elimination on/off
+    warm_start: bool = True            # build-time CI variance priors
+    prior_hint: Optional[Any] = None   # (Q, capacity) per-query variance
+                                       # priors (near-repeat warm starts)
+    cache: str = "use"                 # use | bypass | refresh the query LRU
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r} (want one of {MODES})")
+        if self.impl not in IMPLS:
+            raise ValueError(f"unknown impl {self.impl!r} (want one of {IMPLS})")
+        if self.cache not in CACHE_POLICIES:
+            raise ValueError(f"unknown cache policy {self.cache!r} "
+                             f"(want one of {CACHE_POLICIES})")
+        if self.k is not None and self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.delta is not None and not (0.0 < self.delta < 1.0):
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+        if self.max_rounds is not None and self.max_rounds < 1:
+            raise ValueError(f"max_rounds must be >= 1, got {self.max_rounds}")
+
+    def bind(self, cfg):
+        """Apply the spec's overrides to the store's build-time BMOConfig."""
+        kw = {}
+        if self.k is not None:
+            kw["k"] = self.k
+        if self.delta is not None:
+            kw["delta"] = self.delta
+        if self.max_rounds is not None:
+            kw["max_rounds"] = self.max_rounds
+        return dataclasses.replace(cfg, **kw) if kw else cfg
+
+    @property
+    def cacheable(self) -> bool:
+        """Only default-contract races may hit or fill the query LRU: a k /
+        δ / budget override or a seeded prior changes what the cached result
+        would certify."""
+        return (self.k is None and self.delta is None
+                and self.max_rounds is None and self.prior_hint is None
+                and self.eliminate and self.warm_start)
+
+
+@dataclasses.dataclass(frozen=True)
+class KNNResult:
+    """Stable result schema of ``Index.query`` (host-side numpy).
+
+    ``indices`` are GLOBAL slot ids (shard·stride + local behind a sharded
+    store) — feed them to ``Index.payload`` lookups or ``Index.delete``.
+    Cache-served rows report zero ``coord_ops``/``rounds``.
+    """
+
+    indices: Any                       # (Q, k) int   — global slot ids
+    values: Any                        # (Q, k) float — ascending θ
+    coord_ops: Any                     # (Q,) coordinate reads paid
+    rounds: Any                        # (Q,) racing rounds paid
+    n_exact: Any                       # (Q,) lazy exact evaluations
+    cache_hits: int = 0                # rows served from the query LRU
+    shard_coord_ops: Optional[List[float]] = None   # (S,) per-shard reads
+    shard_rounds: Optional[List[float]] = None      # (S,) per-shard rounds
+
+    def as_dict(self) -> dict:
+        out = dataclasses.asdict(self)
+        out["schema_version"] = SCHEMA_VERSION
+        return out
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Typed serving counters (the ``engine.stats`` contract since PR 4).
+
+    ``as_dict()`` is the stable JSON schema benchmarks emit; ``__getitem__``
+    additionally accepts the pre-PR-4 stringly keys (``knn_cache_hits``, …)
+    so downstream dict-style consumers keep working.
+    """
+
+    races: int = 0             # batched races launched
+    raced_queries: int = 0     # cache misses that actually paid a race
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_entries: int = 0
+    near_hits: int = 0         # near-repeat CI warm starts
+    compactions: int = 0
+    reshards: int = 0          # live re-shard admin ops
+    replicas: int = 1          # read replicas serving the fan-out
+    shard_coord_ops: Optional[List[float]] = None  # cumulative per shard
+    shard_rounds: Optional[List[float]] = None     # max per shard
+
+    _LEGACY = {
+        "knn_races": "races",
+        "knn_raced_queries": "raced_queries",
+        "knn_cache_hits": "cache_hits",
+        "knn_cache_misses": "cache_misses",
+        "knn_cache_entries": "cache_entries",
+        "knn_near_hits": "near_hits",
+        "index_compactions": "compactions",
+        "knn_shard_coord_ops": "shard_coord_ops",
+        "knn_shard_rounds": "shard_rounds",
+    }
+
+    def as_dict(self) -> dict:
+        out = {f.name: getattr(self, f.name)
+               for f in dataclasses.fields(self)}
+        out["schema_version"] = SCHEMA_VERSION
+        return out
+
+    def __getitem__(self, key: str):
+        name = self._LEGACY.get(key, key)
+        if name.startswith("_") or not hasattr(self, name):
+            raise KeyError(key)
+        return getattr(self, name)
+
+    def __contains__(self, key) -> bool:
+        try:
+            self[key]
+        except (KeyError, TypeError):
+            return False
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    """Query-LRU policy (lifted out of ServeEngine): exact-byte repeats are
+    served from memory; a *near* repeat (cosine ≥ ``near_threshold``) still
+    races but has its CI variance priors seeded from the cached neighbour.
+    ``capacity=0`` disables caching entirely."""
+
+    capacity: int = 256
+    near_threshold: float = 0.95     # 0 disables near-repeat warm starts
+    near_prior_scale: float = 0.25   # variance tightening on seeded arms
+
+    def __post_init__(self):
+        if self.capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {self.capacity}")
+        if self.near_threshold > 1.0:
+            raise ValueError("near_threshold is a cosine similarity; "
+                             f"got {self.near_threshold}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """Tombstone-debt policy (lifted out of ServeEngine): rebuild the slot
+    layout when the dead fraction crosses ``threshold`` AND capacity would
+    actually shrink. ``threshold >= 1`` disables auto-compaction."""
+
+    threshold: float = 0.5
+
+    def __post_init__(self):
+        if self.threshold <= 0:
+            raise ValueError(f"threshold must be > 0, got {self.threshold}")

@@ -1,29 +1,81 @@
 """repro.index — persistent, mutable, batched-racing BMO-NN index service.
 
-Build once (``build_index``), serve many (``index_knn`` / ``IndexStore.query``
-— cross-query batched racing), mutate online (``insert``/``delete``/
-``compact``), persist through the checkpoint layer (``save_index``/
-``load_index``). See DESIGN.md §3.
+.. deprecated:: PR 4
+    The free-function surface below (``build_index``/``index_knn``/
+    ``insert``/``sharded_*``/…) is superseded by the unified handle in
+    ``repro.api`` (``Index.build/load/open`` + ``QuerySpec``; DESIGN.md §6).
+    Every public *function* here still imports and works, but emits one
+    ``DeprecationWarning`` per symbol per process and forwards to the same
+    implementation the new API calls. The store/state *types* (IndexStore,
+    ShardedIndexStore, …) are not deprecated — ``repro.api`` returns and
+    accepts them.
 
-One index can span a mesh: ``build_sharded_index`` partitions the slot axis
-across a named mesh axis (``ShardedIndexStore``), races each shard locally
-and merges certified per-shard top-ks — same lifecycle (``sharded_insert``/
-``sharded_delete``/``sharded_maybe_compact``), per-shard checkpoints plus a
-manifest (``save_sharded_index``/``load_sharded_index``, re-shardable on
-load). See DESIGN.md §5. ``index_knn`` dispatches on the store type.
+Build once (``build_index``), serve many (``index_knn``), mutate online
+(``insert``/``delete``/``compact``), persist through the checkpoint layer;
+``build_sharded_index`` spans one index over a mesh (DESIGN.md §3/§5).
 """
-from repro.index.batched_race import (batched_race_topk, fused_race_topk,
-                                      index_knn)
-from repro.index.builder import build_index, load_index, save_index
-from repro.index.frontier import FrontierState, compact_frontier
-from repro.index.mutable import compact, delete, insert, maybe_compact
-from repro.index.sharded import (ShardedIndexStore, ShardedKNNResult,
-                                 build_sharded_index, is_sharded_index_dir,
-                                 load_sharded_index, reshard,
-                                 save_sharded_index, sharded_compact,
-                                 sharded_delete, sharded_index_knn,
-                                 sharded_insert, sharded_maybe_compact)
+import functools
+import warnings
+
+from repro.index import batched_race as _batched_race
+from repro.index import builder as _builder
+from repro.index import frontier as _frontier
+from repro.index import mutable as _mutable
+from repro.index import sharded as _sharded
+from repro.index.frontier import FrontierState
+from repro.index.sharded import ShardedIndexStore, ShardedKNNResult
 from repro.index.store import IndexStore
+
+#: symbols that already warned this process — the shim contract is ONE
+#: DeprecationWarning per symbol, not one per call (tests reset this).
+_DEPRECATION_WARNED = set()
+
+
+def _shim(module, name: str, hint: str):
+    fn = getattr(module, name)
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        if name not in _DEPRECATION_WARNED:
+            _DEPRECATION_WARNED.add(name)
+            warnings.warn(
+                f"repro.index.{name} is deprecated; use {hint} "
+                "(repro.api, DESIGN.md §6)",
+                DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+
+    wrapper.__wrapped__ = fn
+    return wrapper
+
+
+#: (module, name, repro.api replacement) for every shimmed public function.
+_SHIMS = {
+    "batched_race_topk": (_batched_race, "Index.query"),
+    "fused_race_topk": (_batched_race, "Index.query"),
+    "index_knn": (_batched_race, "Index.query"),
+    "build_index": (_builder, "Index.build"),
+    "load_index": (_builder, "Index.load"),
+    "save_index": (_builder, "Index.save"),
+    "compact_frontier": (_frontier, "Index.query"),
+    "insert": (_mutable, "Index.insert"),
+    "delete": (_mutable, "Index.delete"),
+    "compact": (_mutable, "Index.compact"),
+    "maybe_compact": (_mutable, "Index.maybe_compact"),
+    "build_sharded_index": (_sharded, "Index.build(shards=S)"),
+    "is_sharded_index_dir": (_sharded, "Index.load"),
+    "load_sharded_index": (_sharded, "Index.load(shards=S)"),
+    "save_sharded_index": (_sharded, "Index.save"),
+    "reshard": (_sharded, "Index.reshard"),
+    "sharded_compact": (_sharded, "Index.compact"),
+    "sharded_delete": (_sharded, "Index.delete"),
+    "sharded_index_knn": (_sharded, "Index.query"),
+    "sharded_insert": (_sharded, "Index.insert"),
+    "sharded_maybe_compact": (_sharded, "Index.maybe_compact"),
+}
+
+for _name, (_mod, _hint) in _SHIMS.items():
+    globals()[_name] = _shim(_mod, _name, _hint)
+del _name, _mod, _hint
 
 __all__ = [
     "FrontierState", "IndexStore", "ShardedIndexStore", "ShardedKNNResult",

@@ -98,6 +98,9 @@ class ShardedIndexStore:
     instance, so engine-side cache invalidation-by-identity keeps working."""
     shards: List[IndexStore]
     placement: str = "round_robin"
+    device_offset: int = 0    # first visible device of this store's mesh —
+                              # read replicas (repro.api.admin) place copies
+                              # of the same shards on disjoint device slices
 
     @property
     def n_shards(self) -> int:
@@ -149,13 +152,15 @@ class ShardedIndexStore:
         """1-D mesh over the first S local devices (cached per instance)."""
         if "_mesh" not in self.__dict__:
             devs = jax.devices()
-            if len(devs) < self.n_shards:
+            lo, hi = self.device_offset, self.device_offset + self.n_shards
+            if len(devs) < hi:
                 raise RuntimeError(
-                    f"{self.n_shards} index shards need {self.n_shards} "
-                    f"devices but only {len(devs)} are visible — on CPU run "
-                    "under XLA_FLAGS=--xla_force_host_platform_device_count="
-                    f"{self.n_shards}")
-            self._mesh = Mesh(np.asarray(devs[: self.n_shards]), (AXIS,))
+                    f"{self.n_shards} index shards at device offset "
+                    f"{self.device_offset} need {hi} devices but only "
+                    f"{len(devs)} are visible — on CPU run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{hi}")
+            self._mesh = Mesh(np.asarray(devs[lo:hi]), (AXIS,))
         return self._mesh
 
     def device_arrays(self) -> dict:

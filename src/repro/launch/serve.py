@@ -4,9 +4,12 @@ kNN-LM retrieval hook (the paper's technique in the serving path).
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
       --batch 4 --prompt-len 16 --new-tokens 32 --knn-lm
 
-Retrieval is served from a persistent IndexStore. ``--index-dir`` reuses a
-saved index across launches (build-once/serve-many: loaded when present,
-built+saved when not); ``--index-append`` grows the datastore during decode.
+Retrieval is served from a persistent ``repro.api.Index`` handle.
+``--index-dir`` reuses a saved index across launches (build-once/serve-many:
+loaded when present, built+saved when not — the next-token payload rides the
+handle's sidecar); ``--index-append`` grows the datastore during decode;
+``--index-shards`` spans the index over a mesh, and a saved index re-shards
+on the way in when the flag differs from the saved shard count.
 """
 from __future__ import annotations
 
@@ -64,73 +67,52 @@ def main(argv=None):
     params = init_params(model.param_specs(), rng)
     max_seq = args.max_seq or (args.prompt_len + args.new_tokens + 8)
 
-    knn_cfg = datastore = index = None
+    knn_cfg = index = None
     if args.knn_lm:
         import os
 
+        from repro.api import Index
         from repro.configs.base import BMOConfig
-        from repro.index import (build_index, build_sharded_index,
-                                 is_sharded_index_dir, load_index,
-                                 load_sharded_index, save_index,
-                                 save_sharded_index)
         ds_rng = np.random.default_rng(0)
         keys = ds_rng.normal(size=(args.datastore_size, cfg.d_model)).astype(np.float32)
         next_ids = ds_rng.integers(0, cfg.vocab_size, args.datastore_size).astype(np.int32)
         knn_cfg = KNNLMConfig(lam=0.2, index_shards=args.index_shards,
                               bmo=BMOConfig(
             k=8, delta=0.05, block=min(64, cfg.d_model), batch_arms=16))
-        sharded = args.index_shards > 1
+        policies = dict(cache=knn_cfg.cache_policy(),
+                        compaction=knn_cfg.compaction_policy())
+        shards = max(args.index_shards, 1)
         if args.index_dir and os.path.exists(args.index_dir):
-            if is_sharded_index_dir(args.index_dir):
-                # re-shards on the way in when --index-shards differs from
-                # the saved shard count; the payload is gid-aligned, so it
-                # rides the returned remap
-                index, old_ids = load_sharded_index(
-                    args.index_dir,
-                    shards=args.index_shards if sharded else None)
-                ppath = os.path.join(args.index_dir, "payload.npy")
-                if not os.path.exists(ppath):
+            # one call covers both layouts; --index-shards != saved shard
+            # count re-shards on the way in, the payload sidecar rides the
+            # remap inside the handle
+            index = Index.load(args.index_dir,
+                               shards=shards if shards > 1 else None,
+                               **policies)
+            if index.payload is None:
+                if index.sharded:
+                    # a sharded store's live global ids are non-contiguous,
+                    # so this CLI's row-ordered next_ids CANNOT be attached
+                    # slot-aligned — even when the lengths happen to match,
+                    # every neighbour would vote the wrong token
                     raise FileNotFoundError(
                         f"{args.index_dir} holds a sharded index but no "
                         "payload.npy sidecar (the slot-aligned next-token "
-                        "ids this launcher writes when it builds with "
-                        "--index-dir) — rebuild with this CLI or add the "
-                        "sidecar")
-                payload = np.zeros((index.capacity,), np.int32)
-                manifest_ids = np.load(ppath)
-                if old_ids is None:
-                    payload[: len(manifest_ids)] = manifest_ids
-                else:
-                    live = old_ids >= 0
-                    payload[live] = manifest_ids[old_ids[live]]
-                datastore = (None, payload)
-            else:
-                index = load_index(args.index_dir)
-                datastore = (None, next_ids)
-            log.info("loaded index from %s (%d live slots)", args.index_dir,
-                     index.n_live)
-        elif sharded:
-            index, gids = build_sharded_index(keys, knn_cfg.bmo,
-                                              jax.random.PRNGKey(7),
-                                              shards=args.index_shards)
-            payload = np.zeros((index.capacity,), np.int32)
-            payload[gids] = next_ids
-            datastore = (None, payload)
-            if args.index_dir:
-                save_sharded_index(index, args.index_dir)
-                np.save(os.path.join(args.index_dir, "payload.npy"), payload)
-                log.info("built + saved sharded index to %s", args.index_dir)
-        elif args.index_dir:
-            index = build_index(jax.numpy.asarray(keys), knn_cfg.bmo,
-                                jax.random.PRNGKey(7))
-            save_index(index, args.index_dir)
-            datastore = (None, next_ids)
-            log.info("built + saved index to %s", args.index_dir)
+                        "ids Index.save writes when a payload is attached) "
+                        "— rebuild with this CLI or add the sidecar")
+                index.attach_payload(next_ids)
+            log.info("loaded index from %s (%d live slots, %d shard(s))",
+                     args.index_dir, index.n_live, index.n_shards)
         else:
-            datastore = (jax.numpy.asarray(keys), jax.numpy.asarray(next_ids))
+            index = Index.build(keys, knn_cfg.bmo, jax.random.PRNGKey(7),
+                                shards=shards, payload=next_ids, **policies)
+            if args.index_dir:
+                index.save(args.index_dir)
+                log.info("built + saved index to %s (%d shard(s))",
+                         args.index_dir, index.n_shards)
 
     engine = ServeEngine(model, params, plan, mesh, batch_size=args.batch,
-                         max_seq=max_seq, knn_lm=knn_cfg, datastore=datastore,
+                         max_seq=max_seq, knn_lm=knn_cfg,
                          index=index, index_append=args.index_append)
     prompts = np.random.default_rng(1).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
@@ -141,12 +123,12 @@ def main(argv=None):
              out.shape, dt, out.size / dt,
              f"; retrieval coord-ops={retrieval_ops:.0f}" if args.knn_lm else "")
     if args.knn_lm:
-        st = engine.stats
-        log.info("engine stats: %s", st)
-        if "knn_shard_coord_ops" in st:
+        st = engine.stats            # typed repro.api.ServeStats
+        log.info("engine stats: %s", st.as_dict())
+        if st.shard_coord_ops is not None:
             log.info("per-shard coord-ops %s, max rounds %s",
-                     [f"{v:.3g}" for v in st["knn_shard_coord_ops"]],
-                     st["knn_shard_rounds"])
+                     [f"{v:.3g}" for v in st.shard_coord_ops],
+                     st.shard_rounds)
     print(out[:, :16])
 
 

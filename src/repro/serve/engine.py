@@ -6,18 +6,23 @@ sampling): the point is end-to-end runnability of (prefill → decode →
 retrieve → interpolate) on the same substrate the dry-run proves out at mesh
 scale.
 
-Retrieval goes through a held ``repro.index.IndexStore`` built once at
-engine construction (or passed in pre-built/loaded from disk): the corpus
-layout, cached rotation, and CI warm-start priors are amortized across every
-decode step, and each step's whole batch races in ONE batched launch
-(index.batched_race) instead of per-query ``lax.map``. With
-``index_append=True`` the engine inserts each step's (hidden, next-token)
-pairs back into the index — the datastore grows during decode, true kNN-LM
-behaviour.
+Retrieval goes through one ``repro.api.Index`` handle (DESIGN.md §6) built
+at engine construction or passed in pre-built/loaded: the corpus layout,
+cached rotation, CI warm-start priors, the query LRU (exact repeats free,
+near repeats CI-warm-started) and the next-token payload all live behind
+the handle, and each decode step's whole batch is one ``Index.query`` call.
+With ``index_append=True`` the engine inserts each step's (hidden,
+next-token) pairs back into the index — the datastore grows during decode,
+true kNN-LM behaviour — with tombstone debt amortized by the handle's
+``CompactionPolicy``. ``engine.stats`` is the handle's typed ``ServeStats``.
+
+Admin operations (live re-sharding, replica fan-out) are the handle's:
+``engine.index.reshard(S')`` / ``engine.index.add_replicas(r)`` work on the
+running engine — the epoch fence invalidates the cache and remaps the
+payload without a save/load cycle.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 from typing import Optional
 
@@ -25,9 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (CachePolicy, CompactionPolicy, Index, QueryCache,
+                       ServeStats)
 from repro.configs.base import BMOConfig, ParallelPlan
-from repro.core.datasets import next_pow2
 from repro.serve.steps import init_cache, make_decode_step, make_prefill_step
+
+__all__ = ["KNNLMConfig", "QueryCache", "ServeEngine"]
 
 
 @dataclasses.dataclass
@@ -47,85 +55,13 @@ class KNNLMConfig:
     near_prior_scale: float = 0.25  # variance-prior tightening applied to
                                     # the cached neighbour's top-k arms
 
+    def cache_policy(self) -> CachePolicy:
+        return CachePolicy(capacity=self.cache_size,
+                           near_threshold=self.near_threshold,
+                           near_prior_scale=self.near_prior_scale)
 
-class QueryCache:
-    """LRU of query-hash → cached top-k (ROADMAP: serving traffic repeats
-    queries). Keys are the raw query bytes — only *exact* repeats hit and
-    short-circuit the race, which is the safe contract for a δ-PAC result.
-    A *near* repeat (cosine similarity to a cached query above a threshold)
-    still races, but ``get_near`` hands the caller the cached neighbour's
-    result so the race's CI variance priors can be seeded from it
-    (ROADMAP: near-repeat warm starts — priors tighten early rounds without
-    faking evidence; see ``confidence.empirical_sigma_sq_prior``). Any index
-    mutation invalidates the whole cache: slot ids and the live set both
-    shift under insert/delete/compact. IndexStores are immutable (every
-    mutation builds a new instance), so the engine detects mutation by
-    identity at lookup time — external ``engine.index = delete(...)``-style
-    updates are caught too, not just the engine's own appends."""
-
-    def __init__(self, capacity: int):
-        self.capacity = capacity
-        self.hits = 0
-        self.misses = 0
-        self._od: collections.OrderedDict = collections.OrderedDict()
-        self._vecs: collections.OrderedDict = collections.OrderedDict()
-        self._mat = None       # cached (keys, stacked unit vectors) for
-                               # get_near; rebuilt lazily after any mutation
-
-    @staticmethod
-    def key(row: np.ndarray) -> bytes:
-        return np.ascontiguousarray(row, np.float32).tobytes()
-
-    def get(self, key: bytes):
-        hit = self._od.get(key)
-        if hit is not None:
-            self._od.move_to_end(key)
-            self.hits += 1
-            return hit
-        self.misses += 1
-        return None
-
-    def get_near(self, row: np.ndarray, threshold: float):
-        """Best cached entry with cosine(row, cached query) ≥ threshold, or
-        None. Called only on exact misses, so a match is a genuinely *near*
-        (never identical-bytes) neighbour. O(entries·d) numpy scan — the
-        cache is small by construction."""
-        if not self._vecs or threshold <= 0:
-            return None
-        norm = float(np.linalg.norm(row))
-        if norm == 0.0:
-            return None
-        if self._mat is None:
-            self._mat = (list(self._vecs.keys()),
-                         np.stack(list(self._vecs.values())))
-        keys, mat = self._mat
-        sims = mat @ (np.asarray(row, np.float32) / norm)
-        j = int(np.argmax(sims))
-        if sims[j] < threshold:
-            return None
-        return self._od[keys[j]]
-
-    def put(self, key: bytes, value, vec: Optional[np.ndarray] = None) -> None:
-        self._od[key] = value
-        self._od.move_to_end(key)
-        if vec is not None:
-            norm = float(np.linalg.norm(vec))
-            if norm > 0:
-                self._vecs[key] = np.asarray(vec, np.float32) / norm
-                self._vecs.move_to_end(key)
-                self._mat = None
-        while len(self._od) > self.capacity:
-            old, _ = self._od.popitem(last=False)
-            if self._vecs.pop(old, None) is not None:
-                self._mat = None
-
-    def __len__(self) -> int:
-        return len(self._od)
-
-    def clear(self) -> None:
-        self._od.clear()
-        self._vecs.clear()
-        self._mat = None
+    def compaction_policy(self) -> CompactionPolicy:
+        return CompactionPolicy(threshold=self.compact_threshold)
 
 
 class ServeEngine:
@@ -134,10 +70,11 @@ class ServeEngine:
                  knn_lm: Optional[KNNLMConfig] = None,
                  datastore=None, index=None, index_append: bool = False):
         """``datastore``: (keys (N, d), next_token_ids (N,)) — preprocessed
-        into an IndexStore at construction. ``index``: a pre-built/loaded
-        IndexStore instead (pass next-token ids per slot via
-        ``datastore=(None, ids)``). ``index_append``: insert each decode
-        step's (hidden, token) pairs back into the index."""
+        into an ``Index`` at construction. ``index``: a pre-built
+        ``repro.api.Index`` handle — or a raw (Sharded)IndexStore, wrapped
+        on the way in (pass next-token ids via ``datastore=(None, ids)``).
+        ``index_append``: insert each decode step's (hidden, token) pairs
+        back into the index."""
         self.model = model
         self.params = params
         self.mesh = mesh
@@ -146,66 +83,31 @@ class ServeEngine:
         self.prefill_step, self.rules = make_prefill_step(model, plan, mesh)
         self.prefill_step = jax.jit(self.prefill_step, donate_argnums=2)
         self.knn_lm = knn_lm
-        self.datastore = datastore      # (keys (N, d), next_token_ids (N,))
-        self.index = None
+        self.index: Optional[Index] = None
         self.index_append = index_append
-        self._next_ids = None           # (capacity,) slot-aligned payload
-        self.query_cache = (QueryCache(knn_lm.cache_size)
-                            if knn_lm is not None and knn_lm.cache_size > 0
-                            else None)
-        self._cache_index = None        # IndexStore the cache was filled from
-        self._stats = {"knn_races": 0, "knn_raced_queries": 0,
-                       "index_compactions": 0, "knn_near_hits": 0}
-        self._shard_coord_ops = self._shard_rounds = None
         if knn_lm is not None and (index is not None or datastore is not None):
-            from repro.index import build_index, build_sharded_index
-            next_ids = build_gids = None
-            if index is None:
-                keys, next_ids = datastore
-                if knn_lm.index_shards > 1:
-                    # one index spanning the mesh (DESIGN.md §5): the build
-                    # returns the global slot of each corpus row, which is
-                    # how the slot-aligned payload stays aligned
-                    index, build_gids = build_sharded_index(
-                        np.asarray(keys), knn_lm.bmo, jax.random.PRNGKey(7),
-                        shards=knn_lm.index_shards)
-                else:
-                    index = build_index(jnp.asarray(keys), knn_lm.bmo,
-                                        jax.random.PRNGKey(7))
-            elif datastore is not None:
-                next_ids = datastore[1]
-            self.index = index
-            if hasattr(index, "shards"):
-                self._shard_coord_ops = np.zeros(index.n_shards)
-                self._shard_rounds = np.zeros(index.n_shards)
-            self._next_ids = np.zeros((index.capacity,), np.int32)
+            next_ids = datastore[1] if datastore is not None else None
             if next_ids is not None:
                 next_ids = np.asarray(next_ids, np.int32)
-                if len(next_ids) > index.capacity:
-                    raise ValueError(
-                        f"next-token payload ({len(next_ids)}) exceeds index "
-                        f"capacity ({index.capacity}) — wrong index for this "
-                        "datastore?")
-                if len(next_ids) < index.n_live:
-                    raise ValueError(
-                        f"next-token payload ({len(next_ids)}) does not cover "
-                        f"the index's {index.n_live} live slots — uncovered "
-                        "slots would silently vote token 0")
-                if build_gids is not None:
-                    self._next_ids[build_gids] = next_ids
-                elif hasattr(index, "shards") and \
-                        len(next_ids) != index.capacity:
-                    # a sharded index's live global ids are non-contiguous,
-                    # so a shorter prefix CANNOT cover them — uncovered
-                    # slots would silently vote token 0
-                    raise ValueError(
-                        f"a pre-built sharded index needs a capacity-length "
-                        f"({index.capacity}) gid-aligned payload, got "
-                        f"{len(next_ids)}")
-                else:
-                    # pre-built/loaded indexes take the payload already
-                    # slot-aligned
-                    self._next_ids[: len(next_ids)] = next_ids
+            if isinstance(index, Index):
+                handle = index
+                if next_ids is not None:
+                    handle.attach_payload(next_ids)
+            elif index is not None:
+                handle = Index.open(index, payload=next_ids,
+                                    cache=knn_lm.cache_policy(),
+                                    compaction=knn_lm.compaction_policy())
+            else:
+                keys = datastore[0]
+                handle = Index.build(
+                    np.asarray(keys), knn_lm.bmo, jax.random.PRNGKey(7),
+                    shards=max(knn_lm.index_shards, 1), payload=next_ids,
+                    cache=knn_lm.cache_policy(),
+                    compaction=knn_lm.compaction_policy())
+            if handle.payload is None:
+                # uncovered slots vote token 0 — make that explicit
+                handle.attach_payload(np.zeros((handle.capacity,), np.int32))
+            self.index = handle
         if knn_lm is not None:
             # hidden-state decode (DenseLM exposes return_hidden)
             def _decode(params, cache, tokens):
@@ -224,149 +126,36 @@ class ServeEngine:
 
     # -- kNN-LM hook (the paper's technique in the serving path) ------------
     @property
-    def stats(self) -> dict:
-        """Serving counters: query-cache hits/misses, races run, raced
-        queries (cache misses that actually paid a race), near-repeat
-        warm-starts, compactions — plus, behind a sharded index, cumulative
-        per-shard coordinate-ops and max rounds (load-balance telemetry)."""
-        out = dict(self._stats)
-        if self.query_cache is not None:
-            out["knn_cache_hits"] = self.query_cache.hits
-            out["knn_cache_misses"] = self.query_cache.misses
-            out["knn_cache_entries"] = len(self.query_cache)
-        if self._shard_coord_ops is not None:
-            out["knn_shard_coord_ops"] = self._shard_coord_ops.tolist()
-            out["knn_shard_rounds"] = self._shard_rounds.tolist()
-        return out
-
-    def _seeded_priors(self, hid: np.ndarray, miss: list):
-        """Near-repeat warm starts (ROADMAP): per-query CI variance priors
-        for the missed rows, tightened on the cached neighbour's top-k arms
-        wherever a cached query sits within the cosine threshold. Priors
-        only shape the variance estimate — CI widths still scale with real
-        sample counts — so a wrong near-match slows nothing down and the
-        result stays a fresh δ-PAC race."""
-        thr = self.knn_lm.near_threshold
-        if thr <= 0 or len(self.query_cache) == 0:
-            return None
-        base = np.asarray(self.index.prior_var, np.float32)
-        rows, found = [], False
-        for i in miss:
-            near = self.query_cache.get_near(hid[i], thr)
-            if near is None:
-                rows.append(base)
-            else:
-                seeded = base.copy()
-                seeded[near[0]] *= self.knn_lm.near_prior_scale
-                rows.append(seeded)
-                found = True
-                self._stats["knn_near_hits"] += 1
-        return np.stack(rows) if found else None
-
-    def _record_race(self, res, n_queries: int):
-        self._stats["knn_races"] += 1
-        self._stats["knn_raced_queries"] += n_queries
-        if self._shard_coord_ops is not None and hasattr(res, "shard_rounds"):
-            self._shard_coord_ops += np.asarray(res.shard_coord_ops)
-            self._shard_rounds = np.maximum(self._shard_rounds,
-                                            np.asarray(res.shard_rounds))
-
-    def _knn_topk(self, hidden, rng):
-        """Top-k per row through the query LRU: only cache-missing rows race
-        (padded to a power-of-two sub-batch so the jitted executables stay
-        warm), hits are served from memory at zero coordinate-ops."""
-        from repro.index import index_knn
-        B = hidden.shape[0]
-        k = self.index.cfg.k
-        if self.query_cache is None:    # no cache: race the batch directly
-            res = index_knn(self.index, jnp.asarray(hidden), rng)
-            self._record_race(res, B)
-            return (np.asarray(res.indices), np.asarray(res.values),
-                    float(np.asarray(res.coord_ops).sum()))
-        hid = np.asarray(hidden, np.float32)
-        idx = np.zeros((B, k), np.int32)
-        vals = np.zeros((B, k), np.float32)
-        if self._cache_index is not self.index:
-            self.query_cache.clear()    # index mutated since the cache filled
-            self._cache_index = self.index
-        miss, keys = [], [QueryCache.key(row) for row in hid]
-        for i in range(B):
-            got = self.query_cache.get(keys[i])
-            if got is None:
-                miss.append(i)
-            else:
-                idx[i], vals[i] = got
-        ops = 0.0
-        if miss:
-            sub = hid[miss]
-            prior_hint = self._seeded_priors(hid, miss)
-            pad = next_pow2(len(miss)) - len(miss)
-            if pad:
-                sub = np.concatenate([sub, np.repeat(sub[:1], pad, 0)], 0)
-                if prior_hint is not None:
-                    prior_hint = np.concatenate(
-                        [prior_hint, np.repeat(prior_hint[:1], pad, 0)], 0)
-            res = index_knn(self.index, jnp.asarray(sub), rng,
-                            prior_hint=prior_hint)
-            r_idx = np.asarray(res.indices)
-            r_vals = np.asarray(res.values)
-            for j, i in enumerate(miss):
-                idx[i], vals[i] = r_idx[j], r_vals[j]
-                self.query_cache.put(keys[i], (r_idx[j], r_vals[j]),
-                                     vec=hid[i])
-            ops = float(np.asarray(res.coord_ops)[: len(miss)].sum())
-            self._record_race(res, len(miss))
-        return idx, vals, ops
+    def stats(self) -> ServeStats:
+        """The handle's typed serving counters (``repro.api.ServeStats``):
+        cache hits/misses, races, near-repeat warm-starts, compactions,
+        reshards, replica fan-out — plus, behind a sharded index, cumulative
+        per-shard coordinate-ops and max rounds (load-balance telemetry).
+        ``stats.as_dict()`` is the stable JSON schema; the pre-PR-4 stringly
+        keys still work through ``stats["knn_cache_hits"]``-style access."""
+        return self.index.stats if self.index is not None else ServeStats()
 
     def _knn_logits(self, hidden, rng):
-        idx, vals, ops = self._knn_topk(hidden, rng)
+        res = self.index.query(np.asarray(hidden, np.float32), rng)
+        ops = float(np.asarray(res.coord_ops).sum())
         V = self.model.cfg.vocab_size
         # distance-weighted vote over retrieved next-tokens
-        w = jax.nn.softmax(-jnp.asarray(vals) / self.knn_lm.temperature, axis=-1)
-        toks = jnp.asarray(self._next_ids)[jnp.asarray(idx)]   # (B, k)
+        w = jax.nn.softmax(-jnp.asarray(res.values) / self.knn_lm.temperature,
+                           axis=-1)
+        toks = jnp.asarray(self.index.payload)[jnp.asarray(res.indices)]
         knn_probs = jnp.zeros((hidden.shape[0], V), jnp.float32)
-        knn_probs = knn_probs.at[jnp.arange(hidden.shape[0])[:, None], toks].add(w)
+        knn_probs = knn_probs.at[
+            jnp.arange(hidden.shape[0])[:, None], toks].add(w)
         return jnp.log(knn_probs + 1e-9), ops
 
-    def _remap_payload(self, old_ids: np.ndarray) -> None:
-        """Reindex the slot-aligned payload through an old→new global-id map
-        (the ``compact`` contract — also returned by sharded growth and
-        re-shard events)."""
-        remapped = np.zeros((len(old_ids),), np.int32)
-        live = old_ids >= 0
-        remapped[live] = self._next_ids[old_ids[live]]
-        self._next_ids = remapped
-
     def _append_to_index(self, hidden, tok):
-        """Fold this step's (hidden, next-token) pairs into the live index;
-        mutation shifts the live set, so cached top-k is invalidated, and
-        tombstone debt is amortized here (ROADMAP: auto-compaction folded
-        into decode steps)."""
-        if hasattr(self.index, "shards"):
-            from repro.index import sharded_insert, sharded_maybe_compact
-            self.index, slots, grow_ids = sharded_insert(
-                self.index, np.asarray(hidden))
-            if grow_ids is not None:    # stride grew → global ids shifted
-                self._remap_payload(grow_ids)
-            self._next_ids[slots] = np.asarray(tok)[:, 0]
-            self.index, old_ids = sharded_maybe_compact(
-                self.index, threshold=self.knn_lm.compact_threshold)
-        else:
-            from repro.index import insert, maybe_compact
-            self.index, slots = insert(self.index, np.asarray(hidden))
-            if self.index.capacity > len(self._next_ids):
-                grown = np.zeros((self.index.capacity,), np.int32)
-                grown[: len(self._next_ids)] = self._next_ids
-                self._next_ids = grown
-            self._next_ids[slots] = np.asarray(tok)[:, 0]
-            self.index, old_ids = maybe_compact(
-                self.index, threshold=self.knn_lm.compact_threshold)
-        if old_ids is not None:
-            self._remap_payload(old_ids)
-            self._stats["index_compactions"] += 1
-        if self.query_cache is not None:
-            self.query_cache.clear()
-            self._cache_index = self.index  # release the pre-mutation store
+        """Fold this step's (hidden, next-token) pairs into the live index.
+        The handle does the bookkeeping the engine used to: payload
+        alignment through growth/compaction remaps, cache invalidation via
+        the epoch fence, and the CompactionPolicy amortizing tombstone
+        debt into decode steps."""
+        self.index.insert(np.asarray(hidden), payload=np.asarray(tok)[:, 0])
+        self.index.maybe_compact()
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int, rng=None):
         """prompts (B, S0) int32 -> (B, max_new_tokens) int32 greedy tokens.

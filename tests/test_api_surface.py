@@ -1,0 +1,67 @@
+"""Public-API snapshot (PR-4 CI satellite): ``repro.api.__all__``, the
+``ServeStats``/``KNNResult``/``QuerySpec`` schemas, and the ``Index``
+method surface are pinned against ``tests/api_surface.json``.
+
+A mismatch here is a BREAKING-CHANGE gate, not a bug: if the change is
+intentional, update the snapshot (and bump ``repro.api.spec.SCHEMA_VERSION``
+when a *result/stats schema* changed — JSON consumers key off it) in the
+same commit and say so in the PR.
+"""
+import dataclasses
+import json
+import os
+
+SNAPSHOT = os.path.join(os.path.dirname(__file__), "api_surface.json")
+
+
+def _snapshot():
+    with open(SNAPSHOT) as f:
+        return json.load(f)
+
+
+def _fields(cls):
+    return [f.name for f in dataclasses.fields(cls)]
+
+
+def test_api_all_matches_snapshot():
+    import repro.api
+    assert sorted(repro.api.__all__) == _snapshot()["api_all"]
+    for name in repro.api.__all__:          # every name actually resolves
+        assert getattr(repro.api, name) is not None
+
+
+def test_serve_stats_schema_matches_snapshot():
+    from repro.api import ServeStats
+    from repro.api.spec import SCHEMA_VERSION
+    snap = _snapshot()
+    assert _fields(ServeStats) == snap["serve_stats_fields"]
+    assert SCHEMA_VERSION == snap["schema_version"]
+    # as_dict() emits exactly the fields plus the version tag
+    d = ServeStats().as_dict()
+    assert sorted(d) == sorted(snap["serve_stats_fields"]
+                               + ["schema_version"])
+
+
+def test_knn_result_and_query_spec_match_snapshot():
+    from repro.api import KNNResult, QuerySpec
+    snap = _snapshot()
+    assert _fields(KNNResult) == snap["knn_result_fields"]
+    assert _fields(QuerySpec) == snap["query_spec_fields"]
+
+
+def test_index_method_surface_matches_snapshot():
+    from repro.api import Index
+    public = sorted(
+        n for n, v in vars(Index).items()
+        if not n.startswith("_")
+        and (callable(v) or isinstance(v, (classmethod, staticmethod))))
+    assert public == _snapshot()["index_methods"]
+
+
+def test_deprecated_index_all_is_importable():
+    """The old surface must keep importing (deprecation shims) — its
+    __all__ is part of the compatibility contract."""
+    import repro.index as old
+    for name in old.__all__:
+        assert getattr(old, name) is not None
+    assert set(old._SHIMS) <= set(old.__all__)

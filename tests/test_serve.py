@@ -79,21 +79,22 @@ def test_knn_lm_hook_runs_and_counts_ops():
 
 def test_query_cache_serves_repeats_for_free():
     """Repeat queries hit the LRU: zero coordinate-ops, identical top-k,
-    counters surfaced in engine stats (ROADMAP: query cache)."""
+    typed counters surfaced in engine stats — both as ServeStats attributes
+    and through the legacy stringly keys (ROADMAP: query cache)."""
     engine, cfg = _engine(knn=True)
     hidden = jnp.asarray(np.random.default_rng(7).normal(
         size=(2, cfg.d_model)).astype(np.float32))
     logits1, ops1 = engine._knn_logits(hidden, jax.random.PRNGKey(0))
     assert ops1 > 0
     st = engine.stats
-    assert st["knn_cache_misses"] == 2 and st["knn_cache_hits"] == 0
+    assert st.cache_misses == 2 and st.cache_hits == 0
     assert st["knn_races"] == 1 and st["knn_raced_queries"] == 2
 
     # different rng — must not matter, results come from the cache
     logits2, ops2 = engine._knn_logits(hidden, jax.random.PRNGKey(9))
     assert ops2 == 0.0
     st = engine.stats
-    assert st["knn_cache_hits"] == 2 and st["knn_races"] == 1
+    assert st["knn_cache_hits"] == 2 and st.races == 1
     np.testing.assert_array_equal(np.asarray(logits1), np.asarray(logits2))
 
     # partial repeat: one cached row, one new row → only the miss races
@@ -101,23 +102,27 @@ def test_query_cache_serves_repeats_for_free():
     _, ops3 = engine._knn_logits(hidden2, jax.random.PRNGKey(1))
     assert ops3 > 0
     st = engine.stats
-    assert st["knn_cache_hits"] == 3 and st["knn_raced_queries"] == 3
+    assert st.cache_hits == 3 and st.raced_queries == 3
 
-    # EXTERNAL mutation (not via the engine's append) must invalidate too:
-    # IndexStores are immutable, so the engine detects the swap by identity
-    from repro.index import delete as index_delete, index_knn
-    top0 = int(np.asarray(index_knn(engine.index, hidden[:1],
-                                    jax.random.PRNGKey(2)).indices[0, 0]))
-    engine.index = index_delete(engine.index, [top0])
+    # handle-side mutation (not via the engine's append) must invalidate
+    # too: every mutation bumps the handle's epoch, which fences the cache
+    epoch0 = engine.index.epoch
+    top0 = int(engine.index.query(np.asarray(hidden)[:1],
+                                  jax.random.PRNGKey(2),
+                                  cache="bypass").indices[0, 0])
+    engine.index.delete([top0])
+    assert engine.index.epoch == epoch0 + 1
     _, ops4 = engine._knn_logits(hidden, jax.random.PRNGKey(2))
     assert ops4 > 0                       # raced fresh — no stale cache hit
-    res = index_knn(engine.index, hidden[:1], jax.random.PRNGKey(3))
+    res = engine.index.query(np.asarray(hidden)[:1], jax.random.PRNGKey(3),
+                             cache="bypass")
     assert top0 not in set(np.asarray(res.indices[0]).tolist())
 
 
 def test_query_cache_get_near_and_eviction():
     """Near-match lookup: cosine threshold, exact-miss-only contract, and
-    vector eviction riding the LRU."""
+    vector eviction riding the LRU (QueryCache now lives in repro.api;
+    the engine re-exports it)."""
     from repro.serve.engine import QueryCache
     cache = QueryCache(capacity=2)
     a = np.asarray([1.0, 0.0, 0.0], np.float32)
@@ -135,80 +140,101 @@ def test_query_cache_get_near_and_eviction():
     assert len(cache._vecs) == 2
 
 
+def test_query_cache_zero_norm_guards():
+    """Regression (PR 4 satellite): cosine lookup divides by vector norms —
+    a zero (or non-finite) query vector must MISS, never NaN-match, and a
+    zero-norm vector is never admitted to the near-match matrix."""
+    from repro.api import QueryCache
+    cache = QueryCache(capacity=4)
+    a = np.asarray([1.0, 0.0, 0.0], np.float32)
+    cache.put(QueryCache.key(a), "A", vec=a)
+    zero = np.zeros(3, np.float32)
+    with np.errstate(all="raise"):        # any divide/invalid would raise
+        assert cache.get_near(zero, 0.95) is None
+        assert cache.get_near(np.asarray([np.nan] * 3, np.float32),
+                              0.95) is None
+    # a zero-vector put stays servable by exact key but never near-matches
+    cache.put(QueryCache.key(zero), "Z", vec=zero)
+    assert cache.get(QueryCache.key(zero)) == "Z"
+    assert QueryCache.key(zero) not in cache._vecs
+    with np.errstate(all="raise"):
+        assert cache.get_near(np.asarray([0.0, 1.0, 0.0], np.float32),
+                              0.95) is None
+
+
 def test_near_repeat_seeds_priors_and_counts(monkeypatch):
     """A near-repeat query (cosine ≥ threshold to a cached one) still races
     — it is a cache miss — but its CI priors are seeded from the cached
     neighbour's result: near_hits counts it, a per-query prior_hint reaches
-    index_knn, and the top-k is still exact (ROADMAP: near-repeat
+    the racing driver, and the top-k is still exact (ROADMAP: near-repeat
     warm-starts)."""
     engine, cfg = _engine(knn=True)
     hidden = jnp.asarray(np.random.default_rng(9).normal(
         size=(2, cfg.d_model)).astype(np.float32))
     engine._knn_logits(hidden, jax.random.PRNGKey(0))       # fill the cache
-    assert engine.stats["knn_near_hits"] == 0
+    assert engine.stats.near_hits == 0
 
     seen_hints = []
-    import repro.serve.engine as eng_mod
-    from repro.index import index_knn as real_index_knn
+    import repro.api.handle as handle_mod
+    real_index_knn = handle_mod._index_knn
 
     def spy(store, queries, rng, **kw):
         seen_hints.append(kw.get("prior_hint"))
         return real_index_knn(store, queries, rng, **kw)
 
-    monkeypatch.setattr(eng_mod, "index_knn", spy, raising=False)
-    # the engine imports index_knn inside _knn_topk; patch at the source
-    import repro.index as idx_mod
-    monkeypatch.setattr(idx_mod, "index_knn", spy)
+    # Index.query races through the one seam in repro.api.handle
+    monkeypatch.setattr(handle_mod, "_index_knn", spy)
 
     near = np.asarray(hidden, np.float32).copy()
     near[0] *= 1.0 + 1e-4                    # same direction, new bytes
-    idx, vals, ops = engine._knn_topk(jnp.asarray(near[:1]),
-                                      jax.random.PRNGKey(1))
+    res = engine.index.query(near[:1], jax.random.PRNGKey(1))
     st = engine.stats
     assert st["knn_near_hits"] == 1
-    assert ops > 0                           # raced, not short-circuited
+    assert float(res.coord_ops.sum()) > 0    # raced, not short-circuited
     hint = seen_hints[-1]
     assert hint is not None and hint.shape[1] == engine.index.capacity
     # the cached neighbour's arms got tightened priors, others kept base
-    base = np.asarray(engine.index.prior_var, np.float32)
+    base = np.asarray(engine.index.store.prior_var, np.float32)
     tightened = np.nonzero(hint[0] < base - 1e-12)[0]
-    cached_idx, _ = engine.query_cache.get(
-        engine.query_cache.key(np.asarray(hidden, np.float32)[0]))
+    cache = engine.index._cache
+    cached_idx, _ = cache.get(cache.key(np.asarray(hidden, np.float32)[0]))
     assert set(tightened.tolist()) <= set(np.asarray(cached_idx).tolist())
     # scaling ~ (1e-4 perturbation) keeps the true top-k unchanged
     from repro.core import oracle
     keys = np.asarray(np.random.default_rng(0).normal(
         size=(128, cfg.d_model)), np.float32)
     ex = oracle.exact_knn(keys, near[:1], 4, "l2")
-    assert set(idx[0].tolist()) == set(np.asarray(ex.indices[0]).tolist())
+    assert set(res.indices[0].tolist()) == \
+        set(np.asarray(ex.indices[0]).tolist())
 
 
 def test_index_append_invalidates_cache_and_auto_compacts():
     """Decode-time appends invalidate cached top-k; tombstone debt crossing
-    the threshold triggers auto-compaction with payload remapping."""
-    from repro.index import delete as index_delete
+    the CompactionPolicy threshold triggers auto-compaction with the
+    handle's automatic payload remapping."""
     engine, cfg = _engine(knn=True)
     hidden = jnp.asarray(np.random.default_rng(8).normal(
         size=(2, cfg.d_model)).astype(np.float32))
     engine._knn_logits(hidden, jax.random.PRNGKey(0))
-    assert engine.stats["knn_cache_entries"] == 2
+    assert engine.stats.cache_entries == 2
 
     # tombstone 100 of 128 slots, then append: fraction crosses 0.5
-    engine.index = index_delete(engine.index, list(range(20, 120)))
+    engine.index.delete(list(range(20, 120)))
     tok = np.asarray([[1], [2]], np.int32)
-    before = engine._next_ids.copy()
+    before = engine.index.payload.copy()
     engine._append_to_index(np.asarray(hidden), tok)
     st = engine.stats
     assert st["index_compactions"] == 1
-    assert engine.stats["knn_cache_entries"] == 0     # invalidated
+    assert engine.stats.cache_entries == 0            # invalidated
     assert engine.index.capacity == 32                # 30 live → pow2 cover
     assert engine.index.n_live == 30
     # the payload rode along: compaction keeps live slots in ascending
     # order, so old slots 0..19 land on new slots 0..19 and the two rows
     # appended into freed slots follow
-    assert len(engine._next_ids) == engine.index.capacity
-    np.testing.assert_array_equal(engine._next_ids[:20], before[:20])
-    assert set(engine._next_ids[20:22].tolist()) == {1, 2}
+    payload = engine.index.payload
+    assert len(payload) == engine.index.capacity
+    np.testing.assert_array_equal(payload[:20], before[:20])
+    assert set(payload[20:22].tolist()) == {1, 2}
     # retrieval still works end-to-end on the compacted index
     logits, ops = engine._knn_logits(hidden, jax.random.PRNGKey(2))
     assert np.isfinite(np.asarray(logits)).all() and ops > 0

@@ -1,14 +1,20 @@
 """Fast smoke entry for the index-serving benchmark (<60 s on CPU):
-a scaled-down fig8 run plus a mutation round-trip, for CI and pre-commit.
+a scaled-down fig8 run plus a mutation round-trip, for CI and pre-commit —
+all through the unified ``repro.api`` surface.
 
     PYTHONPATH=src python tools/bench_index.py
     # sharded smoke (needs N visible devices):
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
         PYTHONPATH=src python tools/bench_index.py --shards 4
+    # LIVE elastic re-shard under load (DESIGN.md §6.3): qps at S=4, then
+    # Index.reshard(2) on the serving handle, then qps vs a fresh S=2 build:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python tools/bench_index.py --shards 4 --live-reshard 2
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -17,72 +23,120 @@ sys.path.insert(0, "src")
 import jax
 import numpy as np
 
+from repro.api import Index
 from repro.configs.base import BMOConfig
 from repro.core import bmo_nn, oracle
 from repro.data.synthetic import make_knn_benchmark_data
-from repro.index import build_index, compact, delete, index_knn, insert
 
 
-def main_sharded(shards: int, n: int = 1024, d: int = 1024, Q: int = 16,
-                 k: int = 5):
-    """Sharded smoke: parity + qps vs the single-shard fused driver, plus a
-    mutation round-trip through global ids (DESIGN.md §5)."""
-    from repro.index import (build_sharded_index, sharded_delete,
-                             sharded_insert, sharded_maybe_compact)
-    from repro.index.placement import balance
+def _timed(fn):
+    fn()                                   # warm
+    t0 = time.perf_counter()
+    r = fn()
+    jax.block_until_ready(r.values)
+    return r, time.perf_counter() - t0
+
+
+def _row_acc(handle: Index, res, exact_idx, Q: int) -> float:
+    """Exact-set accuracy through the handle's build-row map (global slot
+    ids → original corpus rows)."""
+    row_of = np.full(handle.capacity, -1)
+    bg = handle.build_gids
+    keep = bg >= 0
+    row_of[bg[keep]] = np.nonzero(keep)[0]
+    rows = row_of[np.asarray(res.indices)]
+    return float(np.mean([set(rows[i].tolist())
+                          == set(np.asarray(exact_idx[i]).tolist())
+                          for i in range(Q)]))
+
+
+def main_sharded(shards: int, live_reshard: int = 0, n: int = 1024,
+                 d: int = 1024, Q: int = 16, k: int = 5, out: str = ""):
+    """Sharded smoke: parity + qps vs the single-shard fused driver, a
+    mutation round-trip through global ids, and (with ``--live-reshard S'``)
+    a live elastic re-shard under query load benchmarked against a freshly
+    built S' index (acceptance bar: within 10%)."""
     t_start = time.perf_counter()
     corpus, queries = make_knn_benchmark_data("dense", n, d, Q, seed=8)
     cfg = BMOConfig(k=k, delta=0.01, block=128, batch_arms=32,
                     pulls_per_round=2, metric="l2")
     ex = oracle.exact_knn(corpus, queries, k, "l2")
 
-    def timed(fn):
-        fn()                                   # warm
-        t0 = time.perf_counter()
-        r = fn()
-        jax.block_until_ready(r.values)
-        return r, time.perf_counter() - t0
-
-    single = build_index(corpus, cfg, jax.random.PRNGKey(0))
-    base, t_single = timed(
-        lambda: index_knn(single, queries, jax.random.PRNGKey(1)))
-    store, gids = build_sharded_index(corpus, cfg, jax.random.PRNGKey(0),
-                                      shards=shards)
-    res, t_shard = timed(
-        lambda: index_knn(store, queries, jax.random.PRNGKey(1)))
-    row_of = np.full(store.capacity, -1)
-    row_of[gids] = np.arange(len(gids))
-
-    def acc(idx, rows=False):
-        got = row_of[np.asarray(idx)] if rows else np.asarray(idx)
-        return float(np.mean([set(got[i].tolist())
-                              == set(np.asarray(ex.indices[i]).tolist())
-                              for i in range(Q)]))
-
+    single = Index.build(corpus, cfg, jax.random.PRNGKey(0))
+    base, t_single = _timed(
+        lambda: single.query(queries, jax.random.PRNGKey(1), cache="bypass"))
+    handle = Index.build(corpus, cfg, jax.random.PRNGKey(0), shards=shards)
+    res, t_shard = _timed(
+        lambda: handle.query(queries, jax.random.PRNGKey(1), cache="bypass"))
+    from repro.index.placement import balance
+    acc = _row_acc(handle, res, ex.indices, Q)
     print(f"single-shard fused: {Q / t_single:8.1f} qps  "
-          f"acc={acc(base.indices):.3f}")
-    print(f"sharded (S={shards}):  {Q / t_shard:8.1f} qps  "
-          f"acc={acc(res.indices, rows=True):.3f}  "
-          f"balance={balance(store.live_per_shard):.2f}  "
-          f"shard_ops={np.asarray(res.shard_coord_ops).astype(int).tolist()}")
-    assert acc(res.indices, rows=True) == 1.0
+          f"acc={_row_acc(single, base, ex.indices, Q):.3f}")
+    print(f"sharded (S={shards}):  {Q / t_shard:8.1f} qps  acc={acc:.3f}  "
+          f"balance={balance(handle.store.live_per_shard):.2f}  "
+          f"shard_ops={[int(v) for v in res.shard_coord_ops]}")
+    assert acc == 1.0
+
+    entries = []
+    if live_reshard:
+        # live elastic re-shard UNDER LOAD: the same handle keeps serving —
+        # queries before, the admin swap, queries after; no checkpoint.
+        for _ in range(3):                 # load before the swap
+            handle.query(queries, jax.random.PRNGKey(2), cache="bypass")
+        t0 = time.perf_counter()
+        handle.reshard(live_reshard)
+        t_swap = time.perf_counter() - t0
+        after, t_after = _timed(lambda: handle.query(
+            queries, jax.random.PRNGKey(3), cache="bypass"))
+        acc_after = _row_acc(handle, after, ex.indices, Q)
+        fresh = Index.build(corpus, cfg, jax.random.PRNGKey(0),
+                            shards=live_reshard)
+        fres, t_fresh = _timed(lambda: fresh.query(
+            queries, jax.random.PRNGKey(3), cache="bypass"))
+        ratio = t_fresh / t_after
+        print(f"live reshard S={shards}->S'={live_reshard}: swap {t_swap:.2f}s, "
+              f"{Q / t_after:8.1f} qps after (acc={acc_after:.3f})")
+        print(f"fresh S'={live_reshard} build:  {Q / t_fresh:8.1f} qps  "
+              f"-> live/fresh qps ratio {ratio:.2f} (bar: >= 0.9)")
+        assert acc_after == 1.0
+        assert ratio >= 0.9, (
+            f"live-resharded index serves at {ratio:.2f}x of a fresh "
+            f"S={live_reshard} build (want >= 0.9)")
+        entries.append({
+            "bench": "live_reshard",
+            "shards_from": shards, "shards_to": live_reshard,
+            "Q": Q, "n": n, "d": d, "k": k,
+            "swap_seconds": t_swap,
+            "qps_live": Q / t_after, "qps_fresh": Q / t_fresh,
+            "qps_ratio_live_vs_fresh": ratio,
+            "acc": acc_after,
+            "serve_stats": handle.stats.as_dict(),   # typed ServeStats
+        })
 
     # mutation smoke over global ids: delete q0's true NN, insert a closer
-    # point (least-loaded routing), compact with the returned remap
+    # point (least-loaded routing), compact with the handle's remap
+    gids = handle.build_gids
     nn0 = int(np.asarray(ex.indices[0])[0])
-    store = sharded_delete(store, [gids[nn0]])
-    store, slots, _ = sharded_insert(store, queries[:1])
-    r2 = index_knn(store, queries[:1], jax.random.PRNGKey(2))
-    assert int(np.asarray(r2.indices[0])[0]) == int(slots[0])
+    handle.delete([gids[nn0]])
+    ins = handle.insert(queries[:1], payload=np.asarray([1], np.int32))
+    r2 = handle.query(queries[:1], jax.random.PRNGKey(2), cache="bypass")
+    assert int(np.asarray(r2.indices[0])[0]) == int(ins[0])
     # (skip nn0: the insert may have reused its freed slot)
-    store = sharded_delete(
-        store, gids[[r for r in range(n // 2 - 16, n) if r != nn0]])
-    store, old_ids = sharded_maybe_compact(store, threshold=0.4)
+    handle.delete(gids[[r for r in range(n // 2 - 16, n)
+                        if r != nn0 and gids[r] >= 0]])
+    old_ids = handle.maybe_compact(threshold=0.4)
     assert old_ids is not None
-    r3 = index_knn(store, queries[:1], jax.random.PRNGKey(3))
-    assert int(old_ids[int(np.asarray(r3.indices[0])[0])]) == int(slots[0])
+    r3 = handle.query(queries[:1], jax.random.PRNGKey(3), cache="bypass")
+    assert int(handle.payload[int(np.asarray(r3.indices[0])[0])]) == 1
     print(f"sharded mutation round-trip OK (insert/delete/compact), "
           f"total {time.perf_counter() - t_start:.1f}s")
+    if out and entries:
+        with open(out, "w") as f:
+            json.dump({"bench": "bench_index_sharded",
+                       "backend": jax.default_backend(),
+                       "devices": jax.device_count(),
+                       "entries": entries}, f, indent=1)
+        print(f"wrote {out} ({len(entries)} entries)")
 
 
 def main(n: int = 1024, d: int = 1024, Q: int = 16, k: int = 5):
@@ -92,18 +146,19 @@ def main(n: int = 1024, d: int = 1024, Q: int = 16, k: int = 5):
                     pulls_per_round=2, metric="l2")
     ex = oracle.exact_knn(corpus, queries, k, "l2")
 
-    def timed(fn):
-        fn()                                   # warm
-        t0 = time.perf_counter()
-        r = fn()
+    def timed_knn():
+        r = bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(0))
         jax.block_until_ready(r.values)
-        return r, time.perf_counter() - t0
+        return r
 
-    base, t_base = timed(
-        lambda: bmo_nn.knn(corpus, queries, cfg, jax.random.PRNGKey(0)))
-    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
-    batched, t_batch = timed(
-        lambda: index_knn(store, queries, jax.random.PRNGKey(1)))
+    timed_knn()
+    t0 = time.perf_counter()
+    base = timed_knn()
+    t_base = time.perf_counter() - t0
+    handle = Index.build(corpus, cfg, jax.random.PRNGKey(0),
+                         payload=np.arange(n, dtype=np.int32))
+    batched, t_batch = _timed(
+        lambda: handle.query(queries, jax.random.PRNGKey(1), cache="bypass"))
 
     def acc(idx):
         return float(np.mean([set(np.asarray(idx[i]).tolist())
@@ -116,14 +171,15 @@ def main(n: int = 1024, d: int = 1024, Q: int = 16, k: int = 5):
 
     # mutation smoke: delete the true NN of query 0, insert a closer point
     nn0 = int(np.asarray(ex.indices[0])[0])
-    store = delete(store, [nn0])
-    store, slots = insert(store, queries[:1])
-    res = index_knn(store, queries[:1], jax.random.PRNGKey(2))
+    handle.delete([nn0])
+    slots = handle.insert(queries[:1], payload=np.asarray([-7], np.int32))
+    res = handle.query(queries[:1], jax.random.PRNGKey(2), cache="bypass")
     top = int(np.asarray(res.indices[0])[0])
     assert top == int(slots[0]), (top, slots)
-    store, old_ids = compact(store)
-    res = index_knn(store, queries[:1], jax.random.PRNGKey(3))
-    assert int(old_ids[int(np.asarray(res.indices[0])[0])]) == int(slots[0])
+    handle.compact()
+    res = handle.query(queries[:1], jax.random.PRNGKey(3), cache="bypass")
+    # the payload rides the compaction remap inside the handle
+    assert int(handle.payload[int(np.asarray(res.indices[0])[0])]) == -7
     print(f"mutation round-trip OK (insert/delete/compact), "
           f"total {time.perf_counter() - t_start:.1f}s")
 
@@ -133,8 +189,16 @@ if __name__ == "__main__":
     ap.add_argument("--shards", type=int, default=0,
                     help=">1: run the sharded smoke instead (needs that many "
                          "visible devices)")
+    ap.add_argument("--live-reshard", type=int, default=0,
+                    help="with --shards: live-reshard the serving handle to "
+                         "this shard count under load and compare qps "
+                         "against a fresh build at that count")
+    ap.add_argument("--out", default="",
+                    help="JSON output path for the live-reshard entry "
+                         "(ServeStats schema; '' disables)")
     args = ap.parse_args()
     if args.shards > 1:
-        main_sharded(args.shards)
+        main_sharded(args.shards, live_reshard=args.live_reshard,
+                     out=args.out)
     else:
         main()
