@@ -1,0 +1,32 @@
+"""Request-plane open-loop serving latency (DESIGN.md §7.5) — the PR-5
+serving figure: deadline-bounded p99 under Poisson overload, plane vs the
+blocking FIFO baseline. Delegates to ``tools/bench_serve_plane.py`` (the
+full evidence run lives there; this registry entry runs the smoke preset
+so ``python -m benchmarks.run fig9`` stays minutes-cheap) and emits the
+harness CSV convention."""
+from __future__ import annotations
+
+import importlib.util
+import os
+
+from benchmarks.common import emit
+
+_TOOL = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                     "tools", "bench_serve_plane.py")
+
+
+def main() -> None:
+    spec = importlib.util.spec_from_file_location("bench_serve_plane", _TOOL)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    out = mod.main(["--smoke"])
+    base, plane = out["baseline"]["bounded"], out["plane"]["bounded"]
+    emit("fig9_baseline_p99_bounded", base["p99_ms"] * 1e3,
+         derived=f"p50={base['p50_ms']}ms")
+    emit("fig9_plane_p99_bounded", plane["p99_ms"] * 1e3,
+         derived=f"speedup={out['speedup_p99_bounded']}x"
+                 f";shed={out['plane']['shed_rate']}")
+
+
+if __name__ == "__main__":
+    main()

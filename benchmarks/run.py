@@ -11,7 +11,7 @@ import time
 import traceback
 
 BENCHES = ["fig2", "fig3a", "fig4a", "fig4b", "fig5", "fig6", "fig7",
-           "fig8", "roofline"]
+           "fig8", "fig9", "roofline"]
 
 
 def main() -> None:
@@ -27,6 +27,7 @@ def main() -> None:
             "fig6": "benchmarks.fig6_wallclock",
             "fig7": "benchmarks.fig7_rotation",
             "fig8": "benchmarks.fig8_batched_serve",
+            "fig9": "benchmarks.fig9_serve_plane",
             "roofline": "benchmarks.roofline_table",
         }[name]
         t0 = time.time()

@@ -23,6 +23,11 @@ under the epoch fence, payload realigned automatically) →
 ``Index.add_replicas(2)`` read fan-out → serve with per-shard stats:
 
     PYTHONPATH=src python examples/knn_serve.py --shards 4
+
+The tail demos the PR-5 **async request plane** (DESIGN.md §7): submit an
+anytime ticket against ``engine.plane``, stream certified-prefix partials,
+exit early once enough of the answer is certified, then run a
+deadline-bounded query that returns its certified prefix at expiry.
 """
 import argparse
 import os
@@ -141,13 +146,49 @@ def main():
           f"{float(n_exact) / max(retrieval_ops, 1):.1f}x)")
     print(f"index grew during decode: {engine.index.n_live} live slots "
           f"(+{engine.index.n_live - n_live_before} appended)")
-    stats = engine.stats                   # typed repro.api.ServeStats
+    stats = engine.stats                   # typed repro.api.ServeStats (v2)
     print(f"serve stats: {stats.as_dict()}")
     if stats.shard_coord_ops is not None:
         print(f"per-shard coord-ops: "
               f"{[f'{v:.3g}' for v in stats.shard_coord_ops]}, "
               f"max rounds {stats.shard_rounds} "
               f"(near_hits={stats.near_hits})")
+
+    # -- PR-5: the async request plane (DESIGN.md §7) ----------------------
+    # The engine's plane is a shared scheduler: external callers submit
+    # anytime tickets against the same index the decode loop retrieves
+    # from. submit -> stream partials -> exit early once *enough* of the
+    # answer is certified — the bandit race is anytime, so every epoch
+    # boundary yields a certified prefix plus honest CI radii on the rest.
+    from repro.api import Deadline, EffortBudget
+
+    plane = engine.plane
+    probe = keys[:4] + 0.01 * np.random.default_rng(5).normal(
+        size=(4, keys.shape[1])).astype(np.float32)
+    ticket = plane.submit(probe, rng=jax.random.PRNGKey(21),
+                          budget=EffortBudget(epochs=8))
+    want_certified = 2                     # early-exit bar: top-2 certified
+    for partial in plane.stream(ticket):
+        cc = partial.certified_count
+        print(f"  anytime epoch {partial.epochs}: certified/row {cc}, "
+              f"max CI radius {float(np.max(partial.ci_radii)):.3g}"
+              + (f" [terminal: {partial.reason}]" if partial.terminal
+                 else ""))
+        if not partial.terminal and (cc >= want_certified).all():
+            print(f"  early exit: every row has its top-{want_certified} "
+                  "certified — consumer stops streaming, scheduler will "
+                  "finish or retire the ticket")
+            break
+    # deadline-bounded traffic: the plane returns the certified prefix at
+    # expiry instead of blocking everyone behind full certification
+    late = plane.query(probe, rng=jax.random.PRNGKey(22),
+                       deadline=Deadline(ms=5.0), cache="bypass")
+    print(f"deadline(5ms) answer: reason={late.reason}, "
+          f"certified/row {late.certified_count} of k={late.indices.shape[1]}"
+          f" (epoch {late.epoch})")
+    print(f"plane stats: "
+          f"{ {k2: v for k2, v in engine.stats.as_dict().items() if k2.startswith('plane_')} }")
+
     print("note: at this smoke scale (d=64, n≈500) exact search is cheap; "
           "the bandit gain appears at the paper's d≈4k–28k regime "
           "(see quickstart.py / benchmarks).")

@@ -8,6 +8,12 @@ typed serving counters (``ServeStats``), and first-class admin ops — LIVE
 elastic re-sharding (``Index.reshard``) and read-replica fan-out
 (``Index.add_replicas``) with no checkpoint round-trip.
 
+Since PR 5 the surface also speaks the *anytime* protocol (``api/stream.py``,
+DESIGN.md §7): ``QuerySpec`` can carry a ``Deadline`` / ``EffortBudget``,
+``Index.race`` opens an epoch-granular resumable race, and the request plane
+(``repro.serve.plane.RequestPlane``) turns those into tickets with streamed
+``AnytimeResult`` partials.
+
 The pre-PR-4 ``repro.index`` free functions remain as deprecation shims.
 
     from repro.api import Index, QuerySpec
@@ -17,18 +23,30 @@ The pre-PR-4 ``repro.index`` free functions remain as deprecation shims.
     idx.insert(rows, payload=toks); idx.maybe_compact()
     idx.reshard(8)          # live, bit-identical to save->load-at-8
     idx.add_replicas(2)     # read fan-out over replica meshes
+
+    from repro.serve.plane import RequestPlane
+    from repro.api import Deadline
+    plane = RequestPlane(idx)
+    t = plane.submit(queries, deadline=Deadline(ms=5.0))
+    for partial in plane.stream(t):                    # AnytimeResult
+        ...                                            # anytime consumption
 """
 from repro.api.cache import QueryCache
 from repro.api.handle import Index
 from repro.api.spec import (CachePolicy, CompactionPolicy, KNNResult,
                             QuerySpec, ServeStats)
+from repro.api.stream import AnytimeResult, Deadline, EffortBudget, Ticket
 
 __all__ = [
+    "AnytimeResult",
     "CachePolicy",
     "CompactionPolicy",
+    "Deadline",
+    "EffortBudget",
     "Index",
     "KNNResult",
     "QueryCache",
     "QuerySpec",
     "ServeStats",
+    "Ticket",
 ]

@@ -433,6 +433,54 @@ class Index:
                             coord_ops=coord_ops, rounds=rounds,
                             n_exact=n_exact, cache_hits=Q - len(miss))
 
+    def race(self, queries, rng=None, *, spec: Optional[QuerySpec] = None,
+             raced_queries: Optional[int] = None, chunk_rounds: int = 0,
+             **overrides):
+        """Epoch-granular resumable race — the anytime twin of ``query``
+        (DESIGN.md §7.1). Returns a ``repro.index.anytime.RaceSession``:
+        ``step()`` advances one epoch, ``snapshot`` is the partial top-k
+        with CI radii and the certified-prefix length. The request plane
+        (``repro.serve.plane``) drives this to implement deadlines, effort
+        budgets and anytime streaming; it never touches the query LRU
+        (partial results must not poison the cache).
+
+        ``raced_queries`` overrides the row count recorded in ``stats``
+        (the plane pads coalesced batches to powers of two)."""
+        from repro.index.anytime import make_session
+        if spec is None:
+            spec = QuerySpec(**overrides)
+        elif overrides:
+            spec = dataclasses.replace(spec, **overrides)
+        cfg = spec.bind(self.cfg)
+        if rng is None:
+            rng = jax.random.PRNGKey(self._auto_rng)
+            self._auto_rng += 1
+        if spec.mode == "fused" and self.kind == "sparse":
+            raise ValueError("the fused epoch driver pulls corpus blocks — "
+                             "sparse boxes race on the per-round driver")
+        if spec.mode == "rounds" and self.kind != "sparse":
+            raise ValueError(
+                "anytime sessions drive dense/rotated boxes through the "
+                "epoch-fused driver; mode='rounds' is blocking-query only")
+        session = make_session(
+            self._route(), queries, rng, cfg=cfg, impl=spec.impl,
+            eliminate=spec.eliminate, warm_start=spec.warm_start,
+            prior_hint=spec.prior_hint, chunk_rounds=chunk_rounds)
+        self._races += 1
+        self._raced_queries += int(raced_queries if raced_queries is not None
+                                   else session.Q)
+        return session
+
+    def _record_session_telemetry(self, session) -> None:
+        """Fold a finished RaceSession's per-shard counters into stats
+        (the plane calls this when it drops a race group)."""
+        if (self._shard_coord_ops is not None
+                and session.shard_coord_ops is not None
+                and len(session.shard_coord_ops) == len(self._shard_coord_ops)):
+            self._shard_coord_ops += np.asarray(session.shard_coord_ops)
+            self._shard_rounds = np.maximum(
+                self._shard_rounds, np.asarray(session.shard_rounds))
+
     def _result(self, raw, **overrides) -> KNNResult:
         kw = dict(
             shard_coord_ops=(np.asarray(raw.shard_coord_ops).tolist()

@@ -30,7 +30,9 @@ CACHE_POLICIES = ("use", "bypass", "refresh")
 
 #: schema version of KNNResult / ServeStats.as_dict() — bump on any field
 #: change so downstream JSON consumers (benchmarks, dashboards) can gate.
-SCHEMA_VERSION = 1
+#: v2 (PR 5): QuerySpec gained deadline/budget; ServeStats gained the
+#: request-plane queue/latency fields (DESIGN.md §7.4).
+SCHEMA_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,8 +54,14 @@ class QuerySpec:
     prior_hint: Optional[Any] = None   # (Q, capacity) per-query variance
                                        # priors (near-repeat warm starts)
     cache: str = "use"                 # use | bypass | refresh the query LRU
+    deadline: Optional[Any] = None     # stream.Deadline — wall-clock cap;
+                                       # the request plane returns the
+                                       # certified prefix at expiry
+    budget: Optional[Any] = None       # stream.EffortBudget — pull-budget
+                                       # cap (epochs / coord_ops)
 
     def __post_init__(self):
+        from repro.api.stream import Deadline, EffortBudget
         if self.mode not in MODES:
             raise ValueError(f"unknown mode {self.mode!r} (want one of {MODES})")
         if self.impl not in IMPLS:
@@ -67,6 +75,16 @@ class QuerySpec:
             raise ValueError(f"delta must be in (0, 1), got {self.delta}")
         if self.max_rounds is not None and self.max_rounds < 1:
             raise ValueError(f"max_rounds must be >= 1, got {self.max_rounds}")
+        if self.deadline is not None and not isinstance(self.deadline,
+                                                        Deadline):
+            raise ValueError(
+                f"deadline must be a repro.api.Deadline, got "
+                f"{type(self.deadline).__name__}")
+        if self.budget is not None and not isinstance(self.budget,
+                                                      EffortBudget):
+            raise ValueError(
+                f"budget must be a repro.api.EffortBudget, got "
+                f"{type(self.budget).__name__}")
 
     def bind(self, cfg):
         """Apply the spec's overrides to the store's build-time BMOConfig."""
@@ -82,11 +100,13 @@ class QuerySpec:
     @property
     def cacheable(self) -> bool:
         """Only default-contract races may hit or fill the query LRU: a k /
-        δ / budget override or a seeded prior changes what the cached result
-        would certify."""
+        δ / budget override, a seeded prior, or an anytime early-exit
+        contract (deadline / effort budget — the result may be partial)
+        changes what the cached result would certify."""
         return (self.k is None and self.delta is None
                 and self.max_rounds is None and self.prior_hint is None
-                and self.eliminate and self.warm_start)
+                and self.eliminate and self.warm_start
+                and self.deadline is None and self.budget is None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +153,20 @@ class ServeStats:
     replicas: int = 1          # read replicas serving the fan-out
     shard_coord_ops: Optional[List[float]] = None  # cumulative per shard
     shard_rounds: Optional[List[float]] = None     # max per shard
+    # -- request-plane telemetry (schema v2, DESIGN.md §7.4) ---------------
+    plane_submitted: int = 0   # tickets submitted
+    plane_admitted: int = 0    # tickets admitted into a race group
+    plane_completed: int = 0   # tickets finished (any terminal reason)
+    plane_shed: int = 0        # tickets shed at admission (backpressure)
+    plane_deadline_exits: int = 0   # terminated at the wall-clock deadline
+    plane_budget_exits: int = 0     # terminated at the effort budget
+    plane_readmitted: int = 0  # tickets re-raced after a mutation fence
+    plane_epochs: int = 0      # scheduler epochs run
+    plane_queue_depth: int = 0      # tickets waiting for admission (now)
+    plane_active: int = 0      # tickets racing (now)
+    plane_latency_p50_ms: Optional[float] = None   # terminal latency
+    plane_latency_p95_ms: Optional[float] = None
+    plane_latency_p99_ms: Optional[float] = None
 
     _LEGACY = {
         "knn_races": "races",

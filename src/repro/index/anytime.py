@@ -1,0 +1,696 @@
+"""Epoch-granular resumable races — the anytime engine under the request
+plane (DESIGN.md §7.1).
+
+The bandit race is naturally an *anytime* algorithm: at every epoch boundary
+each query holds a partial top-k with per-arm confidence intervals. The
+blocking drivers (``batched_race.py``, ``sharded.py``) run that loop to full
+certification inside one call; this module re-exposes the SAME loop as a
+``RaceSession`` the scheduler can drive one epoch at a time:
+
+    sess = make_session(store, queries, rng, cfg=cfg)
+    while sess.step():
+        partial = sess.snapshot          # host-side anytime view
+        ...                              # serve it, check deadlines, retire
+
+Correctness of the partial view (the *certified-prefix* contract, tested):
+
+  * After every epoch the ≤ k **accepted** arms of each query are lazily
+    exact-evaluated in place (mean ← exact θ, CI ← 0; Welford pool stats
+    untouched so the survivor-pooled CI variance is unchanged). Accepted
+    arms are never pulled again, so this is a one-time O(k·d) cost per
+    query, the same O(d) term the paper's bound already pays — and the
+    sharded merge already required it (DESIGN.md §5.3).
+  * ``snapshot.acc_count`` leading entries are accepted arms sorted by
+    exact θ. An entry is *order-certified* at position i iff its exact θ is
+    below the minimum LCB over every remaining candidate
+    (``snapshot.cand_lcb_min``): w.h.p. 1 − δ no candidate — and hence no
+    later-accepted arm — can end below it, so the certified prefix of any
+    partial answer equals the full-certification answer's prefix.
+  * A ``done`` query's accepted set IS its certificate (the acceptance rule
+    already beat every candidate), so its ``cand_lcb_min`` is +inf and the
+    whole prefix certifies.
+
+Sessions exist for all four store boxes: single-shard dense/rotated (the
+epoch-fused frontier driver), single-shard sparse (the per-round driver in
+bounded-round chunks), and their sharded twins (shard-local state stepped
+under ``shard_map``, merged on host per snapshot).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import BMOConfig
+from repro.core import confidence as conf
+from repro.core.ucb import INF
+from repro.index.batched_race import (BatchedRaceState, RoundsRaceFns,
+                                      _dense_exact_theta, _frontier_ci,
+                                      _fused_epoch_step, _fused_init,
+                                      make_sparse_rounds_race)
+from repro.index.frontier import FrontierState, bucket_width, compact_frontier
+from repro.index.sharded import (AXIS, _ST_SPEC, ShardedIndexStore,
+                                 _compact_stacked, _fused_init_fn,
+                                 _fused_step_fn, _shard_delta, _squeeze,
+                                 _unsqueeze)
+
+_BIG = 1e9
+
+
+class RaceSummary(NamedTuple):
+    """Device-side anytime view of one race batch, refreshed per epoch."""
+    ids: jax.Array          # (Q, k) slot ids, accepted-first then best cands
+    values: jax.Array       # (Q, k) exact θ for accepted, estimates after
+    ci: jax.Array           # (Q, k) CI half-widths (0 where exact)
+    acc_count: jax.Array    # (Q,) leading accepted (certification-ready)
+    cand_lcb_min: jax.Array  # (Q,) min LCB over remaining candidates
+    done: jax.Array         # (Q,) race finished (k certified / exhausted)
+    coord_ops: jax.Array    # (Q,)
+    rounds: jax.Array       # (Q,)
+    n_exact: jax.Array      # (Q,)
+
+
+class Partial(NamedTuple):
+    """Host-side (numpy) RaceSummary — sharded sessions merge S of them."""
+    ids: np.ndarray
+    values: np.ndarray
+    ci: np.ndarray
+    acc_count: np.ndarray
+    cand_lcb_min: np.ndarray
+    done: np.ndarray
+    coord_ops: np.ndarray
+    rounds: np.ndarray
+    n_exact: np.ndarray
+
+
+def _to_host(summ: RaceSummary) -> Partial:
+    return Partial(*(np.asarray(a) for a in summ))
+
+
+def _summarize(ids, mean, ci, exact, accepted, rejected, valid, done,
+               coord_ops, rounds, n_exact, k: int) -> RaceSummary:
+    """Rank the race state into the anytime view: accepted arms first
+    (ascending exact θ), then the best candidates by current estimate.
+    Junk picks (a query with < k rankable entries) surface as +inf values
+    so downstream merges drop them."""
+    acc = accepted & valid
+    cand = valid & ~accepted & ~rejected
+    score = jnp.where(acc, mean - _BIG, jnp.where(cand, mean, INF))
+    _, pos = jax.lax.top_k(-score, k)
+    take = lambda a: jnp.take_along_axis(a, pos, axis=1)
+    picked = take(score)
+    out_vals = jnp.where(picked == INF, INF, take(mean))
+    out_ci = jnp.where(take(exact) | (picked == INF), 0.0, take(ci))
+    # the − BIG class offset exceeds f32 resolution, so accepted picks tie
+    # on score and arrive in arbitrary order — re-sort them by exact θ
+    # (stable, so the candidate tail keeps its ascending-estimate order)
+    order = jnp.argsort(jnp.where(take(acc), out_vals, INF), axis=1)
+    reorder = lambda a: jnp.take_along_axis(a, order, axis=1)
+    pos = reorder(pos)
+    out_vals, out_ci = reorder(out_vals), reorder(out_ci)
+    take = lambda a: jnp.take_along_axis(a, pos, axis=1)
+    cand_min = jnp.min(jnp.where(cand, mean - ci, INF), axis=1)
+    return RaceSummary(
+        ids=take(ids),
+        values=out_vals,
+        ci=out_ci,
+        acc_count=jnp.minimum(jnp.sum(acc, 1), k).astype(jnp.int32),
+        cand_lcb_min=jnp.where(done, INF, cand_min),
+        done=done,
+        coord_ops=coord_ops,
+        rounds=rounds,
+        n_exact=n_exact,
+    )
+
+
+def _exactify_frontier(x, qs, st: FrontierState, *, k: int, metric: str,
+                       d: int) -> FrontierState:
+    """Exact-evaluate the ≤ k accepted arms that still carry estimates.
+    Means and the ``exact`` flag change; Welford count/m2 stay, so the
+    survivor-pooled CI variance — and hence every pending accept/reject
+    decision's radius — is untouched."""
+    Q = st.mean.shape[0]
+    qi = jnp.arange(Q)[:, None]
+    acc = st.accepted & st.valid
+    sel_score = jnp.where(acc & ~st.exact, st.mean, INF)
+    _, pos = jax.lax.top_k(-sel_score, k)
+    need = jnp.take_along_axis(acc & ~st.exact, pos, axis=1)
+    slots = jnp.where(need, jnp.take_along_axis(st.ids, pos, axis=1), 0)
+    vals = jax.lax.cond(
+        jnp.any(need),
+        lambda s: _dense_exact_theta(x, qs, s, metric, d),
+        lambda s: jnp.zeros(s.shape, jnp.float32), slots)
+    cur = jnp.take_along_axis(st.mean, pos, axis=1)
+    mean = st.mean.at[qi, pos].set(jnp.where(need, vals, cur))
+    exact = st.exact.at[qi, pos].set(
+        jnp.take_along_axis(st.exact, pos, axis=1) | need)
+    return st._replace(
+        mean=mean, exact=exact,
+        coord_ops=st.coord_ops + jnp.sum(need, 1) * float(d),
+        n_exact=st.n_exact + jnp.sum(need, 1, dtype=jnp.int32))
+
+
+def _rounds_partial(fns: RoundsRaceFns, st: BatchedRaceState, k: int,
+                    gid_base=0):
+    """Exactify accepted arms of the per-round driver's state (via the
+    box's own exact_fn, at its honest coordinate cost) and summarize."""
+    Q, n = st.mean.shape
+    qi = jnp.arange(Q)[:, None]
+    acc = st.accepted
+    sel_score = jnp.where(acc & ~st.exact, st.mean, INF)
+    _, pos = jax.lax.top_k(-sel_score, k)
+    need = jnp.take_along_axis(acc & ~st.exact, pos, axis=1)
+    vals = jax.lax.cond(
+        jnp.any(need), fns.exact_fn,
+        lambda s: jnp.zeros(s.shape, jnp.float32), pos)
+    cur = jnp.take_along_axis(st.mean, pos, axis=1)
+    mean = st.mean.at[qi, pos].set(jnp.where(need, vals, cur))
+    exact = st.exact.at[qi, pos].set(
+        jnp.take_along_axis(st.exact, pos, axis=1) | need)
+    coord_ops = st.coord_ops + jnp.sum(
+        need * jnp.take_along_axis(fns.exact_cost, pos, axis=1), 1)
+    st = st._replace(mean=mean, exact=exact, coord_ops=coord_ops)
+    ci = fns.ci_radius(st)
+    ids = gid_base + jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32)[None], (Q, n))
+    valid = jnp.ones((Q, n), bool)
+    summ = _summarize(ids, st.mean, ci, st.exact, st.accepted, st.rejected,
+                      valid, st.done, st.coord_ops, st.rounds,
+                      jnp.sum(st.exact, 1), k)
+    return st, summ
+
+
+# ---------------------------------------------------------------------------
+# single-shard jitted entry points
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "d", "log_term",
+                                             "prior_weight"))
+def _fused_partial(x, qs, st: FrontierState, prior_pool, *, cfg: BMOConfig,
+                   d: int, log_term: float, prior_weight: float):
+    st = _exactify_frontier(x, qs, st, k=cfg.k, metric=cfg.metric, d=d)
+    ci = _frontier_ci(st, cfg, log_term, prior_pool, prior_weight)
+    summ = _summarize(st.ids, st.mean, ci, st.exact, st.accepted,
+                      st.rejected, st.valid, st.done, st.coord_ops,
+                      st.rounds, st.n_exact, cfg.k)
+    return st, summ
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "d", "eliminate",
+                                             "prior_weight"))
+def _sparse_sess_init(indices, values, nnz, alive, prior, q_idx, q_val,
+                      q_nnz, rng, *, cfg: BMOConfig, d: int, eliminate: bool,
+                      prior_weight: float):
+    fns = make_sparse_rounds_race(
+        indices, values, nnz, alive, prior, q_idx, q_val, q_nnz, cfg=cfg,
+        d=d, eliminate=eliminate, prior_weight=prior_weight)
+    return _rounds_partial(fns, fns.init(rng), cfg.k)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "d", "eliminate",
+                                             "prior_weight", "rounds"))
+def _sparse_sess_chunk(indices, values, nnz, alive, prior, q_idx, q_val,
+                       q_nnz, st: BatchedRaceState, *, cfg: BMOConfig,
+                       d: int, eliminate: bool, prior_weight: float,
+                       rounds: int):
+    fns = make_sparse_rounds_race(
+        indices, values, nnz, alive, prior, q_idx, q_val, q_nnz, cfg=cfg,
+        d=d, eliminate=eliminate, prior_weight=prior_weight)
+    limit = st.round_no + rounds
+    st = jax.lax.while_loop(
+        lambda s: fns.active(s) & (s.round_no < limit), fns.body, st)
+    return _rounds_partial(fns, st, cfg.k)
+
+
+def _force_done(st, mask):
+    """Freeze rows (plane retire): drivers never pull / mutate done rows."""
+    done = st.done
+    mask = jnp.asarray(mask)
+    if done.ndim == mask.ndim + 1:          # (S, Q) sharded-stacked state
+        mask = mask[None]
+    return st._replace(done=done | mask)
+
+
+# ---------------------------------------------------------------------------
+# sharded jitted entry points (shard-local bodies under shard_map)
+# ---------------------------------------------------------------------------
+
+_SUMM_SPEC = RaceSummary(*([P(AXIS)] * len(RaceSummary._fields)))
+_BR_SPEC = BatchedRaceState(*([P(AXIS)] * len(BatchedRaceState._fields)))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fused_partial_fn(mesh, cfg, d, log_term, prior_weight, stride):
+    def body(x, qs, st, pool):
+        st = _squeeze(st)
+        st = _exactify_frontier(x[0], qs, st, k=cfg.k, metric=cfg.metric,
+                                d=d)
+        ci = _frontier_ci(st, cfg, log_term, pool[0], prior_weight)
+        gids = jax.lax.axis_index(AXIS) * stride + st.ids
+        summ = _summarize(gids, st.mean, ci, st.exact, st.accepted,
+                          st.rejected, st.valid, st.done, st.coord_ops,
+                          st.rounds, st.n_exact, cfg.k)
+        return (_unsqueeze(st),
+                jax.tree_util.tree_map(lambda a: a[None], summ))
+
+    return jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P(AXIS), P(), _ST_SPEC, P(AXIS)),
+        out_specs=(_ST_SPEC, _SUMM_SPEC), check_vma=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_sparse_init_fn(mesh, cfg, d, eliminate, prior_weight, stride):
+    def body(idx, val, nnz, alive, prior, qi, qv, qn, rng):
+        fns = make_sparse_rounds_race(
+            idx[0], val[0], nnz[0], alive[0], prior[0], qi, qv, qn, cfg=cfg,
+            d=d, eliminate=eliminate, prior_weight=prior_weight)
+        rng = jax.random.fold_in(rng, jax.lax.axis_index(AXIS))
+        st, summ = _rounds_partial(
+            fns, fns.init(rng), cfg.k,
+            gid_base=jax.lax.axis_index(AXIS) * stride)
+        return (_unsqueeze(st),
+                jax.tree_util.tree_map(lambda a: a[None], summ))
+
+    return jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS),
+                  P(), P(), P(), P()),
+        out_specs=(_BR_SPEC, _SUMM_SPEC), check_vma=False))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_sparse_chunk_fn(mesh, cfg, d, eliminate, prior_weight, stride,
+                             rounds):
+    def body(idx, val, nnz, alive, prior, qi, qv, qn, st):
+        fns = make_sparse_rounds_race(
+            idx[0], val[0], nnz[0], alive[0], prior[0], qi, qv, qn, cfg=cfg,
+            d=d, eliminate=eliminate, prior_weight=prior_weight)
+        st = _squeeze(st)
+        limit = st.round_no + rounds
+        st = jax.lax.while_loop(
+            lambda s: fns.active(s) & (s.round_no < limit), fns.body, st)
+        st, summ = _rounds_partial(
+            fns, st, cfg.k, gid_base=jax.lax.axis_index(AXIS) * stride)
+        return (_unsqueeze(st),
+                jax.tree_util.tree_map(lambda a: a[None], summ))
+
+    return jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS),
+                  P(), P(), P(), _BR_SPEC),
+        out_specs=(_BR_SPEC, _SUMM_SPEC), check_vma=False))
+
+
+def _merge_shard_partials(p: Partial) -> Partial:
+    """Merge S per-shard partial views into one global view (host-side;
+    Q and k are serving-small). Accepted entries — already exact — are
+    merged by (θ, gid); the best-effort tail interleaves the shards'
+    candidate estimates."""
+    S, Q, k = p.ids.shape
+    ids = np.full((Q, k), -1, np.int64)
+    vals = np.full((Q, k), np.inf, np.float32)
+    ci = np.zeros((Q, k), np.float32)
+    acc_count = np.zeros((Q,), np.int32)
+    for q in range(Q):
+        accepted, cands = [], []
+        for s in range(S):
+            a = int(p.acc_count[s, q])
+            for i in range(k):
+                v = float(p.values[s, q, i])
+                if not np.isfinite(v):
+                    continue
+                entry = (v, int(p.ids[s, q, i]), float(p.ci[s, q, i]))
+                (accepted if i < a else cands).append(entry)
+        accepted.sort(key=lambda e: (e[0], e[1]))
+        cands.sort(key=lambda e: (e[0], e[1]))
+        merged = (accepted + cands)[:k]
+        for i, (v, g, c) in enumerate(merged):
+            vals[q, i], ids[q, i], ci[q, i] = v, g, c
+        acc_count[q] = min(len(accepted), k)
+    return Partial(
+        ids=ids, values=vals, ci=ci, acc_count=acc_count,
+        cand_lcb_min=np.min(p.cand_lcb_min, axis=0),
+        done=np.all(p.done, axis=0),
+        coord_ops=np.sum(p.coord_ops, axis=0),
+        rounds=np.max(p.rounds, axis=0),
+        n_exact=np.sum(p.n_exact, axis=0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sessions
+# ---------------------------------------------------------------------------
+
+
+class RaceSession:
+    """One resumable race batch. ``step()`` advances one epoch and refreshes
+    ``snapshot``; ``retire(mask)`` freezes rows whose ticket left the plane
+    (deadline/budget) so the remaining rows get their pull budget."""
+
+    kind = "base"
+
+    def __init__(self, Q: int, k: int):
+        self.Q = Q
+        self.k = k
+        self.epochs = 0
+        self.shard_coord_ops: Optional[np.ndarray] = None
+        self.shard_rounds: Optional[np.ndarray] = None
+        self._snap: Optional[Partial] = None
+        self._retired = np.zeros((Q,), bool)
+
+    @property
+    def snapshot(self) -> Partial:
+        return self._snap
+
+    @property
+    def done(self) -> np.ndarray:
+        return np.asarray(self._snap.done) | self._retired
+
+    @property
+    def exhausted(self) -> bool:
+        """Round cap hit with rows unresolved — the driver's safety net."""
+        return not self.done.all() and self._rounds_spent >= self._max_rounds
+
+    def retire(self, mask: np.ndarray) -> None:
+        mask = np.asarray(mask, bool)
+        self._retired |= mask
+        self._apply_force_done(jnp.asarray(self._retired))
+
+    def step(self) -> bool:
+        raise NotImplementedError
+
+    def _apply_force_done(self, mask) -> None:
+        raise NotImplementedError
+
+
+class FusedSession(RaceSession):
+    """Single-shard dense/rotated: the §4 epoch-fused survivor-compacted
+    driver, host loop exposed one epoch at a time (same compaction schedule
+    and adaptive-R rule as the blocking ``fused_race_topk``)."""
+
+    kind = "fused"
+
+    def __init__(self, store, queries, rng, *, cfg: BMOConfig,
+                 impl: str = "auto", eliminate: bool = True,
+                 prior=None, prior_weight: float = 0.0):
+        x, qs = store.x, store.prepare_queries(queries)
+        n = x.shape[0]
+        super().__init__(qs.shape[0], cfg.k)
+        nb = x.shape[1] // store.block
+        B0 = min(cfg.batch_arms, n)
+        P_ = cfg.pulls_per_round
+        self._cfg, self._x, self._qs = cfg, x, qs
+        self._block, self._d, self._impl = store.block, store.d, impl
+        self._eliminate, self._prior_weight = eliminate, prior_weight
+        self._log_term = float(
+            np.log(2.0 / conf.delta_prime(cfg.delta, n, nb)))
+        self._max_rounds = cfg.max_rounds or int(
+            2 * math.ceil(n * nb / max(B0 * P_, 1)) + n + 16)
+        self._R0 = max(cfg.epoch_rounds, 1)
+        self._R_cap = max(1, -(-nb // P_))
+        self._floor_w = min(n, bucket_width(max(B0, 2 * cfg.k, 32),
+                                            floor=1, current=n))
+        prior = store.prior_var if prior is None else jnp.asarray(
+            prior, jnp.float32)
+        st, self._pool = _fused_init(
+            x, qs, store.alive, prior, rng, cfg=cfg, block=store.block,
+            impl=impl, prior_weight=prior_weight)
+        self._W0 = st.width
+        self._rounds_spent = 0
+        self._n_surv = np.full((self.Q,), n)
+        self._refresh(st)
+
+    def _refresh(self, st) -> None:
+        self._st, summ = _fused_partial(
+            self._x, self._qs, st, self._pool, cfg=self._cfg, d=self._d,
+            log_term=self._log_term, prior_weight=self._prior_weight)
+        self._snap = _to_host(summ)
+
+    def _apply_force_done(self, mask) -> None:
+        self._st = _force_done(self._st, mask)
+        self._n_surv = np.where(np.asarray(self._retired), 0, self._n_surv)
+
+    def step(self) -> bool:
+        if self.done.all() or self._rounds_spent >= self._max_rounds:
+            return False
+        need = int(self._n_surv[~self.done].max(initial=1))
+        # halve the buffer at most once per epoch (unlike the blocking
+        # driver's jump-to-cover): every session then walks the SAME
+        # descending width chain, so one warm full-certification race
+        # pre-compiles every (Q, W) specialization a serving race can hit —
+        # no mid-traffic XLA compiles on the request plane's hot path
+        W_new = max(bucket_width(need, floor=self._floor_w,
+                                 current=self._st.width),
+                    self._st.width // 2)
+        if W_new < self._st.width:
+            self._st = compact_frontier(self._st, W_new=W_new)
+        R = min(self._R0 * max(1, self._W0 // max(need, 1)), self._R_cap)
+        st, n_surv, _ = _fused_epoch_step(
+            self._x, self._qs, self._st, self._pool, cfg=self._cfg,
+            block=self._block, d=self._d, impl=self._impl,
+            eliminate=self._eliminate, prior_weight=self._prior_weight,
+            log_term=self._log_term, T=R * self._cfg.pulls_per_round)
+        self._rounds_spent += R
+        self._n_surv = np.asarray(n_surv)
+        self.epochs += 1
+        self._refresh(st)
+        return not self.done.all()
+
+
+class SparseRoundsSession(RaceSession):
+    """Single-shard sparse: the §3.2 per-round driver in bounded-round
+    chunks (one chunk = one scheduler epoch)."""
+
+    kind = "sparse"
+
+    def __init__(self, store, queries, rng, *, cfg: BMOConfig,
+                 eliminate: bool = True, prior=None,
+                 prior_weight: float = 0.0, chunk_rounds: int = 0):
+        q_idx, q_val, q_nnz = (jnp.asarray(a) for a in queries)
+        super().__init__(q_idx.shape[0], cfg.k)
+        self._args = (store.indices, store.values, store.nnz, store.alive,
+                      store.prior_var if prior is None
+                      else jnp.asarray(prior, jnp.float32),
+                      q_idx, q_val, q_nnz)
+        self._cfg, self._d = cfg, store.d
+        self._eliminate, self._prior_weight = eliminate, prior_weight
+        self._chunk = chunk_rounds or 2 * max(cfg.epoch_rounds, 1)
+        n, m = store.indices.shape
+        B0 = min(cfg.batch_arms, n)
+        mp = int(m + q_idx.shape[1])
+        self._max_rounds = cfg.max_rounds or int(
+            2 * math.ceil(n * mp / max(B0 * cfg.pulls_per_round, 1)) + n + 16)
+        self._rounds_spent = 0
+        self._st, summ = _sparse_sess_init(
+            *self._args, rng, cfg=cfg, d=store.d, eliminate=eliminate,
+            prior_weight=prior_weight)
+        self._snap = _to_host(summ)
+
+    def _apply_force_done(self, mask) -> None:
+        self._st = _force_done(self._st, mask)
+
+    def step(self) -> bool:
+        if self.done.all() or self._rounds_spent >= self._max_rounds:
+            return False
+        self._st, summ = _sparse_sess_chunk(
+            *self._args, self._st, cfg=self._cfg, d=self._d,
+            eliminate=self._eliminate, prior_weight=self._prior_weight,
+            rounds=self._chunk)
+        self._rounds_spent += self._chunk
+        self._snap = _to_host(summ)
+        self.epochs += 1
+        return not self.done.all()
+
+
+class ShardedFusedSession(RaceSession):
+    """Sharded dense/rotated: the §5.2 shard-local fused race with the
+    shared host epoch loop — including the cross-shard pull-budget
+    reallocator — stepped one epoch at a time; snapshots merge the
+    shards' certified/accepted frontiers on host."""
+
+    kind = "sharded_fused"
+
+    def __init__(self, store: ShardedIndexStore, queries, rng, *,
+                 cfg: BMOConfig, impl: str = "auto", eliminate: bool = True,
+                 prior_st=None, prior_weight: float = 0.0):
+        qs = store.prepare_queries(queries)
+        super().__init__(qs.shape[0], cfg.k)
+        self._store, self._qs, self._cfg = store, qs, cfg
+        self._S, self._stride, self._mesh = (store.n_shards, store.stride,
+                                             store.mesh)
+        dev = store.device_arrays()
+        self._x_st, alive_st = dev["x"], dev["alive"]
+        if prior_st is None:
+            prior_st = dev["prior_var"]
+        self._impl, self._eliminate = impl, eliminate
+        self._prior_weight = prior_weight
+        nb = self._x_st.shape[2] // store.block
+        P_ = cfg.pulls_per_round
+        self._log_term = float(np.log(
+            2.0 / conf.delta_prime(cfg.delta, self._S * self._stride, nb)))
+        B0 = min(cfg.batch_arms, self._stride)
+        self._R0 = max(cfg.epoch_rounds, 1)
+        self._R_cap = max(1, -(-nb // P_))
+        self._floor_w = min(self._stride,
+                            bucket_width(max(B0, 2 * cfg.k, 32), floor=1,
+                                         current=self._stride))
+        self._max_rounds = cfg.max_rounds or int(
+            2 * math.ceil(self._stride * nb / max(B0 * P_, 1))
+            + self._stride + 16)
+        st, self._pool = _fused_init_fn(
+            self._mesh, cfg, store.block, impl, prior_weight)(
+            self._x_st, qs, alive_st, prior_st, rng)
+        self._W0 = st.ids.shape[2]
+        self._rounds_spent = 0
+        self._n_surv = np.full((self._S, self.Q), self._stride)
+        self._refresh(st)
+
+    def _refresh(self, st) -> None:
+        self._st, summ = _sharded_fused_partial_fn(
+            self._mesh, self._cfg, self._store.d, self._log_term,
+            self._prior_weight, self._stride)(
+            self._x_st, self._qs, st, self._pool)
+        per_shard = Partial(*(np.asarray(a) for a in summ))
+        self.shard_coord_ops = per_shard.coord_ops.sum(axis=1)
+        self.shard_rounds = per_shard.rounds.max(axis=1)
+        self._snap = _merge_shard_partials(per_shard)
+
+    def _apply_force_done(self, mask) -> None:
+        self._st = _force_done(self._st, mask)
+        self._n_surv = np.where(np.asarray(self._retired)[None], 0,
+                                self._n_surv)
+
+    def step(self) -> bool:
+        if self.done.all() or self._rounds_spent >= self._max_rounds:
+            return False
+        active_q = ~self.done
+        need = int(self._n_surv[:, active_q].max(initial=1))
+        # at-most-halving schedule — see FusedSession.step
+        W_new = max(bucket_width(need, floor=self._floor_w,
+                                 current=self._st.ids.shape[2]),
+                    self._st.ids.shape[2] // 2)
+        if W_new < self._st.ids.shape[2]:
+            self._st = _compact_stacked(self._st, W_new=W_new)
+        total_need = int(
+            np.sum(self._n_surv[:, active_q].max(axis=1, initial=0)))
+        R = min(self._R0 * max(1, (self._S * self._W0)
+                               // max(total_need, 1)), self._R_cap)
+        st, n_surv, _ = _fused_step_fn(
+            self._mesh, self._cfg, self._store.block, self._store.d,
+            self._impl, self._eliminate, self._prior_weight, self._log_term,
+            R * self._cfg.pulls_per_round)(self._x_st, self._qs, self._st,
+                                           self._pool)
+        self._rounds_spent += R
+        self._n_surv = np.asarray(n_surv)
+        self.epochs += 1
+        self._refresh(st)
+        return not self.done.all()
+
+
+class ShardedSparseSession(RaceSession):
+    """Sharded sparse: the per-round driver chunked shard-locally under
+    ``shard_map`` (each chunk one collective program), merged per snapshot."""
+
+    kind = "sharded_sparse"
+
+    def __init__(self, store: ShardedIndexStore, queries, rng, *,
+                 cfg: BMOConfig, eliminate: bool = True, prior_st=None,
+                 prior_weight: float = 0.0, chunk_rounds: int = 0):
+        q_idx, q_val, q_nnz = (jnp.asarray(a) for a in queries)
+        super().__init__(q_idx.shape[0], cfg.k)
+        cfg = _shard_delta(cfg, store.n_shards)
+        self._cfg, self._d = cfg, store.d
+        self._S, self._stride, self._mesh = (store.n_shards, store.stride,
+                                             store.mesh)
+        dev = store.device_arrays()
+        if prior_st is None:
+            prior_st = dev["prior_var"]
+        self._args = (dev["indices"], dev["values"], dev["nnz"],
+                      dev["alive"], prior_st, q_idx, q_val, q_nnz)
+        self._eliminate, self._prior_weight = eliminate, prior_weight
+        self._chunk = chunk_rounds or 2 * max(cfg.epoch_rounds, 1)
+        m = int(dev["indices"].shape[2])
+        B0 = min(cfg.batch_arms, self._stride)
+        mp = m + int(q_idx.shape[1])
+        self._max_rounds = cfg.max_rounds or int(
+            2 * math.ceil(self._stride * mp
+                          / max(B0 * cfg.pulls_per_round, 1))
+            + self._stride + 16)
+        self._rounds_spent = 0
+        st, summ = _sharded_sparse_init_fn(
+            self._mesh, cfg, store.d, eliminate, prior_weight,
+            self._stride)(*self._args, rng)
+        self._st = st
+        self._ingest(summ)
+
+    def _ingest(self, summ) -> None:
+        per_shard = Partial(*(np.asarray(a) for a in summ))
+        self.shard_coord_ops = per_shard.coord_ops.sum(axis=1)
+        self.shard_rounds = per_shard.rounds.max(axis=1)
+        self._snap = _merge_shard_partials(per_shard)
+
+    def _apply_force_done(self, mask) -> None:
+        self._st = _force_done(self._st, mask)
+
+    def step(self) -> bool:
+        if self.done.all() or self._rounds_spent >= self._max_rounds:
+            return False
+        self._st, summ = _sharded_sparse_chunk_fn(
+            self._mesh, self._cfg, self._d, self._eliminate,
+            self._prior_weight, self._stride, self._chunk)(
+            *self._args, self._st)
+        self._rounds_spent += self._chunk
+        self.epochs += 1
+        self._ingest(summ)
+        return not self.done.all()
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+
+def make_session(store, queries, rng, *, cfg: Optional[BMOConfig] = None,
+                 impl: str = "auto", eliminate: bool = True,
+                 warm_start: bool = True, prior_hint=None,
+                 chunk_rounds: int = 0) -> RaceSession:
+    """Build the right resumable session for ``store``'s box and layout —
+    the anytime twin of ``index_knn`` (same priors, same δ accounting)."""
+    cfg = cfg if cfg is not None else store.cfg
+    if cfg.k > store.n_live:
+        raise ValueError(
+            f"k={cfg.k} exceeds the index's {store.n_live} live slots — "
+            "tombstoned slots can never be returned")
+    sharded = hasattr(store, "shards")
+    w = store.prior_weight if (warm_start or prior_hint is not None) else 0.0
+    if sharded:
+        S, stride = store.n_shards, store.stride
+        if prior_hint is not None:
+            Q = (queries[0] if isinstance(queries, tuple)
+                 else jnp.asarray(queries)).shape[0]
+            prior_st = jnp.asarray(prior_hint, jnp.float32).reshape(
+                Q, S, stride).transpose(1, 0, 2)
+        else:
+            prior_st = None
+        if store.kind == "sparse":
+            return ShardedSparseSession(
+                store, queries, rng, cfg=cfg, eliminate=eliminate,
+                prior_st=prior_st, prior_weight=w, chunk_rounds=chunk_rounds)
+        return ShardedFusedSession(
+            store, queries, rng, cfg=cfg, impl=impl, eliminate=eliminate,
+            prior_st=prior_st, prior_weight=w)
+    prior = None if prior_hint is None else jnp.asarray(prior_hint,
+                                                        jnp.float32)
+    if store.kind == "sparse":
+        return SparseRoundsSession(
+            store, queries, rng, cfg=cfg, eliminate=eliminate, prior=prior,
+            prior_weight=w, chunk_rounds=chunk_rounds)
+    return FusedSession(store, queries, rng, cfg=cfg, impl=impl,
+                        eliminate=eliminate, prior=prior, prior_weight=w)

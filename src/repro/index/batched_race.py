@@ -64,7 +64,21 @@ class BatchedRaceState(NamedTuple):
     rng: jax.Array
 
 
-def batched_race_topk(
+class RoundsRaceFns(NamedTuple):
+    """The per-round driver's pieces, exposed so callers can drive the race
+    in bounded chunks (the anytime request plane, ``index/anytime.py``)
+    instead of one run-to-certification ``while_loop``. All members are
+    trace-compatible closures over the box's pull/exact functions."""
+    init: Callable        # rng -> BatchedRaceState
+    body: Callable        # state -> state (one racing round)
+    active: Callable      # state -> bool (queries left AND round cap unhit)
+    ci_radius: Callable   # state -> (Q, n) CI half-widths
+    exact_fn: Callable    # (sel (Q, B)) -> (Q, B) exact θ
+    exact_cost: jax.Array  # (Q, n) coordinate-op cost of an exact eval
+    max_rounds: int
+
+
+def make_rounds_race(
     pull_fn: Callable,          # (sel (Q, B), rng) -> (Q, B, P) samples
     exact_fn: Callable,         # (sel (Q, B)) -> (Q, B) exact θ
     n: int,
@@ -73,14 +87,13 @@ def batched_race_topk(
     pull_cost: float,
     exact_cost,                 # scalar, (n,) or (Q, n)
     cfg: BMOConfig,
-    rng: jax.Array,
     *,
     eliminate: bool = True,
     dead: Optional[jax.Array] = None,       # (n,) bool tombstones
     prior_var: Optional[jax.Array] = None,  # (n,) warm-start variance prior
     prior_weight: float = 0.0,
     max_pulls_static: int = 0,
-) -> KNNResult:
+) -> RoundsRaceFns:
     k = cfg.k
     B = min(cfg.batch_arms, n)
     P = cfg.pulls_per_round
@@ -222,15 +235,47 @@ def batched_race_topk(
                             rounds=rounds, done=done,
                             round_no=st.round_no + 1)
 
-    st = init_state(rng)
-    st = jax.lax.while_loop(cond, body, st)
+    return RoundsRaceFns(init=init_state, body=body, active=cond,
+                         ci_radius=ci_radius, exact_fn=exact_fn,
+                         exact_cost=exact_cost_arr, max_rounds=max_rounds)
 
-    ci = ci_radius(st)
+
+def run_to_certification(fns: RoundsRaceFns, rng: jax.Array,
+                         k: int) -> KNNResult:
+    """Drive a rounds race to completion in one ``while_loop`` — the
+    blocking twin of the chunked sessions in ``index/anytime.py``."""
+    st = fns.init(rng)
+    st = jax.lax.while_loop(fns.active, fns.body, st)
+    ci = fns.ci_radius(st)
     topk, topk_vals = jax.vmap(
         lambda m, c, a, r: topk_from_state(m, c, a, r, k)
     )(st.mean, ci, st.accepted, st.rejected)
     return KNNResult(indices=topk, values=topk_vals, coord_ops=st.coord_ops,
                      rounds=st.rounds, n_exact=jnp.sum(st.exact, 1))
+
+
+def batched_race_topk(
+    pull_fn: Callable,          # (sel (Q, B), rng) -> (Q, B, P) samples
+    exact_fn: Callable,         # (sel (Q, B)) -> (Q, B) exact θ
+    n: int,
+    Q: int,
+    max_pulls,                  # scalar, (n,) or (Q, n)
+    pull_cost: float,
+    exact_cost,                 # scalar, (n,) or (Q, n)
+    cfg: BMOConfig,
+    rng: jax.Array,
+    *,
+    eliminate: bool = True,
+    dead: Optional[jax.Array] = None,       # (n,) bool tombstones
+    prior_var: Optional[jax.Array] = None,  # (n,) warm-start variance prior
+    prior_weight: float = 0.0,
+    max_pulls_static: int = 0,
+) -> KNNResult:
+    fns = make_rounds_race(
+        pull_fn, exact_fn, n, Q, max_pulls, pull_cost, exact_cost, cfg,
+        eliminate=eliminate, dead=dead, prior_var=prior_var,
+        prior_weight=prior_weight, max_pulls_static=max_pulls_static)
+    return run_to_certification(fns, rng, cfg.k)
 
 
 # ---------------------------------------------------------------------------
@@ -523,11 +568,12 @@ def _dense_index_knn(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "d", "eliminate",
-                                             "prior_weight"))
-def _sparse_index_knn(indices, values, nnz, alive, prior_var,
-                      q_idx, q_val, q_nnz, rng, *, cfg: BMOConfig, d: int,
-                      eliminate: bool, prior_weight: float) -> KNNResult:
+def make_sparse_rounds_race(indices, values, nnz, alive, prior_var,
+                            q_idx, q_val, q_nnz, *, cfg: BMOConfig, d: int,
+                            eliminate: bool, prior_weight: float
+                            ) -> RoundsRaceFns:
+    """Assemble the §IV-A sparse box's per-round race pieces (shared by the
+    blocking driver below and the resumable sessions in index/anytime.py)."""
     n, m = indices.shape
     Q, mq = q_idx.shape
     ds = SparseDataset(indices=indices, values=values, nnz=nnz, d=d)
@@ -549,13 +595,24 @@ def _sparse_index_knn(indices, values, nnz, alive, prior_var,
 
     exact_cost = (nnz[None, :] + q_nnz[:, None]).astype(jnp.float32)  # (Q, n)
     max_pulls = jnp.maximum(exact_cost, 8.0)
-    return batched_race_topk(
+    return make_rounds_race(
         pull, exact, n=n, Q=Q,
         max_pulls=max_pulls, pull_cost=1.0, exact_cost=exact_cost,
-        cfg=cfg, rng=rng, eliminate=eliminate,
+        cfg=cfg, eliminate=eliminate,
         dead=~alive, prior_var=prior_var, prior_weight=prior_weight,
         max_pulls_static=int(m + mq),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "d", "eliminate",
+                                             "prior_weight"))
+def _sparse_index_knn(indices, values, nnz, alive, prior_var,
+                      q_idx, q_val, q_nnz, rng, *, cfg: BMOConfig, d: int,
+                      eliminate: bool, prior_weight: float) -> KNNResult:
+    fns = make_sparse_rounds_race(
+        indices, values, nnz, alive, prior_var, q_idx, q_val, q_nnz,
+        cfg=cfg, d=d, eliminate=eliminate, prior_weight=prior_weight)
+    return run_to_certification(fns, rng, cfg.k)
 
 
 def index_knn(store, queries, rng: jax.Array, *, k=None, impl: str = "auto",

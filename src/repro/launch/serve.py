@@ -53,6 +53,14 @@ def main(argv=None):
     ap.add_argument("--datastore-size", type=int, default=2048)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--autoscale", action="store_true",
+                    help="consult a ScalePolicy on the request-plane "
+                         "telemetry after serving and LOG its "
+                         "add_replicas/reshard recommendation "
+                         "(recommendation-only unless --autoscale-apply)")
+    ap.add_argument("--autoscale-apply", action="store_true",
+                    help="actually apply an add_replicas recommendation "
+                         "to the live handle (reshard stays advisory)")
     args = ap.parse_args(argv)
 
     entry = get_arch(args.arch)
@@ -123,12 +131,24 @@ def main(argv=None):
              out.shape, dt, out.size / dt,
              f"; retrieval coord-ops={retrieval_ops:.0f}" if args.knn_lm else "")
     if args.knn_lm:
-        st = engine.stats            # typed repro.api.ServeStats
+        st = engine.stats            # typed repro.api.ServeStats (schema v2)
         log.info("engine stats: %s", st.as_dict())
         if st.shard_coord_ops is not None:
             log.info("per-shard coord-ops %s, max rounds %s",
                      [f"{v:.3g}" for v in st.shard_coord_ops],
                      st.shard_rounds)
+        if args.autoscale:
+            from repro.serve.scale import QueueDepthPolicy
+            policy = QueueDepthPolicy(sustain=1)
+            decision = policy.recommend(st)
+            log.info("autoscale recommendation: %s value=%d (%s)",
+                     decision.action, decision.value,
+                     decision.reason or "no signal")
+            if (args.autoscale_apply and decision.action == "add_replicas"
+                    and engine.index is not None):
+                engine.index.add_replicas(decision.value)
+                log.info("applied: read fan-out now %d replicas",
+                         engine.stats.replicas)
     print(out[:, :16])
 
 

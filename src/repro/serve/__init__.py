@@ -1,4 +1,8 @@
 from repro.serve.steps import make_decode_step, make_prefill_step, init_cache
 from repro.serve.engine import ServeEngine
+from repro.serve.plane import PlaneConfig, RequestPlane
+from repro.serve.scale import QueueDepthPolicy, ScaleDecision, ScalePolicy
 
-__all__ = ["make_decode_step", "make_prefill_step", "init_cache", "ServeEngine"]
+__all__ = ["make_decode_step", "make_prefill_step", "init_cache",
+           "ServeEngine", "PlaneConfig", "RequestPlane", "QueueDepthPolicy",
+           "ScaleDecision", "ScalePolicy"]

@@ -10,16 +10,22 @@ Retrieval goes through one ``repro.api.Index`` handle (DESIGN.md §6) built
 at engine construction or passed in pre-built/loaded: the corpus layout,
 cached rotation, CI warm-start priors, the query LRU (exact repeats free,
 near repeats CI-warm-started) and the next-token payload all live behind
-the handle, and each decode step's whole batch is one ``Index.query`` call.
-With ``index_append=True`` the engine inserts each step's (hidden,
-next-token) pairs back into the index — the datastore grows during decode,
-true kNN-LM behaviour — with tombstone debt amortized by the handle's
-``CompactionPolicy``. ``engine.stats`` is the handle's typed ``ServeStats``.
+the handle. Since PR 5 the engine *owns a request plane*
+(``repro.serve.plane.RequestPlane``, DESIGN.md §7) over that handle:
+external callers submit/stream anytime tickets against ``engine.plane``
+while the decode loop's per-step retrieval goes through the blocking
+``plane.query`` shim (submit + drain — same cache and counter semantics
+the old direct ``Index.query`` hot path had). With ``index_append=True``
+the engine inserts each step's (hidden, next-token) pairs back into the
+index — the datastore grows during decode, true kNN-LM behaviour — with
+tombstone debt amortized by the handle's ``CompactionPolicy``.
+``engine.stats`` is the plane's typed ``ServeStats`` (queue/latency
+telemetry included, schema v2).
 
 Admin operations (live re-sharding, replica fan-out) are the handle's:
 ``engine.index.reshard(S')`` / ``engine.index.add_replicas(r)`` work on the
-running engine — the epoch fence invalidates the cache and remaps the
-payload without a save/load cycle.
+running engine — the epoch fence invalidates the cache, remaps the payload
+and fences in-flight plane tickets without a save/load cycle.
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ import numpy as np
 from repro.api import (CachePolicy, CompactionPolicy, Index, QueryCache,
                        ServeStats)
 from repro.configs.base import BMOConfig, ParallelPlan
+from repro.serve.plane import PlaneConfig, RequestPlane
 from repro.serve.steps import init_cache, make_decode_step, make_prefill_step
 
 __all__ = ["KNNLMConfig", "QueryCache", "ServeEngine"]
@@ -54,6 +61,9 @@ class KNNLMConfig:
                                     # result (0 disables)
     near_prior_scale: float = 0.25  # variance-prior tightening applied to
                                     # the cached neighbour's top-k arms
+    plane: PlaneConfig = dataclasses.field(default_factory=PlaneConfig)
+                                    # request-plane scheduler knobs
+                                    # (admission bound, fairness, fence)
 
     def cache_policy(self) -> CachePolicy:
         return CachePolicy(capacity=self.cache_size,
@@ -108,6 +118,9 @@ class ServeEngine:
                 # uncovered slots vote token 0 — make that explicit
                 handle.attach_payload(np.zeros((handle.capacity,), np.int32))
             self.index = handle
+        self.plane: Optional[RequestPlane] = (
+            RequestPlane(self.index, knn_lm.plane)
+            if self.index is not None else None)
         if knn_lm is not None:
             # hidden-state decode (DenseLM exposes return_hidden)
             def _decode(params, cache, tokens):
@@ -127,16 +140,25 @@ class ServeEngine:
     # -- kNN-LM hook (the paper's technique in the serving path) ------------
     @property
     def stats(self) -> ServeStats:
-        """The handle's typed serving counters (``repro.api.ServeStats``):
-        cache hits/misses, races, near-repeat warm-starts, compactions,
-        reshards, replica fan-out — plus, behind a sharded index, cumulative
-        per-shard coordinate-ops and max rounds (load-balance telemetry).
-        ``stats.as_dict()`` is the stable JSON schema; the pre-PR-4 stringly
-        keys still work through ``stats["knn_cache_hits"]``-style access."""
+        """The plane's typed serving counters (``repro.api.ServeStats``,
+        schema v2): cache hits/misses, races, near-repeat warm-starts,
+        compactions, reshards, replica fan-out, request-plane queue depth /
+        shed counts / terminal latency percentiles — plus, behind a sharded
+        index, per-shard load telemetry. ``stats.as_dict()`` is the stable
+        JSON schema; the pre-PR-4 stringly keys still work through
+        ``stats["knn_cache_hits"]``-style access."""
+        if self.plane is not None:
+            return self.plane.stats
         return self.index.stats if self.index is not None else ServeStats()
 
     def _knn_logits(self, hidden, rng):
-        res = self.index.query(np.asarray(hidden, np.float32), rng)
+        # blocking submit+drain shim over the plane: the decode loop wants
+        # the fully certified answer, external anytime traffic shares the
+        # same scheduler (and the same query LRU) via engine.plane. The
+        # reserved tenant keeps the decode loop's admission queue private —
+        # external backpressure can shed external tickets, never this one.
+        res = self.plane.query(np.asarray(hidden, np.float32), rng=rng,
+                               tenant="__engine__")
         ops = float(np.asarray(res.coord_ops).sum())
         V = self.model.cfg.vocab_size
         # distance-weighted vote over retrieved next-tokens

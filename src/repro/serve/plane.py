@@ -1,0 +1,763 @@
+"""repro.serve.plane — the async request plane over one ``Index`` handle
+(DESIGN.md §7).
+
+``Index.query`` is a blocking, run-to-certification batch call: one hard
+query (or one greedy caller) gates everyone sharing the engine. The plane
+replaces that surface with admission → deadline-aware micro-batching →
+anytime streaming:
+
+  * ``submit(queries, spec) -> Ticket``: admission control. Exact-repeat
+    rows are served from the handle's query LRU at submit (zero cost);
+    the rest waits in a bounded per-tenant queue — beyond the bound the
+    ticket is *shed with a reason* instead of queueing unboundedly.
+  * Between scheduler epochs, admitted requests from many tickets are
+    coalesced into pow2 race batches (join-at-epoch-boundary) driven
+    through ``Index.race`` one epoch at a time; a ticket leaves its group
+    the moment it terminates (leave-on-terminal) and its rows are retired
+    so the survivors inherit the pull budget.
+  * ``poll/stream(ticket) -> AnytimeResult``: the current partial top-k
+    with CI radii and the certified-prefix length. A request terminates on
+    wall-clock ``Deadline``, ``EffortBudget``, or full certification —
+    whichever comes first — always returning the best *certified-prefix*
+    answer with an honest uncertainty report.
+  * Fairness: admission round-robins across tenants, so one adversarial
+    heavy tenant cannot starve the rest of the batch slots.
+  * Mutation fence: every group is pinned to the store epoch it started
+    against. When a mutation bumps ``Index.epoch`` mid-race, in-flight
+    groups either complete against the old (immutable) store or are
+    re-admitted against the new one — controlled by
+    ``PlaneConfig.on_mutation`` — and a result never mixes epochs.
+
+The scheduler is cooperative (``step()`` runs one epoch across all active
+groups); ``drain()``, ``stream()`` and the blocking ``query()`` shim drive
+it. ``stats`` extends the handle's ``ServeStats`` with queue/latency
+telemetry (schema v2) that ``repro.serve.scale`` policies consume.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.api import Index, QuerySpec, ServeStats
+from repro.api.cache import QueryCache
+from repro.api.stream import (DONE, QUEUED, R_BUDGET, R_CERTIFIED,
+                              R_DEADLINE, R_SHED, RACING, SHED,
+                              AnytimeResult, Ticket, percentile)
+from repro.core.datasets import next_pow2
+from repro.utils import get_logger
+
+log = get_logger("repro.serve.plane")
+
+ON_MUTATION = ("complete", "readmit")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneConfig:
+    """Scheduler knobs. Defaults favour small-host serving; the bench
+    (`tools/bench_serve_plane.py`) sweeps them under open-loop load."""
+
+    max_queue: int = 64            # pending tickets per tenant before shed
+    max_group_queries: int = 64    # query rows coalesced per race batch
+    max_active_groups: int = 4     # concurrent race groups
+    on_mutation: str = "complete"  # complete | readmit in-flight groups
+    chunk_rounds: int = 0          # sparse rounds per epoch (0 = heuristic)
+    latency_window: int = 4096     # terminal latencies kept for percentiles
+
+    def __post_init__(self):
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.max_group_queries < 1:
+            raise ValueError("max_group_queries must be >= 1, got "
+                             f"{self.max_group_queries}")
+        if self.max_active_groups < 1:
+            raise ValueError("max_active_groups must be >= 1, got "
+                             f"{self.max_active_groups} (0 would make "
+                             "blocking queries spin forever unadmitted)")
+        if self.on_mutation not in ON_MUTATION:
+            raise ValueError(f"unknown on_mutation {self.on_mutation!r} "
+                             f"(want one of {ON_MUTATION})")
+
+
+class _Member(object):
+    """One ticket's miss rows inside a race group."""
+
+    def __init__(self, entry: "_Entry", rows: List[int], offset: int):
+        self.entry = entry
+        self.rows = rows              # ticket-row indices raced here
+        self.offset = offset          # first group row of this member
+
+
+class _Entry(object):
+    """Plane-internal ticket state (the public handle is ``.ticket``)."""
+
+    def __init__(self, ticket: Ticket, queries, rng, spec: QuerySpec,
+                 is_sparse: bool):
+        self.ticket = ticket
+        self.queries = queries
+        self.rng = rng
+        self.spec = spec
+        self.is_sparse = is_sparse
+        Q = ticket.n_queries
+        self.cached_rows: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self.cache_epoch = -1         # store epoch the cached rows are from
+        # frozen certified prefix per row: once an entry certifies it is
+        # never revoked nor reordered (anytime-monotonicity by construction)
+        self.cert_ids: List[List[int]] = [[] for _ in range(Q)]
+        self.cert_vals: List[List[float]] = [[] for _ in range(Q)]
+        self.group: Optional["_Group"] = None
+        self.member: Optional[_Member] = None
+        self.coord_ops = np.zeros((Q,), np.float64)
+        self.rounds = np.zeros((Q,), np.int64)
+        self.epoch = 0                # store epoch the result is valid for
+
+    @property
+    def miss_rows(self) -> List[int]:
+        return [i for i in range(self.ticket.n_queries)
+                if i not in self.cached_rows]
+
+
+class _Group(object):
+    """One coalesced race batch: a RaceSession plus its member tickets."""
+
+    def __init__(self, session, members: List[_Member], store_epoch: int):
+        self.session = session
+        self.members = members
+        self.store_epoch = store_epoch
+
+
+class RequestPlane:
+    """The async request plane over one ``repro.api.Index`` handle."""
+
+    def __init__(self, index: Index, config: Optional[PlaneConfig] = None):
+        self.index = index
+        self.config = config if config is not None else PlaneConfig()
+        self._queues: "collections.OrderedDict[str, collections.deque]" = \
+            collections.OrderedDict()
+        self._groups: List[_Group] = []
+        self._next_id = 0
+        self._entries: Dict[int, _Entry] = {}
+        self._latencies: collections.deque = collections.deque(
+            maxlen=self.config.latency_window)
+        self._submitted = 0
+        self._admitted = 0
+        self._completed = 0
+        self._shed = 0
+        self._deadline_exits = 0
+        self._budget_exits = 0
+        self._readmitted = 0
+        self._epochs = 0
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, queries, spec: Optional[QuerySpec] = None, *,
+               tenant: str = "default", rng=None, **overrides) -> Ticket:
+        """Admit a query batch. Returns a ``Ticket`` immediately: poll or
+        stream it, or let ``drain()`` run the plane to quiescence. Keyword
+        overrides (``deadline=``, ``budget=``, ``k=``, …) refine the spec
+        exactly like ``Index.query``."""
+        if spec is None:
+            spec = QuerySpec(**overrides)
+        elif overrides:
+            spec = dataclasses.replace(spec, **overrides)
+        is_sparse = isinstance(queries, tuple)
+        # reject unraceable submissions HERE, not at group launch: a bad
+        # spec admitted into a coalesced bucket would abort co-admitted
+        # tickets' admission mid-step
+        kind = self.index.kind
+        if is_sparse != (kind == "sparse"):
+            raise ValueError(
+                f"a {kind!r} index takes "
+                f"{'(q_idx, q_val, q_nnz) triplet' if kind == 'sparse' else 'dense (Q, d) array'} "
+                "queries")
+        if spec.mode == "fused" and kind == "sparse":
+            raise ValueError("the fused epoch driver pulls corpus blocks — "
+                             "sparse boxes race on the per-round driver")
+        if spec.mode == "rounds" and kind != "sparse":
+            raise ValueError(
+                "anytime sessions drive dense/rotated boxes through the "
+                "epoch-fused driver; mode='rounds' is blocking-query only")
+        if spec.bind(self.index.cfg).k > self.index.n_live:
+            raise ValueError(
+                f"k={spec.bind(self.index.cfg).k} exceeds the index's "
+                f"{self.index.n_live} live slots")
+        if is_sparse:
+            queries = tuple(np.asarray(a) for a in queries)
+            Q = queries[0].shape[0]
+        else:
+            queries = np.asarray(queries, np.float32)
+            Q = queries.shape[0]
+        now = time.monotonic()
+        ticket = Ticket(id=self._next_id, tenant=tenant, n_queries=Q,
+                        spec=spec, submitted_at=now)
+        self._next_id += 1
+        self._submitted += 1
+        entry = _Entry(ticket, queries, rng, spec, is_sparse)
+        self._entries[ticket.id] = entry
+
+        q = self._queues.setdefault(tenant, collections.deque())
+        entry.epoch = self.index.epoch
+        self._consult_cache(entry)
+        if not entry.miss_rows:          # fully served from the query LRU —
+            self._finish(entry, R_CERTIFIED)   # free, never needs a slot
+            return ticket
+        if len(q) >= self.config.max_queue:
+            self._shed += 1
+            ticket.status = SHED
+            ticket.reason = "queue_full"
+            ticket.finished_at = now
+            ticket.result = self._empty_result(entry, R_SHED)
+            self._entries.pop(ticket.id, None)
+            return ticket
+        q.append(entry)
+        return ticket
+
+    def _consult_cache(self, entry: _Entry) -> None:
+        """Serve exact-repeat rows from the handle's LRU at submit time
+        (same contract as ``Index.query``; the shared cache keeps both
+        surfaces coherent). Near-repeat CI priors are seeded later, at
+        group launch — a ticket shed by backpressure must not pay them."""
+        cache = self.index._cache
+        spec = entry.spec
+        entry.cache_epoch = self.index.epoch
+        if (cache is None or entry.is_sparse or not spec.cacheable
+                or spec.cache == "bypass"):
+            return
+        hid = entry.queries
+        for i in range(entry.ticket.n_queries):
+            got = (None if spec.cache == "refresh"
+                   else cache.get(QueryCache.key(hid[i])))
+            if got is not None:
+                entry.cached_rows[i] = (np.asarray(got[0]).copy(),
+                                        np.asarray(got[1]).copy())
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _race_key(self, entry: _Entry):
+        s = entry.spec
+        return (s.k, s.mode, s.impl, s.delta, s.max_rounds, s.eliminate,
+                s.warm_start, entry.is_sparse)
+
+    def _admission_key(self, entry: _Entry):
+        """Deadline-aware admission order: earliest absolute deadline
+        first, unbounded traffic after, FIFO within a class."""
+        dl = entry.spec.deadline
+        expiry = (entry.ticket.submitted_at + dl.ms / 1e3 if dl is not None
+                  else float("inf"))
+        return (expiry, entry.ticket.submitted_at)
+
+    def _pop_ready(self, entry: _Entry, now: float) -> bool:
+        """Post-pop admission checks: expire a late ticket, re-consult
+        stale cached rows (a mutation moved the epoch — a single result
+        never mixes store epochs). True iff the entry still needs a race."""
+        if self._expire_if_late(entry, now):
+            return False
+        if entry.cache_epoch != self.index.epoch:
+            entry.cached_rows.clear()
+            self._consult_cache(entry)
+            if not entry.miss_rows:
+                entry.epoch = self.index.epoch
+                self._finish(entry, R_CERTIFIED)
+                return False
+        return True
+
+    def _pick_deadline_overflow(self, now: float) -> List[_Entry]:
+        """EDF scan of the WHOLE queues (not just heads — a deadline
+        ticket may sit behind its own tenant's unbounded one) for the
+        overflow slot's batch."""
+        cands = sorted(
+            ((self._admission_key(e), t, e)
+             for t, q in self._queues.items() for e in q
+             if e.spec.deadline is not None),
+            key=lambda c: c[0])
+        picked, rows = [], 0
+        for _, tenant, entry in cands:
+            if picked and (rows + len(entry.miss_rows)
+                           > self.config.max_group_queries):
+                continue
+            self._queues[tenant].remove(entry)
+            if not self._pop_ready(entry, now):
+                continue
+            picked.append(entry)
+            rows += len(entry.miss_rows)
+            if rows >= self.config.max_group_queries:
+                break
+        return picked
+
+    def _admit_groups(self, now: float) -> None:
+        """Join-at-epoch-boundary: pop pending tickets across tenants —
+        at most one per tenant per round (fairness against a heavy
+        tenant), earliest-deadline-first within each round (deadline-aware
+        micro-batching) — bucket them by race compatibility, and launch
+        each bucket as one pow2-coalesced race group."""
+        budget = (self.config.max_active_groups - len(self._groups))
+        if budget <= 0:
+            # all group slots busy with long races: deadline-bounded
+            # arrivals still get ONE overflow slot (never more — a huge
+            # deadline is indistinguishable from run-to-certification, so
+            # the overflow must stay bounded) — their groups usually retire
+            # within a pass or two, while parking them behind long races
+            # would burn their entire wall budget in the queue
+            if (len(self._groups) <= self.config.max_active_groups
+                    and any(e.spec.deadline is not None
+                            for q in self._queues.values() for e in q)):
+                picked = self._pick_deadline_overflow(now)
+                budget = 1
+            else:
+                return
+        else:
+            picked = []
+            rows = 0
+            while rows < self.config.max_group_queries:
+                progressed = False
+                heads = sorted(
+                    (t for t, q in self._queues.items() if q),
+                    key=lambda t: self._admission_key(self._queues[t][0]))
+                for tenant in heads:
+                    q = self._queues[tenant]
+                    if not q:
+                        continue
+                    entry = q[0]
+                    need = len(entry.miss_rows)
+                    if picked and rows + need > self.config.max_group_queries:
+                        continue
+                    q.popleft()
+                    progressed = True
+                    if not self._pop_ready(entry, now):
+                        continue
+                    picked.append(entry)
+                    rows += len(entry.miss_rows)
+                    if rows >= self.config.max_group_queries:
+                        break
+                if not progressed:
+                    break
+        buckets: "collections.OrderedDict[tuple, List[_Entry]]" = \
+            collections.OrderedDict()
+        for entry in picked:
+            buckets.setdefault(self._race_key(entry), []).append(entry)
+        leftover: List[_Entry] = []
+        for bucket in buckets.values():
+            if budget <= 0:              # out of group slots this pass
+                leftover.extend(bucket)
+                continue
+            self._launch_group(bucket, now)
+            budget -= 1
+        # requeue unlaunched entries in ORIGINAL pick order (front of their
+        # tenant queues) so FIFO/EDF-within-class admission order survives
+        for entry in reversed([e for e in picked if e in leftover]):
+            self._queues.setdefault(
+                entry.ticket.tenant, collections.deque()).appendleft(entry)
+
+    def _launch_group(self, entries: List[_Entry], now: float) -> None:
+        members: List[_Member] = []
+        parts, hints, offset = [], [], 0
+        for entry in entries:
+            rows = entry.miss_rows
+            members.append(_Member(entry, rows, offset))
+            if entry.is_sparse:
+                parts.append(tuple(a[rows] for a in entry.queries))
+            else:
+                parts.append(entry.queries[rows])
+            # near-repeat warm starts: seeded per miss row from the LRU's
+            # cosine neighbours (the Index.query contract), paid only for
+            # tickets that actually race
+            hint = None
+            if (not entry.is_sparse and entry.spec.cacheable
+                    and entry.spec.cache != "bypass"):
+                hint = self.index._seeded_priors(entry.queries, rows)
+            hints.append(hint)
+            offset += len(rows)
+        is_sparse = entries[0].is_sparse
+        batch = (_concat_sparse(parts) if is_sparse
+                 else np.concatenate(parts, axis=0))
+        prior_hint = None
+        if any(h is not None for h in hints):
+            base = np.asarray(self.index.store.prior_var, np.float32)
+            priors = []
+            for member, hint in zip(members, hints):
+                priors.extend([base] * len(member.rows) if hint is None
+                              else list(hint))
+            prior_hint = np.stack(priors)
+        pad = next_pow2(offset) - offset
+        if pad:
+            if is_sparse:
+                batch = tuple(np.concatenate(
+                    [a, np.repeat(a[:1], pad, 0)], 0) for a in batch)
+            else:
+                batch = np.concatenate(
+                    [batch, np.repeat(batch[:1], pad, 0)], 0)
+            if prior_hint is not None:
+                prior_hint = np.concatenate(
+                    [prior_hint, np.repeat(prior_hint[:1], pad, 0)], 0)
+        spec = dataclasses.replace(entries[0].spec, prior_hint=prior_hint,
+                                   deadline=None, budget=None)
+        rng = next((e.rng for e in entries if e.rng is not None), None)
+        try:
+            session = self.index.race(batch, rng, spec=spec,
+                                      raced_queries=offset,
+                                      chunk_rounds=self.config.chunk_rounds)
+        except Exception as e:  # noqa: BLE001 — never orphan the bucket
+            log.warning("race launch rejected (%s): shedding %d ticket(s)",
+                        e, len(entries))
+            for entry in entries:
+                self._shed += 1
+                t = entry.ticket
+                t.status = SHED
+                t.reason = f"rejected: {e}"
+                t.finished_at = time.monotonic()
+                t.result = self._empty_result(entry, R_SHED)
+                self._entries.pop(t.id, None)
+            return
+        if pad:
+            # pow2 pad rows belong to no ticket: retire them immediately so
+            # they neither race nor dilute the adaptive pull reallocation
+            session.retire(np.arange(session.Q) >= offset)
+        group = _Group(session, members, self.index.epoch)
+        for member in members:
+            member.entry.group = group
+            member.entry.member = member
+            member.entry.epoch = group.store_epoch
+            t = member.entry.ticket
+            t.status = RACING
+            if t.admitted_at is None:
+                t.admitted_at = now
+                self._admitted += 1
+        self._groups.append(group)
+
+    def _fence_groups(self) -> None:
+        """Mutation fence: a group whose store epoch fell behind either
+        completes against its (immutable) old store or is re-admitted."""
+        if self.config.on_mutation != "readmit":
+            return
+        epoch = self.index.epoch
+        for group in [g for g in self._groups if g.store_epoch != epoch]:
+            self._groups.remove(group)
+            # the epochs already paid against the old store are real load —
+            # keep them in the cumulative per-shard telemetry
+            self.index._record_session_telemetry(group.session)
+            for member in group.members:
+                entry = member.entry
+                if entry.ticket.terminal:
+                    continue
+                # discard partial state computed against the dead epoch —
+                # certified prefixes must never mix store epochs
+                for i in member.rows:
+                    entry.cert_ids[i] = []
+                    entry.cert_vals[i] = []
+                entry.cached_rows.clear()
+                entry.group = entry.member = None
+                entry.ticket.status = QUEUED
+                self._readmitted += 1
+                self._consult_cache(entry)
+                if not entry.miss_rows:
+                    entry.epoch = epoch
+                    self._finish(entry, R_CERTIFIED)
+                    continue
+                self._queues.setdefault(
+                    entry.ticket.tenant,
+                    collections.deque()).appendleft(entry)
+
+    def _harvest(self, group: _Group, *, count_epoch: bool) -> None:
+        """Finish every member whose terminal condition holds against the
+        group's current snapshot, retiring their rows so survivors inherit
+        the pull budget. Called before AND after each group epoch — the
+        pre-step pass lets a deadline expire at the boundary the ticket is
+        already standing on instead of paying one more epoch."""
+        now = time.monotonic()
+        snap = group.session.snapshot
+        retire_rows = []
+        for member in list(group.members):
+            entry = member.entry
+            if count_epoch:
+                entry.ticket.epochs += 1
+                self._ingest(entry, member, snap, group.store_epoch)
+            reason = self._terminal_reason(entry, member, snap, now)
+            if reason is not None:
+                self._finish(entry, reason)
+                group.members.remove(member)
+                if reason != R_CERTIFIED:
+                    retire_rows.extend(
+                        range(member.offset,
+                              member.offset + len(member.rows)))
+        if retire_rows:
+            mask = np.zeros((group.session.Q,), bool)
+            mask[retire_rows] = True
+            group.session.retire(mask)
+        if not group.members:
+            self.index._record_session_telemetry(group.session)
+            self._groups.remove(group)
+
+    def step(self) -> int:
+        """One scheduler epoch: fence, admit, advance every active group by
+        one epoch, harvest terminals. Returns tickets still in flight."""
+        now = time.monotonic()
+        self._fence_groups()
+        self._admit_groups(now)
+        if self._groups:
+            self._epochs += 1
+        for group in list(self._groups):
+            self._harvest(group, count_epoch=False)   # pre-step expiries
+            if group not in self._groups:
+                continue
+            group.session.step()
+            self._harvest(group, count_epoch=True)
+        # expire queued tickets whose deadline passed while waiting
+        now = time.monotonic()
+        for q in self._queues.values():
+            for entry in [e for e in q if self._deadline_passed(e, now)]:
+                q.remove(entry)
+                entry.epoch = self.index.epoch
+                self._finish(entry, R_DEADLINE)
+        # drop drained tenant queues: distinct tenant names must not grow
+        # the admission scan (or stats) without bound on a long-lived plane
+        for tenant in [t for t, q in self._queues.items() if not q]:
+            del self._queues[tenant]
+        return self.active
+
+    def drain(self, max_epochs: int = 100000) -> None:
+        """Run the scheduler until every submitted ticket is terminal."""
+        while self.active:
+            self.step()
+            max_epochs -= 1
+            if max_epochs <= 0:
+                raise RuntimeError("RequestPlane.drain did not quiesce")
+
+    @property
+    def active(self) -> int:
+        queued = sum(len(q) for q in self._queues.values())
+        racing = sum(len(g.members) for g in self._groups)
+        return queued + racing
+
+    # -- termination & result assembly --------------------------------------
+
+    def _deadline_passed(self, entry: _Entry, now: float) -> bool:
+        dl = entry.spec.deadline
+        return (dl is not None
+                and now >= entry.ticket.submitted_at + dl.ms / 1e3)
+
+    def _expire_if_late(self, entry: _Entry, now: float) -> bool:
+        if self._deadline_passed(entry, now):
+            entry.epoch = self.index.epoch
+            self._finish(entry, R_DEADLINE)
+            return True
+        return False
+
+    def _terminal_reason(self, entry: _Entry, member: _Member, snap,
+                         now: float) -> Optional[str]:
+        done = snap.done
+        if all(done[member.offset + j] for j in range(len(member.rows))):
+            return R_CERTIFIED
+        if entry.group is not None and entry.group.session.exhausted:
+            return R_BUDGET
+        if self._deadline_passed(entry, now):
+            return R_DEADLINE
+        budget = entry.spec.budget
+        if budget is not None:
+            if (budget.epochs is not None
+                    and entry.ticket.epochs >= budget.epochs):
+                return R_BUDGET
+            if (budget.coord_ops is not None
+                    and float(entry.coord_ops.max()) >= budget.coord_ops):
+                return R_BUDGET
+        return None
+
+    def _ingest(self, entry: _Entry, member: _Member, snap,
+                store_epoch: int) -> None:
+        """Fold a group snapshot into the ticket: extend each row's frozen
+        certified prefix (never revoked, never reordered) and refresh the
+        cost counters."""
+        entry.epoch = store_epoch
+        for j, i in enumerate(member.rows):
+            g = member.offset + j
+            entry.coord_ops[i] = snap.coord_ops[g]
+            entry.rounds[i] = snap.rounds[g]
+            k = snap.ids.shape[1]
+            acc = int(snap.acc_count[g])
+            bar = float(snap.cand_lcb_min[g])
+            frozen_ids = entry.cert_ids[i]
+            frozen_vals = entry.cert_vals[i]
+            for p in range(len(frozen_ids), acc):
+                v = float(snap.values[g, p])
+                if not (v < bar) or len(frozen_ids) >= k:
+                    break
+                gid = int(snap.ids[g, p])
+                if gid in frozen_ids:      # δ-failure guard: never duplicate
+                    continue
+                frozen_ids.append(gid)
+                frozen_vals.append(v)
+
+    def _row_result(self, entry: _Entry, i: int, k: int, snap=None,
+                    g: Optional[int] = None):
+        """(ids, vals, ci, certified) for ticket row i: cached rows are a
+        full certified prefix; raced rows are frozen-prefix + best-effort
+        tail from the latest snapshot."""
+        if i in entry.cached_rows:
+            ids, vals = entry.cached_rows[i]
+            return (np.asarray(ids, np.int64), np.asarray(vals, np.float32),
+                    np.zeros((k,), np.float32), k)
+        ids = list(entry.cert_ids[i])
+        vals = list(entry.cert_vals[i])
+        ci = [0.0] * len(ids)
+        cc = len(ids)
+        if snap is not None and g is not None:
+            for p in range(snap.ids.shape[1]):
+                if len(ids) >= k:
+                    break
+                gid = int(snap.ids[g, p])
+                v = float(snap.values[g, p])
+                if gid in entry.cert_ids[i] or not np.isfinite(v):
+                    continue
+                ids.append(gid)
+                vals.append(v)
+                ci.append(float(snap.ci[g, p]))
+        while len(ids) < k:
+            ids.append(-1)
+            vals.append(np.inf)
+            ci.append(np.inf)
+        return (np.asarray(ids, np.int64), np.asarray(vals, np.float32),
+                np.asarray(ci, np.float32), cc)
+
+    def _build_result(self, entry: _Entry, terminal: bool,
+                      reason: str) -> AnytimeResult:
+        k = entry.spec.bind(self.index.cfg).k
+        Q = entry.ticket.n_queries
+        ids = np.full((Q, k), -1, np.int64)
+        vals = np.full((Q, k), np.inf, np.float32)
+        ci = np.full((Q, k), np.inf, np.float32)
+        cc = np.zeros((Q,), np.int32)
+        member, snap = entry.member, None
+        row_of_group = {}
+        if member is not None and entry.group is not None:
+            snap = entry.group.session.snapshot
+            row_of_group = {i: member.offset + j
+                            for j, i in enumerate(member.rows)}
+        for i in range(Q):
+            g = row_of_group.get(i)
+            ids[i], vals[i], ci[i], cc[i] = self._row_result(
+                entry, i, k, snap if g is not None else None, g)
+        return AnytimeResult(
+            indices=ids, values=vals, ci_radii=ci, certified_count=cc,
+            epoch=entry.epoch, terminal=terminal, reason=reason,
+            coord_ops=entry.coord_ops.copy(), rounds=entry.rounds.copy(),
+            epochs=entry.ticket.epochs)
+
+    def _empty_result(self, entry: _Entry, reason: str) -> AnytimeResult:
+        return self._build_result(entry, True, reason)
+
+    def _finish(self, entry: _Entry, reason: str) -> None:
+        t = entry.ticket
+        t.status = DONE if reason != R_SHED else SHED
+        t.reason = reason
+        t.finished_at = time.monotonic()
+        t.result = self._build_result(entry, True, reason)
+        self._completed += 1
+        if reason == R_DEADLINE:
+            self._deadline_exits += 1
+        elif reason == R_BUDGET:
+            self._budget_exits += 1
+        self._latencies.append(t.latency_ms)
+        self._fill_cache(entry, reason)
+        entry.group = entry.member = None
+        self._entries.pop(t.id, None)
+
+    def _fill_cache(self, entry: _Entry, reason: str) -> None:
+        """Fully-certified default-contract answers populate the LRU —
+        partial (deadline/budget) results never do, and neither does a
+        result certified against a superseded store epoch (an
+        ``on_mutation='complete'`` group finishing after a mutation must
+        not poison the new epoch's cache with, e.g., a deleted id)."""
+        cache = self.index._cache
+        if (cache is None or reason != R_CERTIFIED or entry.is_sparse
+                or not entry.spec.cacheable or entry.spec.cache == "bypass"
+                or entry.epoch != self.index.epoch):
+            return
+        res = entry.ticket.result
+        for i in entry.miss_rows:
+            if int(res.certified_count[i]) < res.indices.shape[1]:
+                continue
+            row = entry.queries[i]
+            cache.put(QueryCache.key(row),
+                      (res.indices[i].copy(), res.values[i].copy()), vec=row)
+
+    # -- consumption ---------------------------------------------------------
+
+    def poll(self, ticket: Ticket) -> AnytimeResult:
+        """Non-advancing read of the ticket's current anytime answer."""
+        if ticket.result is not None and ticket.terminal:
+            return ticket.result
+        entry = self._entries[ticket.id]
+        reason = "queued" if ticket.status == QUEUED else "partial"
+        return self._build_result(entry, False, reason)
+
+    def stream(self, ticket: Ticket) -> Iterator[AnytimeResult]:
+        """Drive the scheduler and yield the ticket's refined answer after
+        every scheduler epoch, ending with the terminal result."""
+        if ticket.terminal:
+            yield ticket.result
+            return
+        while not ticket.terminal:
+            self.step()
+            yield self.poll(ticket)
+
+    def query(self, queries, rng=None, spec: Optional[QuerySpec] = None,
+              *, tenant: str = "default", **overrides) -> AnytimeResult:
+        """Blocking shim: submit + drain — what ``ServeEngine`` calls for
+        its per-decode-step retrieval (under its own reserved tenant, so
+        external load can never shed the decode loop). Same cache/counter
+        semantics as the pre-plane ``Index.query`` hot path."""
+        ticket = self.submit(queries, spec, tenant=tenant, rng=rng,
+                             **overrides)
+        while not ticket.terminal:
+            self.step()
+        if ticket.status == SHED:
+            raise RuntimeError(
+                f"blocking query shed by the request plane "
+                f"({ticket.reason}) — the admission queue is full")
+        return ticket.result
+
+    # -- telemetry -----------------------------------------------------------
+
+    @property
+    def stats(self) -> ServeStats:
+        """The handle's ``ServeStats`` extended with the plane's queue and
+        latency telemetry (schema v2)."""
+        st = self.index.stats
+        lat = list(self._latencies)
+        return dataclasses.replace(
+            st,
+            plane_submitted=self._submitted,
+            plane_admitted=self._admitted,
+            plane_completed=self._completed,
+            plane_shed=self._shed,
+            plane_deadline_exits=self._deadline_exits,
+            plane_budget_exits=self._budget_exits,
+            plane_readmitted=self._readmitted,
+            plane_epochs=self._epochs,
+            plane_queue_depth=sum(len(q) for q in self._queues.values()),
+            plane_active=sum(len(g.members) for g in self._groups),
+            plane_latency_p50_ms=percentile(lat, 50),
+            plane_latency_p95_ms=percentile(lat, 95),
+            plane_latency_p99_ms=percentile(lat, 99),
+        )
+
+
+def _concat_sparse(parts: List[tuple]) -> tuple:
+    """Concatenate (q_idx, q_val, q_nnz) padded-CSR triplets along the
+    query axis, widening every part to the max pad width (fill: d-like
+    sentinel column index 0-value, nnz untouched — pulls are nnz-bounded)."""
+    m = max(p[0].shape[1] for p in parts)
+
+    def widen(a, fill):
+        pad = m - a.shape[1]
+        if pad == 0:
+            return a
+        return np.concatenate(
+            [a, np.full((a.shape[0], pad), fill, a.dtype)], axis=1)
+
+    q_idx = np.concatenate([widen(p[0], 0) for p in parts], axis=0)
+    q_val = np.concatenate([widen(p[1], 0) for p in parts], axis=0)
+    q_nnz = np.concatenate([p[2] for p in parts], axis=0)
+    return q_idx, q_val, q_nnz

@@ -1,0 +1,107 @@
+"""repro.serve.scale — autoscaling hints from request-plane telemetry
+(ROADMAP "replica write-log shipping + autoscaling", first slice).
+
+A ``ScalePolicy`` consumes the queue-depth / latency fields the plane adds
+to ``ServeStats`` (schema v2) and emits *recommendations* — it never
+touches the index itself. The launcher applies them behind ``--autoscale``
+(recommendation-only by default; ``--autoscale-apply`` executes
+``add_replicas``), so capacity decisions stay observable and reversible.
+
+The default ``QueueDepthPolicy`` is deliberately boring: sustained queue
+depth (or p95 latency over target) scales *out*; a sustained idle queue
+scales back *in*; a shard-imbalanced index is told to ``reshard`` before
+replicating, because replicas multiply an imbalance instead of fixing it.
+Hysteresis comes from requiring ``sustain`` consecutive observations and a
+``cooldown`` between actions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.api import ServeStats
+
+ACTIONS = ("none", "add_replicas", "reshard")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    """One recommendation: do ``action`` with parameter ``value``."""
+
+    action: str = "none"          # none | add_replicas | reshard
+    value: int = 0                # target replica count / shard count
+    reason: str = ""
+
+    def __post_init__(self):
+        if self.action not in ACTIONS:
+            raise ValueError(f"unknown action {self.action!r} "
+                             f"(want one of {ACTIONS})")
+
+
+class ScalePolicy:
+    """Interface: feed one ``ServeStats`` snapshot per observation window,
+    get a ``ScaleDecision`` back. Implementations keep their own hysteresis
+    state; ``recommend`` must stay side-effect-free w.r.t. the index."""
+
+    def recommend(self, stats: ServeStats) -> ScaleDecision:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class QueueDepthPolicy(ScalePolicy):
+    """Watermark policy over plane queue depth and terminal p95 latency."""
+
+    high_queue: int = 8            # queue depth that signals saturation
+    low_queue: int = 0             # queue depth that signals idle capacity
+    p95_target_ms: Optional[float] = None   # latency SLO (None = ignore)
+    imbalance: float = 2.0         # max/mean shard coord-ops → reshard
+    sustain: int = 3               # consecutive hot/cold windows to act
+    cooldown: int = 3              # windows to hold after any action
+    max_replicas: int = 4
+    max_shards: int = 8
+    _hot: int = dataclasses.field(default=0, repr=False)
+    _cold: int = dataclasses.field(default=0, repr=False)
+    _hold: int = dataclasses.field(default=0, repr=False)
+
+    def recommend(self, stats: ServeStats) -> ScaleDecision:
+        if self._hold > 0:
+            self._hold -= 1
+            return ScaleDecision(reason="cooldown")
+        hot = stats.plane_queue_depth >= self.high_queue
+        if (self.p95_target_ms is not None
+                and stats.plane_latency_p95_ms is not None
+                and stats.plane_latency_p95_ms > self.p95_target_ms):
+            hot = True
+        cold = (stats.plane_queue_depth <= self.low_queue
+                and stats.plane_active == 0)
+        self._hot = self._hot + 1 if hot else 0
+        self._cold = self._cold + 1 if (cold and not hot) else 0
+
+        if self._hot >= self.sustain:
+            self._hot = 0
+            self._hold = self.cooldown
+            ops = stats.shard_coord_ops
+            if ops and sum(ops) > 0:
+                mean = sum(ops) / len(ops)
+                if mean > 0 and max(ops) / mean >= self.imbalance:
+                    target = min(2 * len(ops), self.max_shards)
+                    if target > len(ops):
+                        return ScaleDecision(
+                            "reshard", target,
+                            f"queue {stats.plane_queue_depth} high and "
+                            f"shard load imbalanced "
+                            f"(max/mean {max(ops) / mean:.2f})")
+            if stats.replicas < self.max_replicas:
+                return ScaleDecision(
+                    "add_replicas", stats.replicas + 1,
+                    f"queue depth {stats.plane_queue_depth} "
+                    f"(p95 {stats.plane_latency_p95_ms}) sustained "
+                    f"{self.sustain} windows")
+            return ScaleDecision(reason="saturated at max_replicas")
+        if self._cold >= self.sustain and stats.replicas > 1:
+            self._cold = 0
+            self._hold = self.cooldown
+            return ScaleDecision(
+                "add_replicas", stats.replicas - 1,
+                f"idle {self.sustain} windows at {stats.replicas} replicas")
+        return ScaleDecision(reason="steady")

@@ -1,0 +1,521 @@
+"""Request-plane test coverage (DESIGN.md §7): the anytime certified-prefix
+contract across boxes and shard counts, scheduler termination (deadline /
+effort budget), anytime monotonicity, tenant fairness under an adversarial
+heavy tenant, backpressure shedding, the mutation epoch fence, the blocking
+``plane.query`` shim's cache/counter parity, the ServeStats v2 schema, and
+the ``ScalePolicy`` autoscaling hints on synthetic load traces.
+
+The sharded (S=4) anytime contract runs as a subprocess on a forced
+4-device host mesh (the test_distributed.py harness), so it covers every
+tier-1 invocation regardless of the parent's device count.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Deadline, EffortBudget, Index, QuerySpec
+from repro.configs.base import BMOConfig
+from repro.data.synthetic import clustered_sparse, make_knn_benchmark_data
+from repro.serve.plane import PlaneConfig, RequestPlane
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(prog: str, devices: int = 4, timeout: int = 560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c",
+                          "import repro\n" + textwrap.dedent(prog)],
+                         capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=timeout)
+    assert out.returncode == 0 and "OK" in out.stdout, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+
+
+def _dense_cfg(**kw):
+    base = dict(k=4, delta=0.01, block=64, batch_arms=16, pulls_per_round=2,
+                metric="l2")
+    base.update(kw)
+    return BMOConfig(**base)
+
+
+def _dense_index(n=256, d=512, Q=4, seed=1, **kw):
+    corpus, queries = make_knn_benchmark_data("dense", n, d, Q, seed=seed)
+    cfg = _dense_cfg(**kw)
+    return Index.build(corpus, cfg, jax.random.PRNGKey(0)), queries
+
+
+def _sparse_index():
+    from repro.core.datasets import SparseDataset
+    corpus = clustered_sparse(200, 2048, seed=4)
+    ds = SparseDataset.build(corpus)
+    queries = (ds.indices[:4], ds.values[:4], ds.nnz[:4])
+    cfg = BMOConfig(k=3, delta=0.01, block=1, batch_arms=16,
+                    pulls_per_round=8, init_pulls=16, metric="l1",
+                    sparse=True)
+    return Index.build(corpus, cfg, jax.random.PRNGKey(0)), queries
+
+
+def _prefix_ok(partial, full):
+    """The anytime contract: certified entries are exact (CI 0), ordered,
+    and exactly the prefix of the full-certification answer."""
+    Q, k = partial.indices.shape
+    for q in range(Q):
+        cc = int(partial.certified_count[q])
+        assert 0 <= cc <= k
+        assert partial.indices[q][:cc].tolist() == \
+            full.indices[q][:cc].tolist(), (q, cc)
+        np.testing.assert_allclose(partial.values[q][:cc],
+                                   full.values[q][:cc], rtol=1e-5)
+        assert (partial.ci_radii[q][:cc] == 0.0).all()
+        # never an uncertified arm ranked above a certified one: positions
+        # beyond the prefix carry nonzero CI or are non-certified estimates
+        if cc < k:
+            tail = partial.ci_radii[q][cc:]
+            assert not np.any(tail < 0)
+
+
+# ---------------------------------------------------------------------------
+# anytime certified-prefix contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["dense", "rotated", "sparse"])
+def test_anytime_prefix_matches_full_certification(kind):
+    """For ANY effort cutoff, the certified prefix of the partial answer
+    equals the full-certification answer's prefix (acceptance criterion)."""
+    if kind == "sparse":
+        idx, queries = _sparse_index()
+    else:
+        idx, queries = _dense_index(rotate=(kind == "rotated"))
+    rng = jax.random.PRNGKey(7)
+    full = RequestPlane(idx).query(queries, rng=rng, cache="bypass")
+    assert full.terminal and full.reason == "certified"
+    assert (full.certified_count == idx.k).all()
+    assert (np.diff(full.values, axis=1) >= -1e-6).all()   # sorted exact θ
+
+    hit_partial = False
+    for epochs in (1, 2, 3, 5, 8):
+        plane = RequestPlane(idx)
+        res = plane.query(queries, rng=rng, cache="bypass",
+                          budget=EffortBudget(epochs=epochs))
+        assert res.terminal
+        _prefix_ok(res, full)
+        if res.reason == "budget":
+            hit_partial = True
+            assert res.epochs <= epochs
+    assert hit_partial      # at least one cutoff actually truncated a race
+
+
+def test_anytime_monotonic_certified_count():
+    """Streaming one ticket: certified_count never decreases, the certified
+    prefix never changes once emitted, and the terminal answer certifies
+    all k (acceptance: anytime-monotonicity)."""
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx)
+    t = plane.submit(queries, rng=jax.random.PRNGKey(3), cache="bypass")
+    prev = None
+    seen_prefix = [[] for _ in range(t.n_queries)]
+    for partial in plane.stream(t):
+        cc = partial.certified_count
+        if prev is not None:
+            assert (cc >= prev).all(), "certified_count regressed"
+        for q in range(t.n_queries):
+            ids = partial.indices[q][: int(cc[q])].tolist()
+            assert ids[: len(seen_prefix[q])] == seen_prefix[q], \
+                "certified prefix was reordered"
+            seen_prefix[q] = ids
+        prev = cc
+    assert t.result.reason == "certified"
+    assert (t.result.certified_count == idx.k).all()
+
+
+def test_sharded_anytime_prefix_subprocess():
+    """Dense + rotated + sparse at S=4 on a forced 4-device host mesh:
+    deadline/budget partials return a certified prefix of the
+    full-certification answer (acceptance criterion, sharded half)."""
+    _run("""
+        import jax, numpy as np
+        from repro.api import EffortBudget, Index
+        from repro.configs.base import BMOConfig
+        from repro.core.datasets import SparseDataset
+        from repro.data.synthetic import (clustered_sparse,
+                                          make_knn_benchmark_data)
+        from repro.serve.plane import RequestPlane
+
+        def check(idx, queries, rng):
+            full = RequestPlane(idx).query(queries, rng=rng, cache="bypass")
+            assert full.reason == "certified"
+            assert (full.certified_count == idx.k).all()
+            hit = False
+            for epochs in (1, 2, 4, 8):
+                res = RequestPlane(idx).query(
+                    queries, rng=rng, cache="bypass",
+                    budget=EffortBudget(epochs=epochs))
+                hit |= res.reason == "budget"
+                Q, k = res.indices.shape
+                for q in range(Q):
+                    cc = int(res.certified_count[q])
+                    assert res.indices[q][:cc].tolist() == \\
+                        full.indices[q][:cc].tolist(), (epochs, q, cc)
+                    assert (res.ci_radii[q][:cc] == 0).all()
+            assert hit
+
+        corpus, queries = make_knn_benchmark_data("dense", 256, 512, 4,
+                                                  seed=1)
+        for kw in (dict(), dict(rotate=True)):
+            cfg = BMOConfig(k=4, delta=0.01, block=64, batch_arms=16,
+                            pulls_per_round=2, metric="l2", **kw)
+            idx = Index.build(corpus, cfg, jax.random.PRNGKey(0), shards=4)
+            check(idx, queries, jax.random.PRNGKey(7))
+
+        corpus = clustered_sparse(200, 2048, seed=4)
+        ds = SparseDataset.build(corpus)
+        cfg = BMOConfig(k=3, delta=0.01, block=1, batch_arms=16,
+                        pulls_per_round=8, init_pulls=16, metric="l1",
+                        sparse=True)
+        idx = Index.build(corpus, cfg, jax.random.PRNGKey(0), shards=4)
+        check(idx, (ds.indices[:4], ds.values[:4], ds.nnz[:4]),
+              jax.random.PRNGKey(5))
+        print("OK")
+    """, devices=4)
+
+
+# ---------------------------------------------------------------------------
+# scheduler termination
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expiry_returns_certified_prefix():
+    """A wall-clock deadline terminates with reason='deadline' and a valid
+    certified prefix — never an uncertified arm above a certified one."""
+    idx, queries = _dense_index(n=512, d=1024)
+    rng = jax.random.PRNGKey(11)
+    full = RequestPlane(idx).query(queries, rng=rng, cache="bypass")
+    plane = RequestPlane(idx)
+    res = plane.query(queries, rng=rng, cache="bypass",
+                      deadline=Deadline(ms=1.0))
+    assert res.terminal and res.reason == "deadline"
+    assert plane.stats.plane_deadline_exits == 1
+    _prefix_ok(res, full)
+    assert (res.certified_count < idx.k).any()   # 1 ms cannot certify all
+
+
+def test_effort_budget_coord_ops():
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx)
+    res = plane.query(queries, rng=jax.random.PRNGKey(2), cache="bypass",
+                      budget=EffortBudget(coord_ops=1.0))
+    assert res.terminal and res.reason == "budget"
+    assert plane.stats.plane_budget_exits == 1
+
+
+def test_queued_ticket_deadline_expires_without_racing():
+    """A ticket whose deadline lapses while still queued terminates with an
+    empty certified prefix instead of racing a dead request."""
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx, PlaneConfig(max_active_groups=1))
+    t1 = plane.submit(queries, rng=jax.random.PRNGKey(0), cache="bypass")
+    t2 = plane.submit(queries + 1.0, rng=jax.random.PRNGKey(1),
+                      cache="bypass", deadline=Deadline(ms=0.5))
+    import time
+    time.sleep(0.002)
+    plane.drain()
+    assert t1.result.reason == "certified"
+    assert t2.result.reason == "deadline"
+    assert (t2.result.certified_count == 0).all()
+    assert t2.epochs == 0
+
+
+# ---------------------------------------------------------------------------
+# fairness / backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_fairness_one_adversarial_heavy_tenant():
+    """Admission round-robins across tenants: a light tenant arriving after
+    a heavy tenant's flood still gets into the very next race group."""
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx, PlaneConfig(max_group_queries=8,
+                                          max_active_groups=1))
+    heavy = [plane.submit(queries + i, tenant="heavy",
+                          rng=jax.random.PRNGKey(i), cache="bypass")
+             for i in range(6)]
+    light = plane.submit(queries + 100.0, tenant="light",
+                         rng=jax.random.PRNGKey(99), cache="bypass")
+    plane.step()
+    # first group admitted one heavy + the light ticket (8-row budget)
+    assert light.admitted_at is not None
+    assert heavy[0].admitted_at is not None
+    assert all(t.admitted_at is None for t in heavy[1:])
+    plane.drain()
+    assert light.finished_at <= min(t.finished_at for t in heavy[2:])
+    assert all(t.result.reason == "certified" for t in heavy + [light])
+
+
+def test_backpressure_sheds_with_reason():
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx, PlaneConfig(max_queue=2))
+    tickets = [plane.submit(queries + i, rng=jax.random.PRNGKey(i),
+                            cache="bypass") for i in range(5)]
+    shed = [t for t in tickets if t.status == "shed"]
+    assert len(shed) == 3 and all(t.reason == "queue_full" for t in shed)
+    assert all(t.result.terminal and t.result.reason == "shed"
+               for t in shed)
+    assert plane.stats.plane_shed == 3
+    plane.drain()
+    assert all(t.result.reason == "certified"
+               for t in tickets if t.status != "shed")
+
+
+# ---------------------------------------------------------------------------
+# mutation fence
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_fence_complete_serves_old_epoch():
+    """on_mutation='complete': an in-flight ticket finishes against the
+    (immutable) pre-mutation store and its result is tagged with that
+    epoch — never mixed."""
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx, PlaneConfig(on_mutation="complete"))
+    epoch0 = idx.epoch
+    t = plane.submit(queries, rng=jax.random.PRNGKey(1), cache="bypass")
+    plane.step()                          # ticket racing against epoch0
+    idx.insert(np.asarray(queries, np.float32))   # epoch bump mid-race
+    assert idx.epoch == epoch0 + 1
+    plane.drain()
+    assert t.result.reason == "certified"
+    assert t.result.epoch == epoch0       # completed against the old store
+    assert plane.stats.plane_readmitted == 0
+    # regression: an old-epoch result must NOT poison the new epoch's
+    # query LRU — a fresh identical query re-races on the mutated store
+    fresh = plane.query(queries, rng=jax.random.PRNGKey(5))
+    assert fresh.epoch == idx.epoch
+    assert float(np.sum(fresh.coord_ops)) > 0   # raced, not cache-served
+
+
+def test_mutation_fence_readmit_regression():
+    """Regression (satellite): a mutation mid-race with
+    on_mutation='readmit' re-admits in-flight tickets against the new
+    store — results are valid for the NEW epoch (a deleted id can never be
+    served) and never mix epochs."""
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx, PlaneConfig(on_mutation="readmit"))
+    epoch0 = idx.epoch
+    # learn the uncontested top-1 of row 0, then delete it mid-race
+    probe = RequestPlane(idx).query(queries, rng=jax.random.PRNGKey(9),
+                                    cache="bypass")
+    top0 = int(probe.indices[0, 0])
+    t = plane.submit(queries, rng=jax.random.PRNGKey(1), cache="bypass")
+    plane.step()                          # in flight against epoch0
+    idx.delete([top0])
+    assert idx.epoch == epoch0 + 1
+    plane.drain()
+    assert t.result.reason == "certified"
+    assert t.result.epoch == idx.epoch    # re-raced on the new store
+    assert plane.stats.plane_readmitted == 1
+    assert top0 not in set(t.result.indices.ravel().tolist())
+    # parity with a fresh query on the mutated store
+    fresh = RequestPlane(idx).query(queries, rng=jax.random.PRNGKey(2),
+                                    cache="bypass")
+    assert set(t.result.indices[0].tolist()) == \
+        set(fresh.indices[0].tolist())
+
+
+# ---------------------------------------------------------------------------
+# blocking shim parity + stats schema
+# ---------------------------------------------------------------------------
+
+
+def test_blocking_shim_matches_index_query_and_caches():
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx)
+    res = plane.query(queries, rng=jax.random.PRNGKey(1))
+    ref = idx.query(queries, jax.random.PRNGKey(1), cache="bypass")
+    for q in range(queries.shape[0]):
+        assert set(res.indices[q].tolist()) == \
+            set(np.asarray(ref.indices[q]).tolist())
+    assert float(np.sum(res.coord_ops)) > 0
+    # exact repeat is served from the shared LRU at zero cost
+    res2 = plane.query(queries, rng=jax.random.PRNGKey(8))
+    assert float(np.sum(res2.coord_ops)) == 0.0
+    np.testing.assert_array_equal(res.indices, res2.indices)
+    st = plane.stats
+    assert st.cache_hits == queries.shape[0]
+    # partial (deadline/budget) results must never poison the cache
+    plane.query(queries + 1.0, rng=jax.random.PRNGKey(2),
+                budget=EffortBudget(epochs=1))
+    assert plane.stats.cache_entries == st.cache_entries
+
+
+def test_serve_stats_v2_schema_and_legacy_keys():
+    """Satellite bugfix: as_dict() carries schema_version=2 with the new
+    queue/latency fields; the legacy ``knn_*`` keys keep working."""
+    from repro.api import ServeStats
+    from repro.api.spec import SCHEMA_VERSION
+    assert SCHEMA_VERSION == 2
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx)
+    plane.query(queries, rng=jax.random.PRNGKey(1))
+    d = plane.stats.as_dict()
+    assert d["schema_version"] == 2
+    for f in ("plane_submitted", "plane_shed", "plane_queue_depth",
+              "plane_latency_p99_ms"):
+        assert f in d
+    st = plane.stats
+    assert st["knn_races"] == st.races == 1
+    assert st["knn_cache_misses"] == st.cache_misses
+    assert "knn_cache_hits" in st
+    # a default ServeStats still satisfies the legacy surface
+    legacy = ServeStats()
+    assert legacy["knn_near_hits"] == 0
+    with pytest.raises(KeyError):
+        legacy["nope"]
+
+
+def test_plane_config_validation():
+    with pytest.raises(ValueError, match="max_active_groups"):
+        PlaneConfig(max_active_groups=0)
+    with pytest.raises(ValueError, match="on_mutation"):
+        PlaneConfig(on_mutation="nope")
+    with pytest.raises(ValueError, match="max_queue"):
+        PlaneConfig(max_queue=0)
+
+
+def test_deadline_overflow_reaches_non_head_tickets():
+    """Regression: with every group slot busy, a deadline ticket queued
+    BEHIND its own tenant's unbounded ticket must still reach the overflow
+    slot (the EDF scan covers whole queues, not just heads)."""
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx, PlaneConfig(max_active_groups=1))
+    blocker = plane.submit(queries, rng=jax.random.PRNGKey(0),
+                           cache="bypass")
+    plane.step()                          # the only slot is now busy
+    unbounded = plane.submit(queries + 1.0, tenant="t",
+                             rng=jax.random.PRNGKey(1), cache="bypass")
+    urgent = plane.submit(queries + 2.0, tenant="t",
+                          rng=jax.random.PRNGKey(2), cache="bypass",
+                          deadline=Deadline(ms=30000.0))
+    plane.step()
+    assert urgent.admitted_at is not None     # took the overflow slot
+    assert unbounded.admitted_at is None      # still parked behind the slot
+    plane.drain()
+    assert all(t.terminal for t in (blocker, unbounded, urgent))
+
+
+def test_requeue_preserves_same_tenant_fifo():
+    """Regression: when admission pops more race-incompatible buckets than
+    free slots, the unlaunched tickets are requeued in original order."""
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx, PlaneConfig(max_active_groups=1))
+    t1 = plane.submit(queries, rng=jax.random.PRNGKey(0), k=2,
+                      cache="bypass")
+    t2 = plane.submit(queries, rng=jax.random.PRNGKey(1), k=3,
+                      cache="bypass")
+    t3 = plane.submit(queries, rng=jax.random.PRNGKey(2), k=4,
+                      cache="bypass")
+    plane.step()                          # launches t1's bucket only
+    assert t1.admitted_at is not None
+    queued_ids = [e.ticket.id for e in plane._queues["default"]]
+    assert queued_ids == [t2.id, t3.id]   # FIFO survives the requeue
+    plane.drain()
+    assert [t.result.reason for t in (t1, t2, t3)] == ["certified"] * 3
+
+
+def test_submit_validates_unraceable_specs():
+    """Regression: invalid specs are rejected at submit — admitted into a
+    coalesced bucket they would abort co-admitted tickets mid-step."""
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx)
+    with pytest.raises(ValueError, match="rounds"):
+        plane.submit(queries, mode="rounds")
+    with pytest.raises(ValueError, match="live slots"):
+        plane.submit(queries, k=10000)
+    with pytest.raises(ValueError, match="dense"):
+        plane.submit((queries, queries, queries[:, 0]))
+
+
+def test_launch_failure_sheds_instead_of_orphaning():
+    """Regression: a race that becomes unlaunchable between submit and
+    admission (here: deletes drop n_live below k) sheds the affected
+    tickets with a reason — drain() always quiesces, nothing is orphaned."""
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx)
+    t1 = plane.submit(queries, rng=jax.random.PRNGKey(0), cache="bypass")
+    t2 = plane.submit(queries + 1.0, rng=jax.random.PRNGKey(1),
+                      cache="bypass")
+    idx.delete(list(range(254)))          # 2 live slots < k=4
+    plane.drain()
+    assert t1.terminal and t2.terminal
+    assert t1.status == "shed" and t1.reason.startswith("rejected")
+    assert "live slots" in t1.reason
+
+
+def test_query_spec_deadline_budget_validation():
+    with pytest.raises(ValueError, match="Deadline"):
+        QuerySpec(deadline=5.0)
+    with pytest.raises(ValueError, match="EffortBudget"):
+        QuerySpec(budget=3)
+    with pytest.raises(ValueError, match="deadline"):
+        Deadline(ms=0)
+    with pytest.raises(ValueError, match="epochs or coord_ops"):
+        EffortBudget()
+    spec = QuerySpec(deadline=Deadline(ms=5.0))
+    assert not spec.cacheable          # partial answers must not cache
+    assert QuerySpec().cacheable
+
+
+# ---------------------------------------------------------------------------
+# autoscaling hints (satellite: ScalePolicy on synthetic load traces)
+# ---------------------------------------------------------------------------
+
+
+def _stats(queue=0, active=0, p95=None, replicas=1, shard_ops=None):
+    from repro.api import ServeStats
+    return ServeStats(replicas=replicas, shard_coord_ops=shard_ops,
+                      plane_queue_depth=queue, plane_active=active,
+                      plane_latency_p95_ms=p95)
+
+
+def test_scale_policy_scales_out_on_sustained_queue():
+    from repro.serve.scale import QueueDepthPolicy
+    pol = QueueDepthPolicy(high_queue=8, sustain=3, cooldown=2)
+    trace = [_stats(queue=q) for q in (12, 15, 11)]
+    decisions = [pol.recommend(s) for s in trace]
+    assert [d.action for d in decisions[:2]] == ["none", "none"]
+    assert decisions[2].action == "add_replicas" and decisions[2].value == 2
+    # cooldown holds, then a healthy queue resets the streak
+    assert pol.recommend(_stats(queue=20)).action == "none"
+    assert pol.recommend(_stats(queue=20)).action == "none"
+    assert pol.recommend(_stats(queue=0)).action == "none"
+
+
+def test_scale_policy_latency_slo_and_scale_in():
+    from repro.serve.scale import QueueDepthPolicy
+    pol = QueueDepthPolicy(high_queue=1000, p95_target_ms=50.0, sustain=2,
+                           cooldown=0)
+    assert pol.recommend(_stats(p95=80.0)).action == "none"
+    d = pol.recommend(_stats(p95=90.0))
+    assert d.action == "add_replicas" and d.value == 2
+    # idle trace at 2 replicas scales back in
+    pol2 = QueueDepthPolicy(sustain=2, cooldown=0)
+    assert pol2.recommend(_stats(replicas=2)).action == "none"
+    d2 = pol2.recommend(_stats(replicas=2))
+    assert d2.action == "add_replicas" and d2.value == 1
+
+
+def test_scale_policy_prefers_reshard_on_imbalance():
+    from repro.serve.scale import QueueDepthPolicy
+    pol = QueueDepthPolicy(high_queue=4, sustain=1, imbalance=2.0)
+    d = pol.recommend(_stats(queue=9, shard_ops=[100.0, 0.0]))
+    assert d.action == "reshard" and d.value == 4
+    pol2 = QueueDepthPolicy(high_queue=4, sustain=1, imbalance=2.0)
+    d2 = pol2.recommend(_stats(queue=9, shard_ops=[50.0, 50.0]))
+    assert d2.action == "add_replicas"

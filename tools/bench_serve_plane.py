@@ -1,0 +1,194 @@
+"""Open-loop load generator for the request plane (DESIGN.md §7.5).
+
+Poisson arrivals of query batches with mixed wall-clock deadlines are
+offered — at the SAME rate — to two serving disciplines over one index:
+
+  * **blocking baseline**: FIFO ``Index.query`` run-to-certification calls,
+    the pre-PR-5 serving surface. Under overload the queue grows and tail
+    latency explodes (one hard query gates everyone).
+  * **request plane**: ``RequestPlane.submit`` with per-request deadlines;
+    the scheduler coalesces concurrent tickets into shared race batches and
+    returns certified prefixes at expiry.
+
+Latency is measured finish − *intended arrival* (open loop: arrivals do not
+wait for the server), so queueing delay is charged honestly to both sides.
+Emits p50/p95/p99 + shed/deadline-exit rates as JSON (BENCH_serve_plane.json
+is the committed evidence; CI runs ``--smoke`` and uploads the artifact):
+
+    PYTHONPATH=src python tools/bench_serve_plane.py --smoke
+    PYTHONPATH=src python tools/bench_serve_plane.py \
+        --n 4096 --d 2048 --requests 40 --load 1.3 \
+        --out BENCH_serve_plane.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.api import Deadline, Index
+from repro.api.stream import percentile as _pct
+from repro.configs.base import BMOConfig
+from repro.data.synthetic import make_knn_benchmark_data
+from repro.serve.plane import PlaneConfig, RequestPlane
+
+
+def _summary(lat_ms):
+    if not lat_ms:       # e.g. --unbounded-frac 1.0 leaves no bounded class
+        return {"p50_ms": None, "p95_ms": None, "p99_ms": None,
+                "mean_ms": None, "n": 0}
+    return {"p50_ms": round(_pct(lat_ms, 50), 3),
+            "p95_ms": round(_pct(lat_ms, 95), 3),
+            "p99_ms": round(_pct(lat_ms, 99), 3),
+            "mean_ms": round(float(np.mean(lat_ms)), 3),
+            "n": len(lat_ms)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=2048)
+    ap.add_argument("--q", type=int, default=4, help="queries per request")
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--requests", type=int, default=60)
+    ap.add_argument("--load", type=float, default=3.0,
+                    help="offered load as a multiple of the blocking "
+                         "baseline's measured capacity (sustained "
+                         "overload: the FIFO baseline's tail grows with "
+                         "the backlog, the plane's deadline exits do not)")
+    ap.add_argument("--deadline-frac", type=float, default=0.5,
+                    help="per-request deadline as a fraction of the "
+                         "blocking baseline's mean service time")
+    ap.add_argument("--unbounded-frac", type=float, default=0.25,
+                    help="fraction of requests submitted WITHOUT a "
+                         "deadline (mixed traffic)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small preset for CI (<~2 min)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.n, args.d, args.requests = 1024, 1024, 20
+
+    t0 = time.perf_counter()
+    corpus, _ = make_knn_benchmark_data("dense", args.n, args.d, 2,
+                                        seed=args.seed)
+    cfg = BMOConfig(k=args.k, delta=0.05, block=min(128, args.d),
+                    batch_arms=32, metric="l2")
+    index = Index.build(corpus, cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(args.seed + 1)
+    reqs = [corpus[rng.integers(0, args.n, args.q)]
+            + 0.05 * rng.normal(size=(args.q, args.d)).astype(np.float32)
+            for _ in range(args.requests)]
+    reqs = [r.astype(np.float32) for r in reqs]
+
+    # -- measure the blocking baseline's service time (warm) ----------------
+    index.query(reqs[0], jax.random.PRNGKey(1), cache="bypass")   # compile
+    t = time.perf_counter()
+    for i in range(3):
+        index.query(reqs[i % len(reqs)], jax.random.PRNGKey(2 + i),
+                    cache="bypass")
+    t_service = (time.perf_counter() - t) / 3
+    lam = args.load / t_service                     # arrivals per second
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, args.requests))
+    deadline_ms = args.deadline_frac * t_service * 1e3
+    bounded = rng.random(args.requests) >= args.unbounded_frac
+    print(f"[bench_serve_plane] n={args.n} d={args.d} Q={args.q} "
+          f"k={args.k}: blocking service {t_service * 1e3:.1f} ms, "
+          f"offered load {args.load}x ({lam:.1f} req/s), "
+          f"deadline {deadline_ms:.1f} ms on {bounded.mean():.0%} of "
+          f"{args.requests} requests")
+
+    # -- blocking baseline: FIFO run-to-certification -----------------------
+    lat_base = []
+    now = 0.0
+    for i, r in enumerate(reqs):
+        start = max(now, arrivals[i])
+        t = time.perf_counter()
+        index.query(r, jax.random.PRNGKey(100 + i), cache="bypass")
+        now = start + (time.perf_counter() - t)
+        lat_base.append((now - arrivals[i]) * 1e3)
+
+    # -- request plane: open-loop submit + cooperative scheduler ------------
+    plane = RequestPlane(index, PlaneConfig(
+        max_group_queries=max(args.q * 8, 16)))
+    # warm the pow2 group-size specializations outside the timed window
+    for size in {args.q, 2 * args.q, 4 * args.q, 8 * args.q}:
+        warm = [plane.submit(reqs[0] + j, rng=jax.random.PRNGKey(7 + j),
+                             cache="bypass")
+                for j in range(max(1, size // args.q))]
+        plane.drain()
+        del warm
+    plane.query(reqs[0], rng=jax.random.PRNGKey(6), cache="bypass",
+                deadline=Deadline(ms=deadline_ms))
+
+    tickets = [None] * args.requests
+    start = time.monotonic()
+    i = 0
+    while i < args.requests or plane.active:
+        now = time.monotonic() - start
+        while i < args.requests and arrivals[i] <= now:
+            kw = ({"deadline": Deadline(ms=deadline_ms)} if bounded[i]
+                  else {})
+            tickets[i] = plane.submit(
+                reqs[i], rng=jax.random.PRNGKey(200 + i), cache="bypass",
+                **kw)
+            i += 1
+        if plane.active:
+            plane.step()
+        elif i < args.requests:
+            time.sleep(max(0.0, min(arrivals[i] - (time.monotonic() - start),
+                                    0.01)))
+    end_times = [(t_.finished_at - start) for t_ in tickets]
+    lat_plane = [(end_times[j] - arrivals[j]) * 1e3
+                 for j in range(args.requests)]
+    lat_plane_bounded = [lat_plane[j] for j in range(args.requests)
+                         if bounded[j]]
+    lat_base_bounded = [lat_base[j] for j in range(args.requests)
+                        if bounded[j]]
+    st = plane.stats
+
+    reasons = [t_.result.reason for t_ in tickets]
+    certified = [int(np.min(t_.result.certified_count)) for t_ in tickets]
+    out = {
+        "schema_version": 2,
+        "config": {"n": args.n, "d": args.d, "q": args.q, "k": args.k,
+                   "requests": args.requests, "load": args.load,
+                   "deadline_ms": round(deadline_ms, 3),
+                   "bounded_frac": round(float(bounded.mean()), 3),
+                   "service_ms": round(t_service * 1e3, 3),
+                   "smoke": bool(args.smoke)},
+        "baseline": {**_summary(lat_base),
+                     "bounded": _summary(lat_base_bounded)},
+        "plane": {**_summary(lat_plane),
+                  "bounded": _summary(lat_plane_bounded),
+                  "shed_rate": round(st.plane_shed
+                                     / max(st.plane_submitted, 1), 3),
+                  "deadline_exit_rate": round(
+                      reasons.count("deadline") / len(reasons), 3),
+                  "certified_rate": round(
+                      reasons.count("certified") / len(reasons), 3),
+                  "min_certified_prefix": int(np.min(certified)),
+                  "epochs": st.plane_epochs},
+        "speedup_p99_bounded": (
+            round(_pct(lat_base_bounded, 99)
+                  / max(_pct(lat_plane_bounded, 99), 1e-9), 2)
+            if lat_base_bounded and lat_plane_bounded else None),
+        "wall_s": round(time.perf_counter() - t0, 1),
+    }
+    print(json.dumps(out, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"[bench_serve_plane] wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()
