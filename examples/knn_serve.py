@@ -40,6 +40,10 @@ sys.path.insert(0, "src")
 _ap = argparse.ArgumentParser()
 _ap.add_argument("--shards", type=int, default=0,
                  help=">1: sharded-index walkthrough over this many devices")
+_ap.add_argument("--trace", default="", metavar="PATH",
+                 help="PR-6 obs walkthrough: dump the raw trace-event log "
+                      "here and a Perfetto-loadable Chrome trace next to it "
+                      "(PATH with a .perfetto.json suffix)")
 ARGS = _ap.parse_args()
 if ARGS.shards > 1 and "xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", ""):
@@ -188,6 +192,35 @@ def main():
           f" (epoch {late.epoch})")
     print(f"plane stats: "
           f"{ {k2: v for k2, v in engine.stats.as_dict().items() if k2.startswith('plane_')} }")
+
+    # -- PR-6: race-level tracing (DESIGN.md §8) ---------------------------
+    # Every ticket above recorded a full trace — submit → queue → admit →
+    # per-epoch pulls/frontier/CI → terminal — into the process obs
+    # context. --trace dumps it for offline reconstruction:
+    #   PYTHONPATH=src python examples/knn_serve.py --trace trace.json
+    #   PYTHONPATH=src python tools/trace_view.py trace.json   # text render
+    #   (open trace.perfetto.json in ui.perfetto.dev for the timeline)
+    if ARGS.trace:
+        from repro.obs import dump_events, get_obs
+        obs = get_obs()
+        dump_events(ARGS.trace, obs)
+        print(f"trace: {obs.events.total} events "
+              f"({obs.events.drops} dropped) -> {ARGS.trace}")
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "tools"))
+        import trace_view
+        chrome = ARGS.trace.rsplit(".json", 1)[0] + ".perfetto.json"
+        with open(chrome, "w") as f:
+            import json as _json
+            _json.dump(trace_view.to_chrome(trace_view.load_trace(
+                ARGS.trace)), f, indent=1)
+        print(f"trace: Perfetto timeline -> {chrome} "
+              f"(open in ui.perfetto.dev)")
+        demo = plane.stats
+        mean_ms = (demo.obs_epoch_ms["sum"]
+                   / max(demo.obs_epoch_ms["count"], 1))
+        print(f"obs: {demo.obs_events} events recorded, "
+              f"mean scheduler epoch {mean_ms:.2f} ms")
 
     print("note: at this smoke scale (d=64, n≈500) exact search is cheap; "
           "the bandit gain appears at the paper's d≈4k–28k regime "

@@ -435,7 +435,7 @@ class Index:
 
     def race(self, queries, rng=None, *, spec: Optional[QuerySpec] = None,
              raced_queries: Optional[int] = None, chunk_rounds: int = 0,
-             **overrides):
+             obs=None, sid=None, **overrides):
         """Epoch-granular resumable race — the anytime twin of ``query``
         (DESIGN.md §7.1). Returns a ``repro.index.anytime.RaceSession``:
         ``step()`` advances one epoch, ``snapshot`` is the partial top-k
@@ -445,7 +445,9 @@ class Index:
         (partial results must not poison the cache).
 
         ``raced_queries`` overrides the row count recorded in ``stats``
-        (the plane pads coalesced batches to powers of two)."""
+        (the plane pads coalesced batches to powers of two).
+        ``obs``/``sid`` select the observability context / trace id the
+        session's per-epoch spans record under (DESIGN.md §8.3)."""
         from repro.index.anytime import make_session
         if spec is None:
             spec = QuerySpec(**overrides)
@@ -465,7 +467,8 @@ class Index:
         session = make_session(
             self._route(), queries, rng, cfg=cfg, impl=spec.impl,
             eliminate=spec.eliminate, warm_start=spec.warm_start,
-            prior_hint=spec.prior_hint, chunk_rounds=chunk_rounds)
+            prior_hint=spec.prior_hint, chunk_rounds=chunk_rounds,
+            obs=obs, sid=sid)
         self._races += 1
         self._raced_queries += int(raced_queries if raced_queries is not None
                                    else session.Q)

@@ -32,7 +32,11 @@ CACHE_POLICIES = ("use", "bypass", "refresh")
 #: change so downstream JSON consumers (benchmarks, dashboards) can gate.
 #: v2 (PR 5): QuerySpec gained deadline/budget; ServeStats gained the
 #: request-plane queue/latency fields (DESIGN.md §7.4).
-SCHEMA_VERSION = 2
+#: v3 (PR 6): ServeStats gained the obs_* observability fields; the plane
+#: latency percentiles became plain floats (0.0 on an empty window, never
+#: None/NaN) so autoscaling policies can compare them unconditionally
+#: (DESIGN.md §8.6).
+SCHEMA_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,9 +168,15 @@ class ServeStats:
     plane_epochs: int = 0      # scheduler epochs run
     plane_queue_depth: int = 0      # tickets waiting for admission (now)
     plane_active: int = 0      # tickets racing (now)
-    plane_latency_p50_ms: Optional[float] = None   # terminal latency
-    plane_latency_p95_ms: Optional[float] = None
-    plane_latency_p99_ms: Optional[float] = None
+    # 0.0 (never None/NaN) when no terminal latency landed in the window yet
+    plane_latency_p50_ms: float = 0.0   # terminal latency percentiles
+    plane_latency_p95_ms: float = 0.0
+    plane_latency_p99_ms: float = 0.0
+    # -- observability (schema v3, DESIGN.md §8) ---------------------------
+    obs_events: int = 0        # trace events recorded (ring-buffer total)
+    obs_event_drops: int = 0   # events overwritten before export
+    obs_epoch_ms: Optional[dict] = None    # race-epoch histogram snapshot
+    obs_latency_ms: Optional[dict] = None  # ticket-latency histogram snap
 
     _LEGACY = {
         "knn_races": "races",

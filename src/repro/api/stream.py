@@ -114,6 +114,7 @@ class Ticket:
     finished_at: Optional[float] = None
     epochs: int = 0               # scheduler epochs consumed so far
     result: Optional[AnytimeResult] = None
+    trace_id: Optional[str] = None  # obs trace id (p<plane>.t<ticket>)
 
     @property
     def terminal(self) -> bool:

@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -48,6 +49,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import BMOConfig
+from repro.obs import get_obs, new_trace_id
+from repro.obs import profile as obs_profile
 from repro.core import confidence as conf
 from repro.core.ucb import INF
 from repro.index.batched_race import (BatchedRaceState, RoundsRaceFns,
@@ -352,18 +355,35 @@ def _merge_shard_partials(p: Partial) -> Partial:
 class RaceSession:
     """One resumable race batch. ``step()`` advances one epoch and refreshes
     ``snapshot``; ``retire(mask)`` freezes rows whose ticket left the plane
-    (deadline/budget) so the remaining rows get their pull budget."""
+    (deadline/budget) so the remaining rows get their pull budget.
+
+    The base ``step()`` owns the epoch boundary: it times the concrete
+    driver's ``_step_impl()``, then records — entirely host-side, from the
+    snapshot arrays the drivers already transferred — the epoch's pull /
+    coord-op deltas, frontier width, survivors, the CI radius of the worst
+    uncertified position, and (sharded) the per-shard straggler split, as a
+    ``race.epoch`` span under the session's ``sid`` trace id plus registry
+    metrics (DESIGN.md §8.3). Jitted code is untouched.
+    """
 
     kind = "base"
+    kernel = "fused_epoch_pull"   # device kernel this box's epochs launch
 
-    def __init__(self, Q: int, k: int):
+    def __init__(self, Q: int, k: int, *, obs=None, sid: Optional[str] = None):
         self.Q = Q
         self.k = k
         self.epochs = 0
+        self.obs = obs if obs is not None else get_obs()
+        self.sid = sid if sid is not None else new_trace_id("s")
+        self.last_epoch: Optional[dict] = None
         self.shard_coord_ops: Optional[np.ndarray] = None
         self.shard_rounds: Optional[np.ndarray] = None
         self._snap: Optional[Partial] = None
         self._retired = np.zeros((Q,), bool)
+        self._prev_coord_ops: Optional[float] = None
+        self._prev_rounds = 0
+        self._prev_shard_coord_ops: Optional[np.ndarray] = None
+        self._prev_shard_rounds: Optional[np.ndarray] = None
 
     @property
     def snapshot(self) -> Partial:
@@ -384,6 +404,78 @@ class RaceSession:
         self._apply_force_done(jnp.asarray(self._retired))
 
     def step(self) -> bool:
+        if self.done.all() or self._rounds_spent >= self._max_rounds:
+            return False
+        if self._prev_coord_ops is None:     # baseline excludes init pulls
+            self._prev_coord_ops = float(np.sum(self._snap.coord_ops))
+            self._prev_rounds = int(np.max(self._snap.rounds, initial=0))
+            if self.shard_coord_ops is not None:
+                self._prev_shard_coord_ops = np.array(self.shard_coord_ops,
+                                                      float)
+                self._prev_shard_rounds = np.array(self.shard_rounds, float)
+        t0 = time.perf_counter()
+        with obs_profile.annotate(f"repro.race.epoch.{self.kind}"):
+            alive = self._step_impl()
+        self._record_epoch(t0, time.perf_counter() - t0)
+        return alive
+
+    def _record_epoch(self, t0: float, dur: float) -> None:
+        snap = self._snap
+        coord = float(np.sum(snap.coord_ops))
+        rounds = int(np.max(snap.rounds, initial=0))
+        d_coord = max(coord - self._prev_coord_ops, 0.0)
+        d_rounds = max(rounds - self._prev_rounds, 0)
+        self._prev_coord_ops, self._prev_rounds = coord, rounds
+        finite_ci = np.where(np.isfinite(snap.ci), snap.ci, 0.0)
+        info = {
+            "epoch": self.epochs,
+            "kind": self.kind,
+            "coord_ops": d_coord,
+            "rounds": d_rounds,
+            "worst_ci": float(finite_ci.max(initial=0.0)),
+            "active": int(np.sum(~self.done)),
+            "done": int(np.sum(self.done)),
+        }
+        info.update(self._epoch_extra())
+        if self.shard_coord_ops is not None:
+            cur_c = np.asarray(self.shard_coord_ops, float)
+            cur_r = np.asarray(self.shard_rounds, float)
+            prev_c = (self._prev_shard_coord_ops
+                      if self._prev_shard_coord_ops is not None
+                      else np.zeros_like(cur_c))
+            prev_r = (self._prev_shard_rounds
+                      if self._prev_shard_rounds is not None
+                      else np.zeros_like(cur_r))
+            info["shard_coord_ops"] = [float(v) for v in cur_c - prev_c]
+            info["shard_rounds"] = [float(v) for v in cur_r - prev_r]
+            self._prev_shard_coord_ops = cur_c
+            self._prev_shard_rounds = cur_r
+        self.last_epoch = info
+        reg = self.obs.registry
+        reg.counter("repro_race_epochs_total",
+                    "race epochs stepped", kind=self.kind).inc()
+        reg.counter("repro_race_coord_ops_total",
+                    "coordinate reads paid by race epochs",
+                    kind=self.kind).inc(d_coord)
+        reg.histogram("repro_race_epoch_ms",
+                      "wall time of one race epoch (ms)",
+                      kind=self.kind).observe(dur * 1e3)
+        obs_profile.record_kernel_launch(
+            self.obs, self.kernel,
+            launches=self._epoch_launches(d_rounds),
+            coord_ops=d_coord, pulls=float(d_rounds))
+        self.obs.tracer.complete("race.epoch", t0, dur, trace=self.sid,
+                                 dur_ms=dur * 1e3, **info)
+
+    def _epoch_extra(self) -> dict:
+        """Per-box epoch attributes (frontier width, survivors, R)."""
+        return {}
+
+    def _epoch_launches(self, d_rounds: int) -> int:
+        """Device programs this epoch issued (per-launch accounting)."""
+        return 1
+
+    def _step_impl(self) -> bool:
         raise NotImplementedError
 
     def _apply_force_done(self, mask) -> None:
@@ -399,10 +491,11 @@ class FusedSession(RaceSession):
 
     def __init__(self, store, queries, rng, *, cfg: BMOConfig,
                  impl: str = "auto", eliminate: bool = True,
-                 prior=None, prior_weight: float = 0.0):
+                 prior=None, prior_weight: float = 0.0,
+                 obs=None, sid: Optional[str] = None):
         x, qs = store.x, store.prepare_queries(queries)
         n = x.shape[0]
-        super().__init__(qs.shape[0], cfg.k)
+        super().__init__(qs.shape[0], cfg.k, obs=obs, sid=sid)
         nb = x.shape[1] // store.block
         B0 = min(cfg.batch_arms, n)
         P_ = cfg.pulls_per_round
@@ -424,6 +517,7 @@ class FusedSession(RaceSession):
             impl=impl, prior_weight=prior_weight)
         self._W0 = st.width
         self._rounds_spent = 0
+        self._last_R = 0
         self._n_surv = np.full((self.Q,), n)
         self._refresh(st)
 
@@ -437,9 +531,12 @@ class FusedSession(RaceSession):
         self._st = _force_done(self._st, mask)
         self._n_surv = np.where(np.asarray(self._retired), 0, self._n_surv)
 
-    def step(self) -> bool:
-        if self.done.all() or self._rounds_spent >= self._max_rounds:
-            return False
+    def _epoch_extra(self) -> dict:
+        return {"width": int(self._st.width),
+                "n_surv": int(self._n_surv.max(initial=0)),
+                "R": self._last_R}
+
+    def _step_impl(self) -> bool:
         need = int(self._n_surv[~self.done].max(initial=1))
         # halve the buffer at most once per epoch (unlike the blocking
         # driver's jump-to-cover): every session then walks the SAME
@@ -458,6 +555,7 @@ class FusedSession(RaceSession):
             eliminate=self._eliminate, prior_weight=self._prior_weight,
             log_term=self._log_term, T=R * self._cfg.pulls_per_round)
         self._rounds_spent += R
+        self._last_R = R
         self._n_surv = np.asarray(n_surv)
         self.epochs += 1
         self._refresh(st)
@@ -469,12 +567,14 @@ class SparseRoundsSession(RaceSession):
     chunks (one chunk = one scheduler epoch)."""
 
     kind = "sparse"
+    kernel = "block_pull_multi"
 
     def __init__(self, store, queries, rng, *, cfg: BMOConfig,
                  eliminate: bool = True, prior=None,
-                 prior_weight: float = 0.0, chunk_rounds: int = 0):
+                 prior_weight: float = 0.0, chunk_rounds: int = 0,
+                 obs=None, sid: Optional[str] = None):
         q_idx, q_val, q_nnz = (jnp.asarray(a) for a in queries)
-        super().__init__(q_idx.shape[0], cfg.k)
+        super().__init__(q_idx.shape[0], cfg.k, obs=obs, sid=sid)
         self._args = (store.indices, store.values, store.nnz, store.alive,
                       store.prior_var if prior is None
                       else jnp.asarray(prior, jnp.float32),
@@ -496,9 +596,14 @@ class SparseRoundsSession(RaceSession):
     def _apply_force_done(self, mask) -> None:
         self._st = _force_done(self._st, mask)
 
-    def step(self) -> bool:
-        if self.done.all() or self._rounds_spent >= self._max_rounds:
-            return False
+    def _epoch_extra(self) -> dict:
+        return {"R": self._chunk}
+
+    def _epoch_launches(self, d_rounds: int) -> int:
+        # the chunked while-loop issues one block_pull_multi per round
+        return max(int(d_rounds), 1)
+
+    def _step_impl(self) -> bool:
         self._st, summ = _sparse_sess_chunk(
             *self._args, self._st, cfg=self._cfg, d=self._d,
             eliminate=self._eliminate, prior_weight=self._prior_weight,
@@ -519,9 +624,10 @@ class ShardedFusedSession(RaceSession):
 
     def __init__(self, store: ShardedIndexStore, queries, rng, *,
                  cfg: BMOConfig, impl: str = "auto", eliminate: bool = True,
-                 prior_st=None, prior_weight: float = 0.0):
+                 prior_st=None, prior_weight: float = 0.0,
+                 obs=None, sid: Optional[str] = None):
         qs = store.prepare_queries(queries)
-        super().__init__(qs.shape[0], cfg.k)
+        super().__init__(qs.shape[0], cfg.k, obs=obs, sid=sid)
         self._store, self._qs, self._cfg = store, qs, cfg
         self._S, self._stride, self._mesh = (store.n_shards, store.stride,
                                              store.mesh)
@@ -549,6 +655,7 @@ class ShardedFusedSession(RaceSession):
             self._x_st, qs, alive_st, prior_st, rng)
         self._W0 = st.ids.shape[2]
         self._rounds_spent = 0
+        self._last_R = 0
         self._n_surv = np.full((self._S, self.Q), self._stride)
         self._refresh(st)
 
@@ -567,9 +674,15 @@ class ShardedFusedSession(RaceSession):
         self._n_surv = np.where(np.asarray(self._retired)[None], 0,
                                 self._n_surv)
 
-    def step(self) -> bool:
-        if self.done.all() or self._rounds_spent >= self._max_rounds:
-            return False
+    def _epoch_extra(self) -> dict:
+        return {"width": int(self._st.ids.shape[2]),
+                "n_surv": int(self._n_surv.max(initial=0)),
+                "R": self._last_R, "shards": self._S}
+
+    def _epoch_launches(self, d_rounds: int) -> int:
+        return self._S      # one shard-local program per mesh device
+
+    def _step_impl(self) -> bool:
         active_q = ~self.done
         need = int(self._n_surv[:, active_q].max(initial=1))
         # at-most-halving schedule — see FusedSession.step
@@ -588,6 +701,7 @@ class ShardedFusedSession(RaceSession):
             R * self._cfg.pulls_per_round)(self._x_st, self._qs, self._st,
                                            self._pool)
         self._rounds_spent += R
+        self._last_R = R
         self._n_surv = np.asarray(n_surv)
         self.epochs += 1
         self._refresh(st)
@@ -599,12 +713,14 @@ class ShardedSparseSession(RaceSession):
     ``shard_map`` (each chunk one collective program), merged per snapshot."""
 
     kind = "sharded_sparse"
+    kernel = "block_pull_multi"
 
     def __init__(self, store: ShardedIndexStore, queries, rng, *,
                  cfg: BMOConfig, eliminate: bool = True, prior_st=None,
-                 prior_weight: float = 0.0, chunk_rounds: int = 0):
+                 prior_weight: float = 0.0, chunk_rounds: int = 0,
+                 obs=None, sid: Optional[str] = None):
         q_idx, q_val, q_nnz = (jnp.asarray(a) for a in queries)
-        super().__init__(q_idx.shape[0], cfg.k)
+        super().__init__(q_idx.shape[0], cfg.k, obs=obs, sid=sid)
         cfg = _shard_delta(cfg, store.n_shards)
         self._cfg, self._d = cfg, store.d
         self._S, self._stride, self._mesh = (store.n_shards, store.stride,
@@ -639,9 +755,13 @@ class ShardedSparseSession(RaceSession):
     def _apply_force_done(self, mask) -> None:
         self._st = _force_done(self._st, mask)
 
-    def step(self) -> bool:
-        if self.done.all() or self._rounds_spent >= self._max_rounds:
-            return False
+    def _epoch_extra(self) -> dict:
+        return {"R": self._chunk, "shards": self._S}
+
+    def _epoch_launches(self, d_rounds: int) -> int:
+        return max(int(d_rounds), 1) * self._S
+
+    def _step_impl(self) -> bool:
         self._st, summ = _sharded_sparse_chunk_fn(
             self._mesh, self._cfg, self._d, self._eliminate,
             self._prior_weight, self._stride, self._chunk)(
@@ -660,9 +780,12 @@ class ShardedSparseSession(RaceSession):
 def make_session(store, queries, rng, *, cfg: Optional[BMOConfig] = None,
                  impl: str = "auto", eliminate: bool = True,
                  warm_start: bool = True, prior_hint=None,
-                 chunk_rounds: int = 0) -> RaceSession:
+                 chunk_rounds: int = 0, obs=None,
+                 sid: Optional[str] = None) -> RaceSession:
     """Build the right resumable session for ``store``'s box and layout —
-    the anytime twin of ``index_knn`` (same priors, same δ accounting)."""
+    the anytime twin of ``index_knn`` (same priors, same δ accounting).
+    ``obs``/``sid`` select the observability context and trace id the
+    session records epoch spans under (default: process obs, fresh id)."""
     cfg = cfg if cfg is not None else store.cfg
     if cfg.k > store.n_live:
         raise ValueError(
@@ -682,15 +805,17 @@ def make_session(store, queries, rng, *, cfg: Optional[BMOConfig] = None,
         if store.kind == "sparse":
             return ShardedSparseSession(
                 store, queries, rng, cfg=cfg, eliminate=eliminate,
-                prior_st=prior_st, prior_weight=w, chunk_rounds=chunk_rounds)
+                prior_st=prior_st, prior_weight=w, chunk_rounds=chunk_rounds,
+                obs=obs, sid=sid)
         return ShardedFusedSession(
             store, queries, rng, cfg=cfg, impl=impl, eliminate=eliminate,
-            prior_st=prior_st, prior_weight=w)
+            prior_st=prior_st, prior_weight=w, obs=obs, sid=sid)
     prior = None if prior_hint is None else jnp.asarray(prior_hint,
                                                         jnp.float32)
     if store.kind == "sparse":
         return SparseRoundsSession(
             store, queries, rng, cfg=cfg, eliminate=eliminate, prior=prior,
-            prior_weight=w, chunk_rounds=chunk_rounds)
+            prior_weight=w, chunk_rounds=chunk_rounds, obs=obs, sid=sid)
     return FusedSession(store, queries, rng, cfg=cfg, impl=impl,
-                        eliminate=eliminate, prior=prior, prior_weight=w)
+                        eliminate=eliminate, prior=prior, prior_weight=w,
+                        obs=obs, sid=sid)

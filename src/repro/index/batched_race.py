@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -45,6 +46,8 @@ from repro.core.bmo_nn import KNNResult, sparse_exact_theta, sparse_pull_one
 from repro.core.datasets import SparseDataset
 from repro.core.ucb import (INF, acceptance_step, acceptance_step_masked,
                             topk_from_state, topk_from_state_masked)
+from repro.obs import get_obs
+from repro.obs import profile as obs_profile
 from repro.index.frontier import (FrontierState, bucket_width,
                                   compact_frontier, survivors)
 from repro.kernels import ops as kops
@@ -343,8 +346,9 @@ def _fused_init(x, qs, alive, prior_var, rng, *, cfg: BMOConfig, block: int,
     rng, sub = jax.random.split(rng)
     all_arms = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (Q, n))
     blk = jax.random.randint(sub, (Q, n, T0), 0, nb)
-    stats = kops.fused_epoch_pull(x, qs, all_arms, blk, block=block,
-                                  metric=cfg.metric, impl=impl)
+    with jax.named_scope("repro.fused_epoch_pull"):
+        stats = kops.fused_epoch_pull(x, qs, all_arms, blk, block=block,
+                                      metric=cfg.metric, impl=impl)
     zeros = jnp.zeros((Q, n), jnp.float32)
     mask = jnp.broadcast_to(alive_f[None], (Q, n))
     mean, count, m2 = conf.welford_merge(
@@ -398,8 +402,9 @@ def _fused_epoch_step(x, qs, st: FrontierState, prior_pool, *,
     # ---- one fused launch: T pulls per selected arm, reduced on-chip -----
     rng, sub = jax.random.split(st.rng)
     blk = jax.random.randint(sub, (Q, B, T), 0, nb)
-    stats = kops.fused_epoch_pull(x, qs, slot_safe, blk, block=block,
-                                  metric=cfg.metric, impl=impl)
+    with jax.named_scope("repro.fused_epoch_pull"):
+        stats = kops.fused_epoch_pull(x, qs, slot_safe, blk, block=block,
+                                      metric=cfg.metric, impl=impl)
     cm = jnp.take_along_axis(st.mean, sel, axis=1)
     cc = jnp.take_along_axis(st.count, sel, axis=1)
     c2 = jnp.take_along_axis(st.m2, sel, axis=1)
@@ -507,6 +512,8 @@ def fused_race_topk(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
     rounds_spent = 0
     n_surv = np.full((Q,), n)
     done = np.zeros((Q,), bool)
+    obs = get_obs()
+    prev_coord = float(np.sum(np.asarray(st.coord_ops)))
     while not done.all() and rounds_spent < max_rounds:
         # adaptive reallocation (Neufeld et al. style): as the candidate
         # frontier shrinks by c×, fuse c× more rounds into the next launch —
@@ -519,13 +526,25 @@ def fused_race_topk(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
             if W_new < st.width:
                 st = compact_frontier(st, W_new=W_new)
         R = min(R0 * max(1, W0 // max(need, 1)), R_cap)
-        st, n_surv_d, done_d = _fused_epoch_step(
-            x, qs, st, prior_pool, cfg=cfg, block=block, d=d, impl=impl,
-            eliminate=eliminate, prior_weight=prior_weight,
-            log_term=log_term, T=R * P)
-        rounds_spent += R
-        n_surv = np.asarray(n_surv_d)
-        done = np.asarray(done_d)
+        t0 = time.perf_counter()
+        with obs_profile.annotate("repro.race.epoch.fused_blocking"):
+            st, n_surv_d, done_d = _fused_epoch_step(
+                x, qs, st, prior_pool, cfg=cfg, block=block, d=d, impl=impl,
+                eliminate=eliminate, prior_weight=prior_weight,
+                log_term=log_term, T=R * P)
+            rounds_spent += R
+            n_surv = np.asarray(n_surv_d)
+            done = np.asarray(done_d)
+        # n_surv/done already crossed to host, so the per-launch accounting
+        # adds no extra device round-trip beyond the coord-op scalar
+        coord = float(np.sum(np.asarray(st.coord_ops)))
+        obs.registry.histogram(
+            "repro_race_epoch_ms", "wall time of one race epoch (ms)",
+            kind="fused_blocking").observe((time.perf_counter() - t0) * 1e3)
+        obs_profile.record_kernel_launch(
+            obs, "fused_epoch_pull", launches=1,
+            coord_ops=max(coord - prev_coord, 0.0), pulls=float(R))
+        prev_coord = coord
 
     topk, topk_vals, n_exact = _fused_finalize(
         st, prior_pool, cfg=cfg, log_term=log_term, prior_weight=prior_weight)
@@ -552,8 +571,9 @@ def _dense_index_knn(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
 
     def pull(sel, key):
         blk = jax.random.randint(key, sel.shape + (cfg.pulls_per_round,), 0, nb)
-        return kops.block_pull_multi(x, qs, sel, blk, block=block,
-                                     metric=cfg.metric, impl=impl)
+        with jax.named_scope("repro.block_pull_multi"):
+            return kops.block_pull_multi(x, qs, sel, blk, block=block,
+                                         metric=cfg.metric, impl=impl)
 
     def exact(sel):
         return _dense_exact_theta(x, qs, sel, cfg.metric, d)

@@ -61,6 +61,12 @@ def main(argv=None):
     ap.add_argument("--autoscale-apply", action="store_true",
                     help="actually apply an add_replicas recommendation "
                          "to the live handle (reshard stays advisory)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="write the obs metrics registry here on exit "
+                         "(.json = JSON snapshot, else Prometheus text)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the raw trace-event dump here on exit "
+                         "(render/convert with tools/trace_view.py)")
     args = ap.parse_args(argv)
 
     entry = get_arch(args.arch)
@@ -149,6 +155,16 @@ def main(argv=None):
                 engine.index.add_replicas(decision.value)
                 log.info("applied: read fan-out now %d replicas",
                          engine.stats.replicas)
+    if args.metrics_dump or args.trace:
+        from repro.obs import dump_events, dump_metrics, get_obs
+        obs = get_obs()
+        if args.metrics_dump:
+            dump_metrics(args.metrics_dump, obs)
+            log.info("metrics dumped to %s", args.metrics_dump)
+        if args.trace:
+            dump_events(args.trace, obs)
+            log.info("trace dumped to %s (%d events, %d dropped)",
+                     args.trace, obs.events.total, obs.events.drops)
     print(out[:, :16])
 
 

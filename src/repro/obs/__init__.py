@@ -1,0 +1,79 @@
+"""repro.obs — first-class observability for the serving stack
+(DESIGN.md §8).
+
+One ``ObsContext`` bundles the three primitives every layer records into:
+
+  * ``registry`` — the metrics registry (counters / gauges / histograms),
+    the single source of truth behind ``ServeStats`` and the
+    ``serve/scale.py`` policies;
+  * ``events``   — the bounded ring-buffer event log;
+  * ``tracer``   — race-level trace spans over that log (per-ticket trace
+    ids propagated submit → queue → admit → each race epoch → terminal).
+
+``get_obs()`` returns the process-default context (what the launchers
+export); tests and embedders can pass their own ``ObsContext`` to
+``RequestPlane`` / ``make_session`` for isolation. ``REPRO_OBS=0``
+disables event/span recording process-wide (metrics counters stay on —
+``ServeStats`` must keep working); ``REPRO_OBS_EVENTS`` sizes the default
+ring.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.obs.export import (dump_events, dump_metrics, events_doc,
+                              json_snapshot, prometheus_text)
+from repro.obs.registry import (DEFAULT_MS_BUCKETS, Counter, EventLog,
+                                Gauge, Histogram, MetricsRegistry)
+from repro.obs.trace import NULL_SPAN, Span, Tracer, new_trace_id
+
+__all__ = [
+    "Counter", "DEFAULT_MS_BUCKETS", "EventLog", "Gauge", "Histogram",
+    "MetricsRegistry", "NULL_SPAN", "ObsContext", "Span", "Tracer",
+    "dump_events", "dump_metrics", "events_doc", "get_obs",
+    "json_snapshot", "new_trace_id", "prometheus_text", "reset_obs",
+    "set_obs",
+]
+
+
+class ObsContext:
+    """One observability namespace: registry + event log + tracer."""
+
+    def __init__(self, name: str = "default", *,
+                 event_capacity: int = 16384,
+                 enabled: Optional[bool] = None):
+        if enabled is None:
+            enabled = os.environ.get("REPRO_OBS", "1") != "0"
+        self.name = name
+        self.enabled = enabled
+        self.registry = MetricsRegistry()
+        self.events = EventLog(event_capacity)
+        self.tracer = Tracer(self.events, enabled=enabled)
+
+
+_default: Optional[ObsContext] = None
+
+
+def get_obs() -> ObsContext:
+    """The process-default context (created lazily; honours ``REPRO_OBS``)."""
+    global _default
+    if _default is None:
+        cap = int(os.environ.get("REPRO_OBS_EVENTS", "16384"))
+        _default = ObsContext("default", event_capacity=cap)
+    return _default
+
+
+def set_obs(ctx: ObsContext) -> ObsContext:
+    """Install ``ctx`` as the process default; returns the previous one."""
+    global _default
+    old = get_obs()
+    _default = ctx
+    return old
+
+
+def reset_obs() -> ObsContext:
+    """Fresh default context (test isolation)."""
+    global _default
+    _default = None
+    return get_obs()

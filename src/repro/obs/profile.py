@@ -1,0 +1,61 @@
+"""Kernel profiling hooks (DESIGN.md §8.5): attribute bench time to
+kernel vs host merge vs scheduler.
+
+Two annotation layers, chosen by where the code runs:
+
+  * ``named_scope(name)`` — INSIDE jitted code: names the HLO ops it wraps
+    (``jax.named_scope``), so a ``jax.profiler`` device trace shows
+    ``repro.fused_epoch_pull`` / ``repro.block_pull_multi`` as first-class
+    slices instead of anonymous fusions. Zero runtime cost (trace-time
+    only).
+  * ``annotate(name)`` — HOST-side epoch loops: a
+    ``jax.profiler.TraceAnnotation`` visible on the Python thread track of
+    a Perfetto capture, gated to a null context when the profiler API is
+    unavailable.
+
+Per-launch coord-op accounting is host-side (jitted code is untouched):
+the epoch drivers know exactly how many kernel launches an epoch issued
+and what each cost, and fold that into the registry via
+``record_kernel_launch`` at the epoch boundary.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+named_scope = jax.named_scope
+
+try:
+    _TraceAnnotation = jax.profiler.TraceAnnotation
+except AttributeError:                        # pragma: no cover - old jax
+    _TraceAnnotation = None
+
+
+def annotate(name: str):
+    """Host-side profiler annotation (null context without the API)."""
+    if _TraceAnnotation is None:              # pragma: no cover - old jax
+        return contextlib.nullcontext()
+    return _TraceAnnotation(name)
+
+
+def record_kernel_launch(obs, kernel: str, *, launches: int,
+                         coord_ops: float, pulls: float = 0.0) -> None:
+    """Fold one epoch's kernel-launch accounting into the registry:
+    ``launches`` device programs of ``kernel`` paying ``coord_ops``
+    coordinate reads total (``pulls`` block-pulls, when known)."""
+    if not obs.enabled or launches <= 0:
+        return
+    obs.registry.counter(
+        "repro_kernel_launches_total",
+        "device kernel launches issued by the racing drivers",
+        kernel=kernel).inc(launches)
+    obs.registry.counter(
+        "repro_kernel_coord_ops_total",
+        "coordinate reads paid inside kernel launches",
+        kernel=kernel).inc(max(coord_ops, 0.0))
+    if pulls:
+        obs.registry.counter(
+            "repro_kernel_pulls_total",
+            "block pulls executed inside kernel launches",
+            kernel=kernel).inc(max(pulls, 0.0))

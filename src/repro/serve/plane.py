@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import time
 from typing import Dict, Iterator, List, Optional, Tuple
 
@@ -48,11 +49,16 @@ from repro.api.stream import (DONE, QUEUED, R_BUDGET, R_CERTIFIED,
                               R_DEADLINE, R_SHED, RACING, SHED,
                               AnytimeResult, Ticket, percentile)
 from repro.core.datasets import next_pow2
+from repro.obs import get_obs
 from repro.utils import get_logger
 
 log = get_logger("repro.serve.plane")
 
 ON_MUTATION = ("complete", "readmit")
+
+#: monotone plane sequence — the ``plane="pN"`` metric label and trace-id
+#: prefix that keep multiple planes apart in one shared obs context
+_plane_seq = itertools.count()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +86,9 @@ class PlaneConfig:
         if self.on_mutation not in ON_MUTATION:
             raise ValueError(f"unknown on_mutation {self.on_mutation!r} "
                              f"(want one of {ON_MUTATION})")
+        if self.latency_window < 1:
+            raise ValueError("latency_window must be >= 1, got "
+                             f"{self.latency_window}")
 
 
 class _Member(object):
@@ -113,6 +122,7 @@ class _Entry(object):
         self.coord_ops = np.zeros((Q,), np.float64)
         self.rounds = np.zeros((Q,), np.int64)
         self.epoch = 0                # store epoch the result is valid for
+        self.queue_span = None        # open plane.queue span (obs tracer)
 
     @property
     def miss_rows(self) -> List[int]:
@@ -132,9 +142,12 @@ class _Group(object):
 class RequestPlane:
     """The async request plane over one ``repro.api.Index`` handle."""
 
-    def __init__(self, index: Index, config: Optional[PlaneConfig] = None):
+    def __init__(self, index: Index, config: Optional[PlaneConfig] = None,
+                 *, obs=None):
         self.index = index
         self.config = config if config is not None else PlaneConfig()
+        self.obs = obs if obs is not None else get_obs()
+        self.plane_id = f"p{next(_plane_seq)}"
         self._queues: "collections.OrderedDict[str, collections.deque]" = \
             collections.OrderedDict()
         self._groups: List[_Group] = []
@@ -142,14 +155,43 @@ class RequestPlane:
         self._entries: Dict[int, _Entry] = {}
         self._latencies: collections.deque = collections.deque(
             maxlen=self.config.latency_window)
-        self._submitted = 0
-        self._admitted = 0
-        self._completed = 0
-        self._shed = 0
-        self._deadline_exits = 0
-        self._budget_exits = 0
-        self._readmitted = 0
-        self._epochs = 0
+        # the metrics registry is the single source of truth for the plane
+        # counters (DESIGN.md §8.2): ``stats`` and the exporters read the
+        # SAME series, so they can never disagree
+        reg = self.obs.registry
+        lbl = {"plane": self.plane_id}
+        self._submitted = reg.counter(
+            "repro_plane_submitted_total", "tickets submitted", **lbl)
+        self._admitted = reg.counter(
+            "repro_plane_admitted_total",
+            "tickets admitted into a race group", **lbl)
+        self._completed = reg.counter(
+            "repro_plane_completed_total",
+            "tickets finished (any terminal reason)", **lbl)
+        self._shed = reg.counter(
+            "repro_plane_shed_total",
+            "tickets shed at admission (backpressure)", **lbl)
+        self._deadline_exits = reg.counter(
+            "repro_plane_deadline_exits_total",
+            "tickets terminated at the wall-clock deadline", **lbl)
+        self._budget_exits = reg.counter(
+            "repro_plane_budget_exits_total",
+            "tickets terminated at the effort budget", **lbl)
+        self._readmitted = reg.counter(
+            "repro_plane_readmitted_total",
+            "tickets re-raced after a mutation fence", **lbl)
+        self._epochs = reg.counter(
+            "repro_plane_epochs_total", "scheduler epochs run", **lbl)
+        self._g_queue = reg.gauge(
+            "repro_plane_queue_depth", "tickets waiting for admission",
+            **lbl)
+        self._g_active = reg.gauge(
+            "repro_plane_active", "tickets currently racing", **lbl)
+        self._h_latency = reg.histogram(
+            "repro_plane_latency_ms", "terminal ticket latency (ms)", **lbl)
+        self._h_epoch = reg.histogram(
+            "repro_plane_epoch_ms", "wall time of one scheduler epoch (ms)",
+            **lbl)
 
     # -- admission -----------------------------------------------------------
 
@@ -192,9 +234,13 @@ class RequestPlane:
             Q = queries.shape[0]
         now = time.monotonic()
         ticket = Ticket(id=self._next_id, tenant=tenant, n_queries=Q,
-                        spec=spec, submitted_at=now)
+                        spec=spec, submitted_at=now,
+                        trace_id=f"{self.plane_id}.t{self._next_id}")
         self._next_id += 1
-        self._submitted += 1
+        self._submitted.inc()
+        tracer = self.obs.tracer
+        tracer.instant("plane.submit", trace=ticket.trace_id,
+                       tenant=tenant, n_queries=Q)
         entry = _Entry(ticket, queries, rng, spec, is_sparse)
         self._entries[ticket.id] = entry
 
@@ -205,13 +251,17 @@ class RequestPlane:
             self._finish(entry, R_CERTIFIED)   # free, never needs a slot
             return ticket
         if len(q) >= self.config.max_queue:
-            self._shed += 1
+            self._shed.inc()
             ticket.status = SHED
             ticket.reason = "queue_full"
             ticket.finished_at = now
             ticket.result = self._empty_result(entry, R_SHED)
             self._entries.pop(ticket.id, None)
+            tracer.instant("plane.shed", trace=ticket.trace_id,
+                           reason="queue_full", tenant=tenant)
             return ticket
+        entry.queue_span = tracer.start("plane.queue",
+                                        trace=ticket.trace_id, tenant=tenant)
         q.append(entry)
         return ticket
 
@@ -398,18 +448,27 @@ class RequestPlane:
         try:
             session = self.index.race(batch, rng, spec=spec,
                                       raced_queries=offset,
-                                      chunk_rounds=self.config.chunk_rounds)
+                                      chunk_rounds=self.config.chunk_rounds,
+                                      obs=self.obs)
         except Exception as e:  # noqa: BLE001 — never orphan the bucket
-            log.warning("race launch rejected (%s): shedding %d ticket(s)",
-                        e, len(entries))
+            log.bind(plane=self.plane_id,
+                     traces=",".join(e_.ticket.trace_id or ""
+                                     for e_ in entries)).warning(
+                "race launch rejected (%s): shedding %d ticket(s)",
+                e, len(entries))
             for entry in entries:
-                self._shed += 1
+                self._shed.inc()
                 t = entry.ticket
                 t.status = SHED
                 t.reason = f"rejected: {e}"
                 t.finished_at = time.monotonic()
                 t.result = self._empty_result(entry, R_SHED)
                 self._entries.pop(t.id, None)
+                if entry.queue_span is not None:
+                    entry.queue_span.end(outcome="shed")
+                    entry.queue_span = None
+                self.obs.tracer.instant("plane.shed", trace=t.trace_id,
+                                        reason=t.reason)
             return
         if pad:
             # pow2 pad rows belong to no ticket: retire them immediately so
@@ -417,14 +476,23 @@ class RequestPlane:
             session.retire(np.arange(session.Q) >= offset)
         group = _Group(session, members, self.index.epoch)
         for member in members:
-            member.entry.group = group
-            member.entry.member = member
-            member.entry.epoch = group.store_epoch
-            t = member.entry.ticket
+            entry = member.entry
+            entry.group = group
+            entry.member = member
+            entry.epoch = group.store_epoch
+            t = entry.ticket
             t.status = RACING
             if t.admitted_at is None:
                 t.admitted_at = now
-                self._admitted += 1
+                self._admitted.inc()
+            if entry.queue_span is not None:
+                entry.queue_span.end(session=session.sid)
+                entry.queue_span = None
+            # the admit instant is the ticket ↔ session JOIN KEY: the
+            # session's race.epoch spans record under session.sid
+            self.obs.tracer.instant(
+                "plane.admit", trace=t.trace_id, session=session.sid,
+                rows=len(member.rows), store_epoch=group.store_epoch)
         self._groups.append(group)
 
     def _fence_groups(self) -> None:
@@ -450,12 +518,18 @@ class RequestPlane:
                 entry.cached_rows.clear()
                 entry.group = entry.member = None
                 entry.ticket.status = QUEUED
-                self._readmitted += 1
+                self._readmitted.inc()
+                self.obs.tracer.instant(
+                    "plane.readmit", trace=entry.ticket.trace_id,
+                    from_epoch=group.store_epoch, to_epoch=epoch)
                 self._consult_cache(entry)
                 if not entry.miss_rows:
                     entry.epoch = epoch
                     self._finish(entry, R_CERTIFIED)
                     continue
+                entry.queue_span = self.obs.tracer.start(
+                    "plane.queue", trace=entry.ticket.trace_id,
+                    tenant=entry.ticket.tenant, readmit=True)
                 self._queues.setdefault(
                     entry.ticket.tenant,
                     collections.deque()).appendleft(entry)
@@ -474,6 +548,7 @@ class RequestPlane:
             if count_epoch:
                 entry.ticket.epochs += 1
                 self._ingest(entry, member, snap, group.store_epoch)
+                self._trace_ticket_epoch(entry, member, group, snap)
             reason = self._terminal_reason(entry, member, snap, now)
             if reason is not None:
                 self._finish(entry, reason)
@@ -490,14 +565,36 @@ class RequestPlane:
             self.index._record_session_telemetry(group.session)
             self._groups.remove(group)
 
+    def _trace_ticket_epoch(self, entry: _Entry, member: _Member,
+                            group: _Group, snap) -> None:
+        """Per-ticket race-epoch event: the ticket's own worst uncertified
+        CI (its member rows only) plus the session's epoch telemetry —
+        joinable with the ``race.epoch`` span via ``session``."""
+        tracer = self.obs.tracer
+        if not tracer.enabled:
+            return
+        rows = snap.ci[member.offset:member.offset + len(member.rows)]
+        worst = float(np.where(np.isfinite(rows), rows, 0.0).max(initial=0.0))
+        cert = sum(len(ids) for ids in entry.cert_ids)
+        info = group.session.last_epoch or {}
+        attrs = {k: info[k] for k in
+                 ("coord_ops", "rounds", "width", "n_surv", "R",
+                  "shard_coord_ops", "shard_rounds") if k in info}
+        tracer.instant("ticket.epoch", trace=entry.ticket.trace_id,
+                       session=group.session.sid,
+                       epoch=entry.ticket.epochs, worst_ci=worst,
+                       certified=cert, store_epoch=group.store_epoch,
+                       **attrs)
+
     def step(self) -> int:
         """One scheduler epoch: fence, admit, advance every active group by
         one epoch, harvest terminals. Returns tickets still in flight."""
+        t0 = time.perf_counter()
         now = time.monotonic()
         self._fence_groups()
         self._admit_groups(now)
         if self._groups:
-            self._epochs += 1
+            self._epochs.inc()
         for group in list(self._groups):
             self._harvest(group, count_epoch=False)   # pre-step expiries
             if group not in self._groups:
@@ -515,6 +612,10 @@ class RequestPlane:
         # the admission scan (or stats) without bound on a long-lived plane
         for tenant in [t for t, q in self._queues.items() if not q]:
             del self._queues[tenant]
+        if self._groups or self.active:
+            self._h_epoch.observe((time.perf_counter() - t0) * 1e3)
+        self._g_queue.set(sum(len(q) for q in self._queues.values()))
+        self._g_active.set(sum(len(g.members) for g in self._groups))
         return self.active
 
     def drain(self, max_epochs: int = 100000) -> None:
@@ -653,14 +754,22 @@ class RequestPlane:
         t.reason = reason
         t.finished_at = time.monotonic()
         t.result = self._build_result(entry, True, reason)
-        self._completed += 1
+        self._completed.inc()
         if reason == R_DEADLINE:
-            self._deadline_exits += 1
+            self._deadline_exits.inc()
         elif reason == R_BUDGET:
-            self._budget_exits += 1
+            self._budget_exits.inc()
         self._latencies.append(t.latency_ms)
+        self._h_latency.observe(t.latency_ms)
         self._fill_cache(entry, reason)
         entry.group = entry.member = None
+        if entry.queue_span is not None:     # e.g. deadline expired queued
+            entry.queue_span.end(outcome=reason)
+            entry.queue_span = None
+        self.obs.tracer.instant(
+            "plane.shed" if reason == R_SHED else "plane.terminal",
+            trace=t.trace_id, reason=reason, latency_ms=t.latency_ms,
+            epochs=t.epochs, store_epoch=entry.epoch)
         self._entries.pop(t.id, None)
 
     def _fill_cache(self, entry: _Entry, reason: str) -> None:
@@ -722,25 +831,40 @@ class RequestPlane:
 
     @property
     def stats(self) -> ServeStats:
-        """The handle's ``ServeStats`` extended with the plane's queue and
-        latency telemetry (schema v2)."""
+        """The handle's ``ServeStats`` extended with the plane's queue,
+        latency and observability telemetry (schema v3). The counters come
+        straight off the obs metrics registry — the same series the
+        Prometheus/JSON exporters emit — so the two views never diverge.
+        Percentiles are exact over the bounded ``latency_window`` and 0.0
+        (never None/NaN) while the window is empty."""
         st = self.index.stats
         lat = list(self._latencies)
+        queue_depth = sum(len(q) for q in self._queues.values())
+        active = sum(len(g.members) for g in self._groups)
+        self._g_queue.set(queue_depth)
+        self._g_active.set(active)
+        p50 = percentile(lat, 50)
+        p95 = percentile(lat, 95)
+        p99 = percentile(lat, 99)
         return dataclasses.replace(
             st,
-            plane_submitted=self._submitted,
-            plane_admitted=self._admitted,
-            plane_completed=self._completed,
-            plane_shed=self._shed,
-            plane_deadline_exits=self._deadline_exits,
-            plane_budget_exits=self._budget_exits,
-            plane_readmitted=self._readmitted,
-            plane_epochs=self._epochs,
-            plane_queue_depth=sum(len(q) for q in self._queues.values()),
-            plane_active=sum(len(g.members) for g in self._groups),
-            plane_latency_p50_ms=percentile(lat, 50),
-            plane_latency_p95_ms=percentile(lat, 95),
-            plane_latency_p99_ms=percentile(lat, 99),
+            plane_submitted=int(self._submitted.value),
+            plane_admitted=int(self._admitted.value),
+            plane_completed=int(self._completed.value),
+            plane_shed=int(self._shed.value),
+            plane_deadline_exits=int(self._deadline_exits.value),
+            plane_budget_exits=int(self._budget_exits.value),
+            plane_readmitted=int(self._readmitted.value),
+            plane_epochs=int(self._epochs.value),
+            plane_queue_depth=queue_depth,
+            plane_active=active,
+            plane_latency_p50_ms=0.0 if p50 is None else float(p50),
+            plane_latency_p95_ms=0.0 if p95 is None else float(p95),
+            plane_latency_p99_ms=0.0 if p99 is None else float(p99),
+            obs_events=self.obs.events.total,
+            obs_event_drops=self.obs.events.drops,
+            obs_epoch_ms=self._h_epoch.snapshot(),
+            obs_latency_ms=self._h_latency.snapshot(),
         )
 
 

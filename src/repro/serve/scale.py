@@ -68,9 +68,11 @@ class QueueDepthPolicy(ScalePolicy):
             self._hold -= 1
             return ScaleDecision(reason="cooldown")
         hot = stats.plane_queue_depth >= self.high_queue
+        # p95 is 0.0 (never None/NaN) on an empty latency window since
+        # schema v3, so the SLO comparison is unconditional and an empty
+        # window can never read as hot
         if (self.p95_target_ms is not None
-                and stats.plane_latency_p95_ms is not None
-                and stats.plane_latency_p95_ms > self.p95_target_ms):
+                and (stats.plane_latency_p95_ms or 0.0) > self.p95_target_ms):
             hot = True
         cold = (stats.plane_queue_depth <= self.low_queue
                 and stats.plane_active == 0)

@@ -1,19 +1,65 @@
-"""Minimal structured logging for the framework (no external deps)."""
+"""Minimal structured logging for the framework (no external deps).
+
+``get_logger(name)`` returns a ``StructuredLogger`` — a stdlib
+``LoggerAdapter`` with one addition: ``bind(**ctx)`` returns a child
+logger whose every record carries the bound context as a ``[k=v ...]``
+suffix. The serving stack binds the obs trace id so a grep over logs
+joins with the trace-event dumps on the same ``trace_id``
+(DESIGN.md §8.3)::
+
+    log = get_logger("repro.serve.plane").bind(trace_id=ticket.trace_id)
+    log.warning("deadline expired after %d epochs", n)
+    # 12:00:01 W repro.serve.plane] deadline expired after 3 epochs
+    #                               [trace_id=p0.t17]
+
+``REPRO_LOGLEVEL`` is re-read on every ``get_logger`` call (not only the
+first), so a long-lived process — or a test — can flip verbosity by
+setting the environment variable and re-creating its logger.
+"""
 from __future__ import annotations
 
 import logging
 import os
 import sys
+from typing import Optional
 
 _FMT = "%(asctime)s %(levelname).1s %(name)s] %(message)s"
 
 
-def get_logger(name: str) -> logging.Logger:
+class StructuredLogger(logging.LoggerAdapter):
+    """A LoggerAdapter whose bound context renders as a ``[k=v ...]``
+    record suffix. ``bind`` is pure: it returns a NEW adapter, so one
+    module-level logger can be specialized per ticket/trace without
+    cross-talk."""
+
+    def bind(self, **ctx) -> "StructuredLogger":
+        merged = dict(self.extra or {})
+        merged.update({k: v for k, v in ctx.items() if v is not None})
+        return StructuredLogger(self.logger, merged)
+
+    def process(self, msg, kwargs):
+        if self.extra:
+            suffix = " ".join(f"{k}={v}" for k, v in self.extra.items())
+            msg = f"{msg} [{suffix}]"
+        return msg, kwargs
+
+
+def _level() -> int:
+    raw = os.environ.get("REPRO_LOGLEVEL", "INFO").upper()
+    got = getattr(logging, raw, None)
+    return got if isinstance(got, int) else logging.INFO
+
+
+def get_logger(name: str,
+               trace_id: Optional[str] = None) -> StructuredLogger:
+    """A structured logger for ``name``; optionally pre-bound to a trace
+    id. Honours ``REPRO_LOGLEVEL`` at every call."""
     logger = logging.getLogger(name)
     if not logger.handlers:
         handler = logging.StreamHandler(sys.stderr)
         handler.setFormatter(logging.Formatter(_FMT, datefmt="%H:%M:%S"))
         logger.addHandler(handler)
-        logger.setLevel(os.environ.get("REPRO_LOGLEVEL", "INFO"))
         logger.propagate = False
-    return logger
+    logger.setLevel(_level())
+    out = StructuredLogger(logger, {})
+    return out.bind(trace_id=trace_id) if trace_id is not None else out

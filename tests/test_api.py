@@ -84,12 +84,14 @@ def test_policy_validation():
 
 def test_serve_stats_schema_and_legacy_keys():
     # schema_version bumped 1 -> 2 in PR 5 (request-plane queue/latency
-    # fields; DESIGN.md §7 changelog note) — the v1 fields and the legacy
-    # knn_* keys are unchanged
+    # fields) and 2 -> 3 in PR 6 (obs_* registry fields; latency
+    # percentiles are now 0.0 instead of None on an empty window;
+    # DESIGN.md §8 changelog note) — the v1 fields and the legacy knn_*
+    # keys are unchanged
     st = ServeStats(races=3, cache_hits=5)
     d = st.as_dict()
-    assert d["schema_version"] == 2 and d["races"] == 3
-    assert d["plane_submitted"] == 0 and d["plane_latency_p99_ms"] is None
+    assert d["schema_version"] == 3 and d["races"] == 3
+    assert d["plane_submitted"] == 0 and d["plane_latency_p99_ms"] == 0.0
     assert st["knn_races"] == 3 and st["knn_cache_hits"] == 5
     assert st["races"] == 3                        # new names work too
     assert "knn_shard_coord_ops" in st and "bogus" not in st

@@ -2,7 +2,7 @@
 contract across boxes and shard counts, scheduler termination (deadline /
 effort budget), anytime monotonicity, tenant fairness under an adversarial
 heavy tenant, backpressure shedding, the mutation epoch fence, the blocking
-``plane.query`` shim's cache/counter parity, the ServeStats v2 schema, and
+``plane.query`` shim's cache/counter parity, the ServeStats v3 schema, and
 the ``ScalePolicy`` autoscaling hints on synthetic load traces.
 
 The sharded (S=4) anytime contract runs as a subprocess on a forced
@@ -355,19 +355,20 @@ def test_blocking_shim_matches_index_query_and_caches():
     assert plane.stats.cache_entries == st.cache_entries
 
 
-def test_serve_stats_v2_schema_and_legacy_keys():
-    """Satellite bugfix: as_dict() carries schema_version=2 with the new
-    queue/latency fields; the legacy ``knn_*`` keys keep working."""
+def test_serve_stats_v3_schema_and_legacy_keys():
+    """PR-6 satellite: as_dict() carries schema_version=3 with the obs_*
+    fields; the v2 plane_* and legacy ``knn_*`` keys keep working."""
     from repro.api import ServeStats
     from repro.api.spec import SCHEMA_VERSION
-    assert SCHEMA_VERSION == 2
+    assert SCHEMA_VERSION == 3
     idx, queries = _dense_index()
     plane = RequestPlane(idx)
     plane.query(queries, rng=jax.random.PRNGKey(1))
     d = plane.stats.as_dict()
-    assert d["schema_version"] == 2
+    assert d["schema_version"] == 3
     for f in ("plane_submitted", "plane_shed", "plane_queue_depth",
-              "plane_latency_p99_ms"):
+              "plane_latency_p99_ms", "obs_events", "obs_event_drops",
+              "obs_epoch_ms", "obs_latency_ms"):
         assert f in d
     st = plane.stats
     assert st["knn_races"] == st.races == 1

@@ -72,6 +72,12 @@ def main(argv=None):
                     help="small preset for CI (<~2 min)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
+    ap.add_argument("--metrics-dump", default="", metavar="PATH",
+                    help="write the obs metrics registry here on exit "
+                         "(.json = JSON snapshot, else Prometheus text)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="write the raw trace-event dump here on exit "
+                         "(render/convert with tools/trace_view.py)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.n, args.d, args.requests = 1024, 1024, 20
@@ -157,7 +163,7 @@ def main(argv=None):
     reasons = [t_.result.reason for t_ in tickets]
     certified = [int(np.min(t_.result.certified_count)) for t_ in tickets]
     out = {
-        "schema_version": 2,
+        "schema_version": 3,
         "config": {"n": args.n, "d": args.d, "q": args.q, "k": args.k,
                    "requests": args.requests, "load": args.load,
                    "deadline_ms": round(deadline_ms, 3),
@@ -187,6 +193,16 @@ def main(argv=None):
         with open(args.out, "w") as f:
             json.dump(out, f, indent=1)
         print(f"[bench_serve_plane] wrote {args.out}")
+    if args.metrics_dump or args.trace:
+        from repro.obs import dump_events, dump_metrics, get_obs
+        obs = get_obs()
+        if args.metrics_dump:
+            dump_metrics(args.metrics_dump, obs)
+            print(f"[bench_serve_plane] wrote {args.metrics_dump}")
+        if args.trace:
+            dump_events(args.trace, obs)
+            print(f"[bench_serve_plane] wrote {args.trace} "
+                  f"({obs.events.total} events, {obs.events.drops} dropped)")
     return out
 
 

@@ -1,0 +1,165 @@
+"""Offline trace reconstruction for the serving stack (DESIGN.md §8.4).
+
+Input is the raw event dump ``repro.obs.dump_events`` writes (the
+``--trace`` flag of ``launch/serve.py`` / ``tools/bench_serve_plane.py``,
+or ``examples/knn_serve.py --trace``). Two outputs:
+
+  * **render** (default): a per-ticket text reconstruction — submit →
+    queue → admit → every race epoch (pulls, frontier width, survivors, R,
+    worst uncertified CI, per-shard straggler split) → terminal — plus the
+    race sessions' own epoch spans. A single plane-served query is fully
+    reconstructable offline from one dump.
+  * **--chrome out.json**: a Chrome-trace-event file (open in Perfetto /
+    chrome://tracing): one timeline row per trace id, spans as complete
+    ("X") events, instants as "i".
+
+    PYTHONPATH=src python tools/trace_view.py trace.json
+    PYTHONPATH=src python tools/trace_view.py trace.json --chrome perfetto.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if "events" not in doc:
+        raise ValueError(f"{path} is not a raw event dump "
+                         "(missing 'events'; pass the --trace output, "
+                         "not --metrics-dump)")
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace events (Perfetto-loadable)
+# ---------------------------------------------------------------------------
+
+
+def to_chrome(doc: dict) -> dict:
+    """Convert a raw event dump to the Chrome trace event format: one
+    timeline row (tid) per trace id, µs timestamps rebased to the dump's
+    earliest event."""
+    events = doc.get("events", [])
+    if not events:
+        return {"traceEvents": [], "displayTimeUnit": "ms"}
+    t_base = min(e["ts"] for e in events)
+    tids: Dict[str, int] = {}
+    out: List[dict] = []
+    for e in events:
+        trace = e.get("trace") or "(untraced)"
+        if trace not in tids:
+            tids[trace] = len(tids) + 1
+            out.append({"name": "thread_name", "ph": "M", "pid": 1,
+                        "tid": tids[trace], "args": {"name": trace}})
+        rec = {
+            "name": e["name"],
+            "ph": "X" if e.get("ph") == "X" else "i",
+            "pid": 1,
+            "tid": tids[trace],
+            "ts": (e["ts"] - t_base) * 1e6,
+            "args": e.get("attrs", {}),
+        }
+        if rec["ph"] == "X":
+            rec["dur"] = e.get("dur", 0.0) * 1e6
+        else:
+            rec["s"] = "t"          # thread-scoped instant
+        out.append(rec)
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+# ---------------------------------------------------------------------------
+# text reconstruction
+# ---------------------------------------------------------------------------
+
+
+def _fmt_attrs(attrs: dict, skip=()) -> str:
+    parts = []
+    for k, v in attrs.items():
+        if k in skip:
+            continue
+        if isinstance(v, float):
+            v = f"{v:.4g}"
+        elif isinstance(v, list):
+            v = "[" + ",".join(f"{float(x):.4g}" for x in v) + "]"
+        parts.append(f"{k}={v}")
+    return " ".join(parts)
+
+
+def render(doc: dict) -> str:
+    """Per-ticket lifecycle reconstruction, oldest ticket first. Session
+    (``s-*``) race.epoch spans are folded under the tickets that joined
+    them via the admit event's ``session`` attribute."""
+    events = doc.get("events", [])
+    if not events:
+        return "(no events)\n"
+    t_base = min(e["ts"] for e in events)
+    by_trace: Dict[str, List[dict]] = {}
+    for e in events:
+        by_trace.setdefault(e.get("trace") or "(untraced)", []).append(e)
+    session_epochs: Dict[str, List[dict]] = {}
+    for trace, evs in by_trace.items():
+        session_epochs[trace] = [e for e in evs if e["name"] == "race.epoch"]
+    lines = [f"trace dump: {len(events)} events, "
+             f"{doc.get('event_drops', 0)} dropped, "
+             f"clock={doc.get('clock', '?')}"]
+    tickets = sorted(
+        (t for t, evs in by_trace.items()
+         if any(e["name"].startswith(("plane.", "ticket.")) for e in evs)),
+        key=lambda t: min(e["ts"] for e in by_trace[t]))
+    for trace in tickets:
+        evs = sorted(by_trace[trace], key=lambda e: e["ts"])
+        lines.append(f"\n{trace}:")
+        sessions = set()
+        for e in evs:
+            t_ms = (e["ts"] - t_base) * 1e3
+            attrs = e.get("attrs", {})
+            if e.get("ph") == "X":
+                tag = f"{e['name']} [{e.get('dur', 0.0) * 1e3:.2f} ms]"
+            else:
+                tag = e["name"]
+            lines.append(f"  +{t_ms:9.2f} ms  {tag}  {_fmt_attrs(attrs)}")
+            if "session" in attrs:
+                sessions.add(attrs["session"])
+        for sid in sorted(sessions):
+            for e in session_epochs.get(sid, []):
+                t_ms = (e["ts"] - t_base) * 1e3
+                lines.append(
+                    f"  +{t_ms:9.2f} ms  └ {sid} race.epoch "
+                    f"[{e.get('dur', 0.0) * 1e3:.2f} ms]  "
+                    f"{_fmt_attrs(e.get('attrs', {}))}")
+    orphans = [t for t in by_trace
+               if t not in tickets and session_epochs.get(t)]
+    joined = {a["attrs"]["session"] for t in tickets
+              for a in by_trace[t]
+              if a.get("attrs", {}).get("session")}
+    loose = [t for t in orphans if t not in joined]
+    if loose:
+        lines.append(f"\nunjoined sessions: {', '.join(sorted(loose))}")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="raw event dump (from --trace)")
+    ap.add_argument("--chrome", metavar="OUT",
+                    help="write a Perfetto-loadable Chrome trace here")
+    ap.add_argument("--no-render", action="store_true",
+                    help="skip the text reconstruction")
+    args = ap.parse_args(argv)
+    doc = load_trace(args.trace)
+    if args.chrome:
+        with open(args.chrome, "w") as f:
+            json.dump(to_chrome(doc), f, indent=1)
+        print(f"wrote {args.chrome} "
+              f"({len(doc.get('events', []))} events)", file=sys.stderr)
+    if not args.no_render:
+        sys.stdout.write(render(doc))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
