@@ -36,25 +36,36 @@ from repro.core import bmo_nn, oracle
 from repro.data.synthetic import make_knn_benchmark_data
 
 
-def _time(fn, reps: int):
-    """(seconds per call, last result) — the timed calls double as the
-    stats source, no extra un-timed race."""
+def _time(fn, reps: int, Q: int = 0):
+    """(seconds per call, last result, per-query latency histogram) — the
+    timed calls double as the stats source, no extra un-timed race. The
+    per-rep per-query walls land in an obs Histogram so the JSON entries
+    carry the same quantile estimator serving reports."""
+    from repro.obs import ObsContext
     jax.block_until_ready(fn().values)     # warm (compile), fully drained
+    hist = ObsContext("fig8", enabled=False).registry.histogram(
+        "repro_bench_query_ms", "per-query bench latency (ms)")
     t0 = time.perf_counter()
-    for _ in range(reps):
+    for _ in range(max(reps, 1)):
+        t1 = time.perf_counter()
         res = fn()
         jax.block_until_ready(res.values)
-    return (time.perf_counter() - t0) / reps, res
+        if Q:
+            hist.observe((time.perf_counter() - t1) * 1e3 / Q)
+    return (time.perf_counter() - t0) / reps, res, hist
 
 
 def _bench(fn, mode: str, Q: int, reps: int, exact_idx):
     """One timed entry — every driver row in BENCH_fig8.json shares this
     shape, so a field/unit change cannot drift between modes."""
-    t, res = _time(fn, reps)
+    t, res, hist = _time(fn, reps, Q=Q)
     return {
         "mode": mode,
         "time_per_query_us": t * 1e6 / Q,
         "qps": Q / t,
+        "latency_p50_ms": hist.quantile(0.50),
+        "latency_p95_ms": hist.quantile(0.95),
+        "latency_p99_ms": hist.quantile(0.99),
         "mean_rounds": float(np.mean(np.asarray(res.rounds))),
         "coord_ops": float(np.sum(np.asarray(res.coord_ops))),
         "acc": set_accuracy(res.indices, exact_idx),

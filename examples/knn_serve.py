@@ -24,6 +24,14 @@ under the epoch fence, payload realigned automatically) →
 
     PYTHONPATH=src python examples/knn_serve.py --shards 4
 
+With ``--tune`` the walkthrough adds the PR-7 **self-racing autotuner**
+(DESIGN.md §9): ``Index.tune()`` races roofline-pruned candidate configs
+on measured wall time, installs the winner under the epoch fence (exact
+top-k unchanged), and the ``tuned.json`` sidecar rides ``save``/``load``
+so a reloaded replica serves tuned without re-racing:
+
+    PYTHONPATH=src python examples/knn_serve.py --tune
+
 The tail demos the PR-5 **async request plane** (DESIGN.md §7): submit an
 anytime ticket against ``engine.plane``, stream certified-prefix partials,
 exit early once enough of the answer is certified, then run a
@@ -40,6 +48,10 @@ sys.path.insert(0, "src")
 _ap = argparse.ArgumentParser()
 _ap.add_argument("--shards", type=int, default=0,
                  help=">1: sharded-index walkthrough over this many devices")
+_ap.add_argument("--tune", action="store_true",
+                 help="PR-7 walkthrough: self-race the autotuner over the "
+                      "index (repro.tune, DESIGN.md §9), serve the winning "
+                      "config, and round-trip the tuned.json sidecar")
 _ap.add_argument("--trace", default="", metavar="PATH",
                  help="PR-6 obs walkthrough: dump the raw trace-event log "
                       "here and a Perfetto-loadable Chrome trace next to it "
@@ -130,6 +142,36 @@ def main():
         # read fan-out: replica meshes round-robin the query batches
         store.add_replicas(2)
         print(f"read fan-out: {store.stats.replicas} replicas")
+
+    if ARGS.tune:
+        # -- PR-7: the self-racing autotuner (DESIGN.md §9) ----------------
+        # Candidate (R, B, P, frontier, mode) configs are arms of the
+        # paper's own bandit: the roofline model prunes the grid, the
+        # survivors race on measured wall time, and the winner installs
+        # under the epoch fence — identical top-k, cheaper schedule. The
+        # tuned.json sidecar rides the checkpoint, so a replica that loads
+        # this directory serves the tuned config with NO re-race.
+        probe = keys[:8]
+
+        def _qps(reps=3, seed=31):
+            best = float("inf")
+            for i in range(reps):       # min-of-reps: rep 0 eats compiles
+                t0 = time.time()
+                store.query(probe, jax.random.PRNGKey(seed + i))
+                best = min(best, time.time() - t0)
+            return probe.shape[0] / best
+
+        base_qps = _qps()
+        report = store.tune(rng=jax.random.PRNGKey(13))
+        print(f"autotune: raced {report.get('raced', 0)} of "
+              f"{report.get('grid_size', 0)} candidates -> "
+              f"{report['config']}")
+        print(f"  qps {base_qps:.0f} -> {_qps(seed=41):.0f} "
+              "(same exact top-k: tuning changes cost, never results)")
+        store.save(index_dir)           # tuned.json sidecar rides along
+        assert Index.load(index_dir).tuned == store.tuned
+        print("  sidecar round-trip: reloaded index serves the tuned "
+              "config with no re-race")
 
     batch_size, prompt_len, new_tokens = 4, 12, 16
     engine = ServeEngine(model, params, plan, mesh, batch_size=batch_size,

@@ -75,6 +75,9 @@ class Index:
                  cache: Optional[CachePolicy] = None,
                  compaction: Optional[CompactionPolicy] = None):
         self._store = store
+        self._base_cfg = store.cfg    # pre-tuning config: the use_tuned=False
+                                      # contract races exactly this
+        self._tuned = None            # active repro.tune.TunedConfig (or None)
         self.cache_policy = cache if cache is not None else CachePolicy()
         self.compaction_policy = (compaction if compaction is not None
                                   else CompactionPolicy())
@@ -164,6 +167,14 @@ class Index:
                 live = old_ids >= 0
                 buf[live] = saved[old_ids[live]]
             handle._payload = buf
+        # tuned.json sidecar (repro.tune): apply only when its signature
+        # still matches the store as reloaded — re-sharded / re-typed /
+        # grown-past-bucket stores fall back to defaults bit-compatibly.
+        from repro.tune import cache_put, load_tuned, signature_of
+        tuned, _why = load_tuned(path, store)
+        if tuned is not None:
+            handle._apply_tuned(tuned, swap=False)
+            cache_put(signature_of(store), tuned)
         return handle
 
     # -- store-shape properties --------------------------------------------
@@ -206,6 +217,13 @@ class Index:
     def epoch(self) -> int:
         """Bumped on every mutation/admin swap — the cache/replica fence."""
         return self._epoch
+
+    @property
+    def tuned(self):
+        """The active ``repro.tune.TunedConfig`` (None = build-time
+        defaults). Set by ``tune()`` or a valid ``tuned.json`` sidecar at
+        ``load``; cleared only by tuning again."""
+        return self._tuned
 
     @property
     def payload(self) -> Optional[np.ndarray]:
@@ -260,6 +278,19 @@ class Index:
         new_shards = store.n_shards if hasattr(store, "shards") else None
         if new_shards != old_shards:
             self._reset_shard_telemetry()
+
+    def _apply_tuned(self, tuned, *, swap: bool = True) -> None:
+        """Install a ``TunedConfig``: rebind every shard onto the tuned
+        racing knobs (k/δ/metric stay the store's own). ``swap=True`` goes
+        through the epoch fence — live re-tunes must invalidate the query
+        cache and replica fan-out; ``swap=False`` is the load-time path
+        (fresh handle, nothing to fence)."""
+        new = _with_cfg(self._store, tuned.bind(self._store.cfg))
+        if swap:
+            self._swap(new)
+        else:
+            self._store = new
+        self._tuned = tuned
 
     def _remap(self, old_ids: np.ndarray) -> None:
         """Reindex payload + build-row map through an old→new global-id map
@@ -317,13 +348,24 @@ class Index:
         self._rr += 1
         return store
 
+    def _query_cfg(self, spec: QuerySpec):
+        """The config a spec binds against: the served (tuned) config on
+        the fast path, the pre-tuning build config under
+        ``use_tuned=False``."""
+        base = self.cfg if (spec.use_tuned or self._tuned is None) \
+            else self._base_cfg
+        return spec.bind(base)
+
     def _race(self, store, queries, rng, cfg, spec: QuerySpec, prior_hint):
-        if (cfg.delta != store.cfg.delta
-                or cfg.max_rounds != store.cfg.max_rounds):
-            store = _with_cfg(store, dataclasses.replace(cfg, k=store.cfg.k))
+        want = dataclasses.replace(cfg, k=store.cfg.k)
+        if want != store.cfg:     # δ / budget / tuning-opt-out overrides
+            store = _with_cfg(store, want)
+        mode = spec.mode
+        if mode == "auto" and spec.use_tuned and self._tuned is not None:
+            mode = self._tuned.mode       # tuned fused-vs-rounds dispatch
         return _index_knn(store, queries, rng, k=cfg.k, impl=spec.impl,
                           eliminate=spec.eliminate,
-                          warm_start=spec.warm_start, mode=spec.mode,
+                          warm_start=spec.warm_start, mode=mode,
                           prior_hint=prior_hint)
 
     def _record_race(self, raw, n_queries: int) -> None:
@@ -374,7 +416,7 @@ class Index:
             spec = QuerySpec(**overrides)
         elif overrides:
             spec = dataclasses.replace(spec, **overrides)
-        cfg = spec.bind(self.cfg)
+        cfg = self._query_cfg(spec)
         if rng is None:
             rng = jax.random.PRNGKey(self._auto_rng)
             self._auto_rng += 1
@@ -435,7 +477,8 @@ class Index:
 
     def race(self, queries, rng=None, *, spec: Optional[QuerySpec] = None,
              raced_queries: Optional[int] = None, chunk_rounds: int = 0,
-             obs=None, sid=None, **overrides):
+             obs=None, sid=None, deadline_ms: Optional[float] = None,
+             **overrides):
         """Epoch-granular resumable race — the anytime twin of ``query``
         (DESIGN.md §7.1). Returns a ``repro.index.anytime.RaceSession``:
         ``step()`` advances one epoch, ``snapshot`` is the partial top-k
@@ -447,13 +490,20 @@ class Index:
         ``raced_queries`` overrides the row count recorded in ``stats``
         (the plane pads coalesced batches to powers of two).
         ``obs``/``sid`` select the observability context / trace id the
-        session's per-epoch spans record under (DESIGN.md §8.3)."""
+        session's per-epoch spans record under (DESIGN.md §8.3).
+
+        ``deadline_ms``: remaining wall budget for this race — with a
+        tuned per-round cost estimate on file (``repro.tune``), the
+        session caps each epoch's fused round count R to what the budget
+        can still pay (DESIGN.md §9.7). Defaults to ``spec.deadline``'s
+        full allowance; the request plane passes the group's tightest
+        remaining budget explicitly."""
         from repro.index.anytime import make_session
         if spec is None:
             spec = QuerySpec(**overrides)
         elif overrides:
             spec = dataclasses.replace(spec, **overrides)
-        cfg = spec.bind(self.cfg)
+        cfg = self._query_cfg(spec)
         if rng is None:
             rng = jax.random.PRNGKey(self._auto_rng)
             self._auto_rng += 1
@@ -464,11 +514,15 @@ class Index:
             raise ValueError(
                 "anytime sessions drive dense/rotated boxes through the "
                 "epoch-fused driver; mode='rounds' is blocking-query only")
+        if deadline_ms is None and spec.deadline is not None:
+            deadline_ms = spec.deadline.ms
+        round_ms = (self._tuned.round_ms
+                    if self._tuned is not None and spec.use_tuned else 0.0)
         session = make_session(
             self._route(), queries, rng, cfg=cfg, impl=spec.impl,
             eliminate=spec.eliminate, warm_start=spec.warm_start,
             prior_hint=spec.prior_hint, chunk_rounds=chunk_rounds,
-            obs=obs, sid=sid)
+            obs=obs, sid=sid, deadline_ms=deadline_ms, round_ms=round_ms)
         self._races += 1
         self._raced_queries += int(raced_queries if raced_queries is not None
                                    else session.Q)
@@ -616,6 +670,11 @@ class Index:
             save_index(self._store, path)
         if self._payload is not None:
             np.save(os.path.join(path, PAYLOAD_FILE), self._payload)
+        if self._tuned is not None:
+            from repro.tune import save_tuned, signature_of
+            save_tuned(path, signature_of(self._store), self._tuned,
+                       measured={"epoch_ms": self._tuned.epoch_ms,
+                                 "round_ms": self._tuned.round_ms})
 
     # -- admin ops (admin.py) ------------------------------------------------
 
@@ -624,6 +683,33 @@ class Index:
         see ``repro.api.admin.live_reshard`` for the fence protocol."""
         from repro.api.admin import live_reshard
         return live_reshard(self, n_shards)
+
+    def tune(self, queries=None, rng=None, *, levels: int = 2,
+             reps: int = 1, force: bool = False, apply: bool = True,
+             **kw) -> dict:
+        """Autotune the serving config for THIS store (repro.tune,
+        DESIGN.md §9): enumerate the (R, P, B, floor, buffers, mode)
+        candidate grid, prune it with the roofline cost model, and race
+        the survivors with successive halving on measured wall time.
+
+        Runs as an admin op — serving traffic is quiesced for the race
+        and the winner is installed through the epoch fence, never under
+        live queries. An equal-signature tuning from earlier in the
+        process is reused without re-racing unless ``force``. ``queries``
+        defaults to a synthetic batch drawn from the corpus (sparse boxes
+        must pass real queries). ``apply=False`` measures without
+        installing. ``save()`` persists the active tuning as a
+        ``tuned.json`` sidecar; ``load()`` re-applies it while the store
+        signature still matches. Returns the tuning report dict."""
+        from repro.tune import tune_store
+        with self._admin_op("tune"):
+            tuned, report = tune_store(self._store, queries, rng,
+                                       levels=levels, reps=reps,
+                                       force=force, **kw)
+            report = dict(report, applied=bool(apply))
+            if apply:
+                self._apply_tuned(tuned)
+        return report
 
     def add_replicas(self, n_replicas: int) -> int:
         """Set the read fan-out to ``n_replicas`` (1 = primary only);

@@ -36,7 +36,9 @@ CACHE_POLICIES = ("use", "bypass", "refresh")
 #: latency percentiles became plain floats (0.0 on an empty window, never
 #: None/NaN) so autoscaling policies can compare them unconditionally
 #: (DESIGN.md §8.6).
-SCHEMA_VERSION = 3
+#: v4 (PR 7): QuerySpec gained ``use_tuned`` — per-query opt-out of the
+#: autotuned serving config (DESIGN.md §9.6).
+SCHEMA_VERSION = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +65,9 @@ class QuerySpec:
                                        # certified prefix at expiry
     budget: Optional[Any] = None       # stream.EffortBudget — pull-budget
                                        # cap (epochs / coord_ops)
+    use_tuned: bool = True             # serve on the autotuned config
+                                       # (repro.tune) when one is active;
+                                       # False races on build-time defaults
 
     def __post_init__(self):
         from repro.api.stream import Deadline, EffortBudget
@@ -110,7 +115,8 @@ class QuerySpec:
         return (self.k is None and self.delta is None
                 and self.max_rounds is None and self.prior_hint is None
                 and self.eliminate and self.warm_start
-                and self.deadline is None and self.budget is None)
+                and self.deadline is None and self.budget is None
+                and self.use_tuned)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -130,3 +130,8 @@ class BMOConfig:
     epoch_rounds: int = 4            # racing rounds fused per kernel launch
                                      # (epoch-fused serving driver; grows as
                                      # the survivor frontier shrinks)
+    frontier_floor: int = 0          # smallest survivor-bucket width the
+                                     # frontier may shrink to (0 = derived
+                                     # from batch_arms/k; repro.tune sets it)
+    kernel_buffers: int = 2          # VMEM streaming slots in the fused
+                                     # Pallas kernel (2 = double buffering)

@@ -57,7 +57,8 @@ from repro.index.batched_race import (BatchedRaceState, RoundsRaceFns,
                                       _dense_exact_theta, _frontier_ci,
                                       _fused_epoch_step, _fused_init,
                                       make_sparse_rounds_race)
-from repro.index.frontier import FrontierState, bucket_width, compact_frontier
+from repro.index.frontier import (FrontierState, bucket_width,
+                                  compact_frontier, floor_width, pow2_floor)
 from repro.index.sharded import (AXIS, _ST_SPEC, ShardedIndexStore,
                                  _compact_stacked, _fused_init_fn,
                                  _fused_step_fn, _shard_delta, _squeeze,
@@ -384,6 +385,34 @@ class RaceSession:
         self._prev_rounds = 0
         self._prev_shard_coord_ops: Optional[np.ndarray] = None
         self._prev_shard_rounds: Optional[np.ndarray] = None
+        self._deadline_t: Optional[float] = None
+        self._round_ms = 0.0
+
+    def set_deadline(self, deadline_ms: Optional[float],
+                     round_ms: Optional[float] = None) -> None:
+        """Deadline-aware fused-round selection (DESIGN.md §9.7): with a
+        wall-clock budget and a measured per-round cost estimate (the
+        tuned config's ``round_ms``), the fused drivers cap the rounds
+        fused into the NEXT launch so one epoch never overshoots the
+        deadline — the plane harvests a certified prefix at the boundary
+        instead of blocking an extra launch past expiry."""
+        self._deadline_t = (None if deadline_ms is None
+                            else time.perf_counter() + deadline_ms / 1e3)
+        self._round_ms = float(round_ms or 0.0)
+
+    def _deadline_R(self, R: int) -> int:
+        """Cap the adaptive R by the rounds the remaining wall budget can
+        pay for, quantized DOWN the warm R0·2^j chain — an off-chain R is
+        a fresh T specialization whose XLA compile costs far more wall
+        time than the rounds it would save."""
+        if self._deadline_t is None or self._round_ms <= 0.0:
+            return R
+        left_ms = (self._deadline_t - time.perf_counter()) * 1e3
+        cap = int(left_ms / self._round_ms)
+        R0 = getattr(self, "_R0", 1)
+        if cap <= R0:
+            return min(R, R0)     # never below the chain's smallest rung
+        return min(R, R0 * pow2_floor(cap // R0))
 
     @property
     def snapshot(self) -> Partial:
@@ -508,8 +537,7 @@ class FusedSession(RaceSession):
             2 * math.ceil(n * nb / max(B0 * P_, 1)) + n + 16)
         self._R0 = max(cfg.epoch_rounds, 1)
         self._R_cap = max(1, -(-nb // P_))
-        self._floor_w = min(n, bucket_width(max(B0, 2 * cfg.k, 32),
-                                            floor=1, current=n))
+        self._floor_w = floor_width(cfg, n, B0=B0)
         prior = store.prior_var if prior is None else jnp.asarray(
             prior, jnp.float32)
         st, self._pool = _fused_init(
@@ -548,7 +576,8 @@ class FusedSession(RaceSession):
                     self._st.width // 2)
         if W_new < self._st.width:
             self._st = compact_frontier(self._st, W_new=W_new)
-        R = min(self._R0 * max(1, self._W0 // max(need, 1)), self._R_cap)
+        R = min(self._R0 * pow2_floor(self._W0 // max(need, 1)), self._R_cap)
+        R = self._deadline_R(R)
         st, n_surv, _ = _fused_epoch_step(
             self._x, self._qs, self._st, self._pool, cfg=self._cfg,
             block=self._block, d=self._d, impl=self._impl,
@@ -644,9 +673,7 @@ class ShardedFusedSession(RaceSession):
         B0 = min(cfg.batch_arms, self._stride)
         self._R0 = max(cfg.epoch_rounds, 1)
         self._R_cap = max(1, -(-nb // P_))
-        self._floor_w = min(self._stride,
-                            bucket_width(max(B0, 2 * cfg.k, 32), floor=1,
-                                         current=self._stride))
+        self._floor_w = floor_width(cfg, self._stride, B0=B0)
         self._max_rounds = cfg.max_rounds or int(
             2 * math.ceil(self._stride * nb / max(B0 * P_, 1))
             + self._stride + 16)
@@ -693,8 +720,9 @@ class ShardedFusedSession(RaceSession):
             self._st = _compact_stacked(self._st, W_new=W_new)
         total_need = int(
             np.sum(self._n_surv[:, active_q].max(axis=1, initial=0)))
-        R = min(self._R0 * max(1, (self._S * self._W0)
-                               // max(total_need, 1)), self._R_cap)
+        R = min(self._R0 * pow2_floor((self._S * self._W0)
+                                      // max(total_need, 1)), self._R_cap)
+        R = self._deadline_R(R)
         st, n_surv, _ = _fused_step_fn(
             self._mesh, self._cfg, self._store.block, self._store.d,
             self._impl, self._eliminate, self._prior_weight, self._log_term,
@@ -781,11 +809,16 @@ def make_session(store, queries, rng, *, cfg: Optional[BMOConfig] = None,
                  impl: str = "auto", eliminate: bool = True,
                  warm_start: bool = True, prior_hint=None,
                  chunk_rounds: int = 0, obs=None,
-                 sid: Optional[str] = None) -> RaceSession:
+                 sid: Optional[str] = None,
+                 deadline_ms: Optional[float] = None,
+                 round_ms: Optional[float] = None) -> RaceSession:
     """Build the right resumable session for ``store``'s box and layout —
     the anytime twin of ``index_knn`` (same priors, same δ accounting).
     ``obs``/``sid`` select the observability context and trace id the
-    session records epoch spans under (default: process obs, fresh id)."""
+    session records epoch spans under (default: process obs, fresh id).
+    ``deadline_ms`` (wall budget) + ``round_ms`` (the tuned per-round cost
+    estimate, ``repro.tune``) turn on deadline-aware fused-round selection
+    — see ``RaceSession.set_deadline``."""
     cfg = cfg if cfg is not None else store.cfg
     if cfg.k > store.n_live:
         raise ValueError(
@@ -803,19 +836,26 @@ def make_session(store, queries, rng, *, cfg: Optional[BMOConfig] = None,
         else:
             prior_st = None
         if store.kind == "sparse":
-            return ShardedSparseSession(
+            sess = ShardedSparseSession(
                 store, queries, rng, cfg=cfg, eliminate=eliminate,
                 prior_st=prior_st, prior_weight=w, chunk_rounds=chunk_rounds,
                 obs=obs, sid=sid)
-        return ShardedFusedSession(
-            store, queries, rng, cfg=cfg, impl=impl, eliminate=eliminate,
-            prior_st=prior_st, prior_weight=w, obs=obs, sid=sid)
-    prior = None if prior_hint is None else jnp.asarray(prior_hint,
-                                                        jnp.float32)
-    if store.kind == "sparse":
-        return SparseRoundsSession(
-            store, queries, rng, cfg=cfg, eliminate=eliminate, prior=prior,
-            prior_weight=w, chunk_rounds=chunk_rounds, obs=obs, sid=sid)
-    return FusedSession(store, queries, rng, cfg=cfg, impl=impl,
-                        eliminate=eliminate, prior=prior, prior_weight=w,
-                        obs=obs, sid=sid)
+        else:
+            sess = ShardedFusedSession(
+                store, queries, rng, cfg=cfg, impl=impl, eliminate=eliminate,
+                prior_st=prior_st, prior_weight=w, obs=obs, sid=sid)
+    else:
+        prior = None if prior_hint is None else jnp.asarray(prior_hint,
+                                                            jnp.float32)
+        if store.kind == "sparse":
+            sess = SparseRoundsSession(
+                store, queries, rng, cfg=cfg, eliminate=eliminate,
+                prior=prior, prior_weight=w, chunk_rounds=chunk_rounds,
+                obs=obs, sid=sid)
+        else:
+            sess = FusedSession(store, queries, rng, cfg=cfg, impl=impl,
+                                eliminate=eliminate, prior=prior,
+                                prior_weight=w, obs=obs, sid=sid)
+    if deadline_ms is not None:
+        sess.set_deadline(deadline_ms, round_ms)
+    return sess

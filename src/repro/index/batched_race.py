@@ -49,7 +49,8 @@ from repro.core.ucb import (INF, acceptance_step, acceptance_step_masked,
 from repro.obs import get_obs
 from repro.obs import profile as obs_profile
 from repro.index.frontier import (FrontierState, bucket_width,
-                                  compact_frontier, survivors)
+                                  compact_frontier, floor_width, pow2_floor,
+                                  survivors)
 from repro.kernels import ops as kops
 
 
@@ -348,7 +349,8 @@ def _fused_init(x, qs, alive, prior_var, rng, *, cfg: BMOConfig, block: int,
     blk = jax.random.randint(sub, (Q, n, T0), 0, nb)
     with jax.named_scope("repro.fused_epoch_pull"):
         stats = kops.fused_epoch_pull(x, qs, all_arms, blk, block=block,
-                                      metric=cfg.metric, impl=impl)
+                                      metric=cfg.metric, impl=impl,
+                                      n_buf=cfg.kernel_buffers)
     zeros = jnp.zeros((Q, n), jnp.float32)
     mask = jnp.broadcast_to(alive_f[None], (Q, n))
     mean, count, m2 = conf.welford_merge(
@@ -404,7 +406,8 @@ def _fused_epoch_step(x, qs, st: FrontierState, prior_pool, *,
     blk = jax.random.randint(sub, (Q, B, T), 0, nb)
     with jax.named_scope("repro.fused_epoch_pull"):
         stats = kops.fused_epoch_pull(x, qs, slot_safe, blk, block=block,
-                                      metric=cfg.metric, impl=impl)
+                                      metric=cfg.metric, impl=impl,
+                                      n_buf=cfg.kernel_buffers)
     cm = jnp.take_along_axis(st.mean, sel, axis=1)
     cc = jnp.take_along_axis(st.count, sel, axis=1)
     c2 = jnp.take_along_axis(st.m2, sel, axis=1)
@@ -503,7 +506,7 @@ def fused_race_topk(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
         2 * math.ceil(n * nb / max(B0 * P, 1)) + n + 16)
     R0 = max(cfg.epoch_rounds, 1)
     R_cap = max(1, -(-nb // P))          # one epoch never overshoots exact
-    floor_w = min(n, bucket_width(max(B0, 2 * k, 32), floor=1, current=n))
+    floor_w = floor_width(cfg, n, B0=B0)
 
     st, prior_pool = _fused_init(x, qs, alive, prior_var, rng, cfg=cfg,
                                  block=block, impl=impl,
@@ -525,7 +528,7 @@ def fused_race_topk(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
             W_new = bucket_width(need, floor=floor_w, current=st.width)
             if W_new < st.width:
                 st = compact_frontier(st, W_new=W_new)
-        R = min(R0 * max(1, W0 // max(need, 1)), R_cap)
+        R = min(R0 * pow2_floor(W0 // max(need, 1)), R_cap)
         t0 = time.perf_counter()
         with obs_profile.annotate("repro.race.epoch.fused_blocking"):
             st, n_surv_d, done_d = _fused_epoch_step(

@@ -92,3 +92,25 @@ def bucket_width(need: int, *, floor: int, current: int) -> int:
     shapes sane, and never growing back above ``current``."""
     w = max(next_pow2(max(int(need), 1)), floor)
     return min(w, current)
+
+
+def floor_width(cfg, n: int, *, B0: int = 0) -> int:
+    """Smallest bucket width the shrink schedule may reach for an
+    ``n``-wide frontier. ``cfg.frontier_floor`` (a ``repro.tune`` knob)
+    overrides the derived default of max(racing batch, 2k, 32); either
+    way the result is pow2-quantized and capped at ``n`` so the compile
+    cache stays on the n → n/2 → … chain."""
+    if not B0:
+        B0 = min(cfg.batch_arms, n)
+    base = cfg.frontier_floor if cfg.frontier_floor > 0 \
+        else max(B0, 2 * cfg.k, 32)
+    return min(n, bucket_width(base, floor=1, current=n))
+
+
+def pow2_floor(m: int) -> int:
+    """Largest power of two ≤ max(m, 1). The epoch drivers quantize the
+    adaptive rounds-per-launch multiplier through this so T = R·P (a
+    static jit arg of the fused step) takes values only on a ~log-sized
+    chain — one warm race precompiles every specialization mid-traffic
+    requests can reach (guarded by the repro_xla_compiles_total test)."""
+    return 1 << (max(int(m), 1).bit_length() - 1)

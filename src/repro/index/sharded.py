@@ -48,6 +48,7 @@ import dataclasses
 import functools
 import math
 import os
+import time
 from typing import List, NamedTuple, Optional, Tuple
 
 import jax
@@ -65,11 +66,13 @@ from repro.index.batched_race import (_dense_exact_theta, _frontier_ci,
                                       _sparse_index_knn, batched_race_topk)
 from repro.index.builder import build_index
 from repro.index.frontier import (FrontierState, bucket_width,
-                                  compact_frontier)
+                                  compact_frontier, floor_width, pow2_floor)
 from repro.index.mutable import _take_pad, _widen_sparse
 from repro.index import mutable
 from repro.index.store import IndexStore
 from repro.kernels import ops as kops
+from repro.obs import get_obs
+from repro.obs import profile as obs_profile
 from repro.utils import get_logger
 
 log = get_logger("repro.index")
@@ -692,8 +695,7 @@ def _sharded_fused_race(store: ShardedIndexStore, qs, prior_st, rng, *,
     B0 = min(cfg.batch_arms, stride)
     R0 = max(cfg.epoch_rounds, 1)
     R_cap = max(1, -(-nb // P_))
-    floor_w = min(stride, bucket_width(max(B0, 2 * k, 32), floor=1,
-                                       current=stride))
+    floor_w = floor_width(cfg, stride, B0=B0)
     max_rounds = cfg.max_rounds or int(
         2 * math.ceil(stride * nb / max(B0 * P_, 1)) + stride + 16)
 
@@ -703,6 +705,8 @@ def _sharded_fused_race(store: ShardedIndexStore, qs, prior_st, rng, *,
     rounds_spent = 0
     n_surv = np.full((S, Q), stride)
     done = np.zeros((S, Q), bool)
+    obs = get_obs()
+    prev_coord = 0.0
     while not done.all() and rounds_spent < max_rounds:
         active = ~done
         need = int(n_surv[active].max(initial=1))
@@ -713,16 +717,29 @@ def _sharded_fused_race(store: ShardedIndexStore, qs, prior_st, rng, *,
         # S·W0·R0 pulls; R fuses enough rounds to spend it over the TOTAL
         # surviving work, so certified (idle) shards' shares flow to the
         # still-racing ones. With S=1 this is exactly the single-shard
-        # adaptive rule R = R0·max(1, W0/need).
+        # adaptive rule R = R0·max(1, W0/need) (pow2-quantized so T = R·P
+        # stays on the warm specialization chain).
         total_need = sum(int(n_surv[s][active[s]].max(initial=0))
                          for s in range(S))
-        R = min(R0 * max(1, (S * W0) // max(total_need, 1)), R_cap)
+        R = min(R0 * pow2_floor((S * W0) // max(total_need, 1)), R_cap)
+        t0 = time.perf_counter()
         st, n_surv_d, done_d = _fused_step_fn(
             mesh, cfg, block, store.d, impl, eliminate, prior_weight,
             log_term, R * P_)(x_st, qs, st, pool)
         rounds_spent += R
         n_surv = np.asarray(n_surv_d)
         done = np.asarray(done_d)
+        # per-epoch timing under the same histogram the anytime sessions
+        # feed — repro.tune races candidate configs on this series
+        coord = float(np.sum(np.asarray(st.coord_ops)))
+        obs.registry.histogram(
+            "repro_race_epoch_ms", "wall time of one race epoch (ms)",
+            kind="sharded_fused_blocking").observe(
+            (time.perf_counter() - t0) * 1e3)
+        obs_profile.record_kernel_launch(
+            obs, "fused_epoch_pull", launches=S,
+            coord_ops=max(coord - prev_coord, 0.0), pulls=float(R))
+        prev_coord = coord
 
     outs = _fused_finalize_fn(mesh, cfg, log_term, prior_weight, stride,
                               block, store.d, cfg.metric)(x_st, qs, st, pool)

@@ -37,11 +37,11 @@ try:  # TPU-specific grid spec (scalar prefetch); interpret mode supports it
 except ImportError:  # pragma: no cover
     pltpu = None
 
-N_BUF = 2  # double buffering: one slot reduces while the other streams
+N_BUF = 2  # default streaming depth: one slot reduces while one streams
 
 
 def _fused_epoch_kernel(arm_ref, blk_ref, x_ref, q_ref, o_ref, buf, sem, *,
-                        block: int, metric: str):
+                        block: int, metric: str, n_buf: int):
     qid = pl.program_id(0)
     b = pl.program_id(1)
     arm = arm_ref[qid, b]
@@ -59,12 +59,12 @@ def _fused_epoch_kernel(arm_ref, blk_ref, x_ref, q_ref, o_ref, buf, sem, *,
 
     def body(t, carry):
         mean, m2 = carry
-        cur = jax.lax.rem(t, N_BUF)
+        cur = jax.lax.rem(t, n_buf)
 
         # stream the next block while the current one is reduced
         @pl.when(t + 1 < T)
         def _():
-            dma(jax.lax.rem(t + 1, N_BUF), t + 1).start()
+            dma(jax.lax.rem(t + 1, n_buf), t + 1).start()
 
         dma(cur, t).wait()
         blk = blk_ref[qid, b, t]
@@ -88,14 +88,18 @@ def _fused_epoch_kernel(arm_ref, blk_ref, x_ref, q_ref, o_ref, buf, sem, *,
 
 def fused_epoch_pull_pallas(x: jax.Array, qs: jax.Array, arm_idx: jax.Array,
                             blk_idx: jax.Array, *, block: int,
-                            metric: str = "l2",
+                            metric: str = "l2", n_buf: int = N_BUF,
                             interpret: bool = False) -> jax.Array:
     """x (n, d_pad); qs (Q, d_pad); arm_idx (Q, B) int32; blk_idx (Q, B, T)
     int32, T = rounds·pulls_per_round.  Returns (Q, B, 2) fp32: per-arm
-    (mean, M2) Welford statistics of the T pulled block distances."""
+    (mean, M2) Welford statistics of the T pulled block distances.
+    ``n_buf`` VMEM slots stream the corpus blocks (2 = classic double
+    buffering; deeper queues hide longer DMA latencies at the cost of
+    n_buf·block·itemsize scratch per program — a ``repro.tune`` arm)."""
     n, d_pad = x.shape
     Q, B, T = blk_idx.shape
     assert d_pad % block == 0 and arm_idx.shape == (Q, B)
+    assert n_buf >= 2, f"need at least 2 streaming slots, got {n_buf}"
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -108,12 +112,13 @@ def fused_epoch_pull_pallas(x: jax.Array, qs: jax.Array, arm_idx: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, 1, 2), lambda q, i, arm, blk: (q, i, 0)),
         scratch_shapes=[
-            pltpu.VMEM((N_BUF, 1, block), x.dtype),
-            pltpu.SemaphoreType.DMA((N_BUF,)),
+            pltpu.VMEM((n_buf, 1, block), x.dtype),
+            pltpu.SemaphoreType.DMA((n_buf,)),
         ],
     )
     return pl.pallas_call(
-        functools.partial(_fused_epoch_kernel, block=block, metric=metric),
+        functools.partial(_fused_epoch_kernel, block=block, metric=metric,
+                          n_buf=n_buf),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Q, B, 2), jnp.float32),
         interpret=interpret,

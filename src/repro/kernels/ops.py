@@ -57,16 +57,20 @@ def block_pull_multi(x, qs, arm_idx, blk_idx, *, block: int, metric: str = "l2",
                                    metric=metric, interpret=(impl == "interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("block", "metric", "impl"))
+@functools.partial(jax.jit,
+                   static_argnames=("block", "metric", "impl", "n_buf"))
 def fused_epoch_pull(x, qs, arm_idx, blk_idx, *, block: int,
-                     metric: str = "l2", impl: str = "auto"):
+                     metric: str = "l2", impl: str = "auto",
+                     n_buf: int = 2):
     """Round-fused epoch pull: arm_idx (Q, B), blk_idx (Q, B, R·P) →
-    (Q, B, 2) per-arm (mean, M2) Welford batch statistics."""
+    (Q, B, 2) per-arm (mean, M2) Welford batch statistics. ``n_buf`` is
+    the Pallas kernel's VMEM streaming depth (``BMOConfig.kernel_buffers``,
+    a ``repro.tune`` knob on real hardware; the jnp reference ignores it)."""
     impl = _resolve(impl)
     if impl == "ref":
         return kref.fused_epoch_pull_ref(x, qs, arm_idx, blk_idx, block, metric)
     return fused_epoch_pull_pallas(x, qs, arm_idx, blk_idx, block=block,
-                                   metric=metric,
+                                   metric=metric, n_buf=n_buf,
                                    interpret=(impl == "interpret"))
 
 

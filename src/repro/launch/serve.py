@@ -9,7 +9,9 @@ Retrieval is served from a persistent ``repro.api.Index`` handle.
 loaded when present, built+saved when not — the next-token payload rides the
 handle's sidecar); ``--index-append`` grows the datastore during decode;
 ``--index-shards`` spans the index over a mesh, and a saved index re-shards
-on the way in when the flag differs from the saved shard count.
+on the way in when the flag differs from the saved shard count;
+``--tune`` self-races kernel/frontier configs after build/load
+(``repro.tune``, DESIGN.md §9) and persists the winner with the index.
 """
 from __future__ import annotations
 
@@ -50,6 +52,13 @@ def main(argv=None):
                          "devices (one ShardedIndexStore, DESIGN.md §5); "
                          "needs that many visible devices — on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune the retrieval index after build/load: "
+                         "race kernel/frontier candidate configs on measured "
+                         "wall time (repro.tune, DESIGN.md §9) and serve the "
+                         "winner; with --index-dir the tuned.json sidecar is "
+                         "persisted next to the checkpoint so later launches "
+                         "serve tuned without re-racing")
     ap.add_argument("--datastore-size", type=int, default=2048)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
@@ -124,6 +133,25 @@ def main(argv=None):
                 index.save(args.index_dir)
                 log.info("built + saved index to %s (%d shard(s))",
                          args.index_dir, index.n_shards)
+        if args.tune and index.tuned is None:
+            t0 = time.time()
+            report = index.tune(rng=jax.random.PRNGKey(13))
+            log.info("autotuned in %.1fs: %s (winner %.2f ms vs default "
+                     "%.2f ms over %d raced candidates)",
+                     time.time() - t0, report["config"],
+                     report.get("winner_median_ms", float("nan")),
+                     report.get("default_median_ms", float("nan")),
+                     report.get("raced", 0))
+            if args.index_dir:
+                from repro.tune import save_tuned, signature_of
+                save_tuned(args.index_dir, signature_of(index.store),
+                           index.tuned,
+                           measured={"epoch_ms": index.tuned.epoch_ms,
+                                     "round_ms": index.tuned.round_ms})
+                log.info("tuned.json sidecar -> %s", args.index_dir)
+        elif args.tune:
+            log.info("index loaded with a tuned sidecar — serving it "
+                     "without re-racing (%s)", index.tuned.to_dict())
 
     engine = ServeEngine(model, params, plan, mesh, batch_size=args.batch,
                          max_seq=max_seq, knn_lm=knn_cfg,

@@ -24,6 +24,7 @@ from typing import Optional
 
 from repro.obs.export import (dump_events, dump_metrics, events_doc,
                               json_snapshot, prometheus_text)
+from repro.obs.jaxmon import compiles_total, install_compile_hook
 from repro.obs.registry import (DEFAULT_MS_BUCKETS, Counter, EventLog,
                                 Gauge, Histogram, MetricsRegistry)
 from repro.obs.trace import NULL_SPAN, Span, Tracer, new_trace_id
@@ -31,9 +32,9 @@ from repro.obs.trace import NULL_SPAN, Span, Tracer, new_trace_id
 __all__ = [
     "Counter", "DEFAULT_MS_BUCKETS", "EventLog", "Gauge", "Histogram",
     "MetricsRegistry", "NULL_SPAN", "ObsContext", "Span", "Tracer",
-    "dump_events", "dump_metrics", "events_doc", "get_obs",
-    "json_snapshot", "new_trace_id", "prometheus_text", "reset_obs",
-    "set_obs",
+    "compiles_total", "dump_events", "dump_metrics", "events_doc",
+    "get_obs", "install_compile_hook", "json_snapshot", "new_trace_id",
+    "prometheus_text", "reset_obs", "set_obs",
 ]
 
 
@@ -77,3 +78,10 @@ def reset_obs() -> ObsContext:
     global _default
     _default = None
     return get_obs()
+
+
+# jax compile-time telemetry (repro_xla_compiles_total) rides on the
+# process-wide jax.monitoring listener; the hook resolves get_obs() per
+# event, so it composes with set_obs()-swapped contexts. Best-effort: a
+# jax build without the monitoring API simply leaves the counter at 0.
+install_compile_hook()

@@ -1,0 +1,65 @@
+"""jax compile-time telemetry → obs registry (DESIGN.md §8.6).
+
+XLA backend compiles are the serving stack's worst tail event: a fresh
+(shape, static-arg) specialization on the hot path stalls every ticket in
+the batch for hundreds of milliseconds. The drivers are built so one warm
+race precompiles every specialization mid-traffic requests can reach
+(pow2 width chain, pow2-quantized adaptive R) — this module makes that
+guarantee *measurable*:
+
+  * ``repro_xla_compiles_total``   — backend compiles since process start,
+  * ``repro_xla_compile_ms``       — their wall-time histogram.
+
+Implemented over ``jax.monitoring``'s event-duration listeners — the same
+channel jax's own telemetry uses, so there is nothing to patch and no
+overhead beyond the listener call. The listener is registered once per
+process (jax only exposes clear-all, never unregister) and resolves
+``get_obs()`` *at event time*, so a test that installs its own ObsContext
+sees exactly the compiles its own traffic caused.
+
+The regression test (tests/test_obs.py) asserts the counter stays flat
+across repeat traffic after a warm race — the guard that keeps
+``repro.tune``'s bucket-schedule changes from causing recompile storms.
+"""
+from __future__ import annotations
+
+#: jax._src.dispatch.BACKEND_COMPILE_EVENT — the event every XLA
+#: backend.compile() call records (stable across jax 0.4.x).
+BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_installed = False
+
+
+def _on_event_duration(event: str, duration_secs: float, **kwargs) -> None:
+    if event != BACKEND_COMPILE_EVENT:
+        return
+    from repro.obs import get_obs  # resolve the CURRENT context, lazily
+    reg = get_obs().registry
+    reg.counter("repro_xla_compiles_total",
+                "XLA backend compiles since process start").inc()
+    reg.histogram("repro_xla_compile_ms",
+                  "XLA backend compile wall time (ms)").observe(
+        duration_secs * 1e3)
+
+
+def install_compile_hook() -> bool:
+    """Register the listener (idempotent). Returns True when active."""
+    global _installed
+    if _installed:
+        return True
+    try:
+        from jax import monitoring
+        monitoring.register_event_duration_secs_listener(_on_event_duration)
+    except Exception:  # pragma: no cover — jax without the monitoring API
+        return False
+    _installed = True
+    return True
+
+
+def compiles_total(obs=None) -> int:
+    """Current value of ``repro_xla_compiles_total`` in ``obs`` (default:
+    the process context). 0 if nothing compiled since the context began."""
+    from repro.obs import get_obs
+    reg = (obs if obs is not None else get_obs()).registry
+    return int(reg.counter("repro_xla_compiles_total",
+                           "XLA backend compiles since process start").value)

@@ -445,11 +445,26 @@ class RequestPlane:
         spec = dataclasses.replace(entries[0].spec, prior_hint=prior_hint,
                                    deadline=None, budget=None)
         rng = next((e.rng for e in entries if e.rng is not None), None)
+        # deadline-aware fused-round selection (DESIGN.md §9.7): hand the
+        # session the group's tightest remaining wall budget — with a
+        # tuned per-round cost on file it sizes each epoch's fused R to
+        # rounds the budget can still pay instead of overshooting the
+        # deadline inside one oversized launch.
+        deadline_ms = None
+        for entry in entries:
+            dl = entry.spec.deadline
+            if dl is None:
+                continue
+            left = (entry.ticket.submitted_at + dl.ms / 1e3 - now) * 1e3
+            deadline_ms = left if deadline_ms is None \
+                else min(deadline_ms, left)
+        if deadline_ms is not None:
+            deadline_ms = max(deadline_ms, 0.0)
         try:
             session = self.index.race(batch, rng, spec=spec,
                                       raced_queries=offset,
                                       chunk_rounds=self.config.chunk_rounds,
-                                      obs=self.obs)
+                                      obs=self.obs, deadline_ms=deadline_ms)
         except Exception as e:  # noqa: BLE001 — never orphan the bucket
             log.bind(plane=self.plane_id,
                      traces=",".join(e_.ticket.trace_id or ""

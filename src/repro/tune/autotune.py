@@ -1,0 +1,93 @@
+"""``tune_store`` — the end-to-end autotune pass (DESIGN.md §9).
+
+enumerate (candidates.py) → model-prune (seed.py) → race the survivors
+(racer.py) → memoize by store signature (sidecar.py). Pure store-level:
+no ``Index`` handle involved, so the api layer can call down without an
+import cycle, and benches/tests can tune a bare store directly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.tune import sidecar
+from repro.tune.candidates import TunedConfig, candidate_grid
+from repro.tune.racer import race_candidates
+from repro.tune.seed import seed_candidates
+from repro.tune.signature import signature_of
+from repro.utils import get_logger
+
+log = get_logger("repro.tune")
+
+TUNE_QUERIES = 8        # default synthetic tuning batch (pow2: warm-chain)
+
+
+def synth_queries(store, rng, Q: int = TUNE_QUERIES) -> np.ndarray:
+    """Synthetic tuning batch for dense/rotated boxes: live corpus rows
+    plus noise, so the tuning races see realistic distance gaps rather
+    than isotropic worst-case ones. Sparse boxes have no dense rows to
+    perturb — callers must supply real queries."""
+    if store.kind == "sparse":
+        raise ValueError("a sparse index needs explicit tuning queries "
+                         "(pass the (q_idx, q_val, q_nnz) triplet)")
+    leaf = store.shards[0] if hasattr(store, "shards") else store
+    x = np.asarray(leaf.x, np.float32)
+    alive = np.flatnonzero(np.asarray(leaf.alive))
+    kq, kn = jax.random.split(rng)
+    rows = np.asarray(jax.random.choice(kq, alive, shape=(Q,)))
+    noise = 0.1 * np.asarray(
+        jax.random.normal(kn, (Q, leaf.d_pad)), np.float32)
+    qs = x[rows] + noise * np.std(x[rows], axis=-1, keepdims=True)
+    return qs[:, : store.d]
+
+
+def tune_store(store, queries=None, rng=None, *, levels: int = 2,
+               reps: int = 1, max_candidates: int = 8,
+               prune_ratio: float = 3.0, force: bool = False,
+               ) -> Tuple[TunedConfig, dict]:
+    """Race the candidate grid on ``store``; returns (winner, report).
+
+    The winner carries measured ``epoch_ms`` / ``round_ms`` (the deadline
+    planner's cost basis) and is memoized in the in-process cache keyed by
+    the store's signature — equal-signature stores reuse it without
+    re-racing unless ``force``.
+    """
+    sig = signature_of(store)
+    if not force:
+        hit = sidecar.cache_get(sig)
+        if hit is not None:
+            return hit, {"signature": sig.to_dict(), "cached": True,
+                         "config": hit.to_dict()}
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    if queries is None:
+        rng, kq = jax.random.split(rng)
+        queries = synth_queries(store, kq)
+    cands = candidate_grid(store, backend=sig.backend)
+    survivors, model_report = seed_candidates(
+        store, cands, max_candidates=max_candidates,
+        prune_ratio=prune_ratio)
+    log.info("tune: %d candidates, %d after roofline prune (sig=%s)",
+             len(cands), len(survivors), sig.key())
+    winner, results = race_candidates(store, survivors, queries, rng,
+                                      levels=levels, reps=reps)
+    tuned = winner.cand.with_measured(epoch_ms=winner.epoch_ms,
+                                      round_ms=winner.round_ms)
+    sidecar.cache_put(sig, tuned)
+    default_ms = next((m.median_ms for m in results
+                       if m.cand == survivors[0]), float("nan"))
+    log.info("tune: winner %s — %.1f ms vs %.1f ms default",
+             tuned.to_dict(), winner.median_ms, default_ms)
+    report = {
+        "signature": sig.to_dict(),
+        "cached": False,
+        "config": tuned.to_dict(),
+        "grid_size": len(cands),
+        "raced": len(survivors),
+        "model": model_report,
+        "measurements": [m.to_dict() for m in results],
+        "winner_median_ms": winner.median_ms,
+        "default_median_ms": default_ms,
+    }
+    return tuned, report

@@ -1,0 +1,150 @@
+"""Tuned-config records and the candidate grid (DESIGN.md §9.1).
+
+``TunedConfig`` is the unit the autotuner races, persists, and the
+``Index`` handle applies: the per-store knobs that trade launch overhead
+against wasted pulls —
+
+  * ``epoch_rounds`` (R)      — racing rounds fused per kernel launch,
+  * ``pulls_per_round`` (P)   — block pulls folded per round (T = R·P),
+  * ``batch_arms`` (B)        — arms racing per launch,
+  * ``frontier_floor``        — smallest survivor bucket the frontier
+                                shrinks to (0 = derived),
+  * ``kernel_buffers``        — VMEM streaming slots in the Pallas kernel,
+  * ``mode``                  — fused-epoch vs per-round driver,
+
+plus the measured per-epoch / per-round wall costs the racer observed —
+the estimates the serving plane's deadline-aware round selection runs on.
+
+The grid is deliberately small and pow2-shaped: every member must be a
+config the warm-start compile chain can serve without mid-traffic
+recompiles, and the roofline pre-pass (seed.py) prunes it further before
+anything is timed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+from repro.configs.base import BMOConfig
+
+#: bump on any TunedConfig field change — stale sidecars then fail closed.
+TUNED_VERSION = 1
+
+#: BMOConfig fields a TunedConfig overrides when bound.
+_BIND_FIELDS = ("epoch_rounds", "pulls_per_round", "batch_arms",
+                "frontier_floor", "kernel_buffers")
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    epoch_rounds: int
+    pulls_per_round: int
+    batch_arms: int
+    frontier_floor: int = 0
+    kernel_buffers: int = 2
+    mode: str = "auto"            # dispatch default when the spec says auto
+    epoch_ms: float = 0.0         # measured mean wall per fused epoch
+    round_ms: float = 0.0         # measured mean wall per racing round
+
+    def bind(self, cfg: BMOConfig) -> BMOConfig:
+        """Apply the racing knobs onto a store's build-time config (k, δ,
+        metric, budgets stay the store's own — tuning never changes what
+        the race certifies, only what it costs)."""
+        return dataclasses.replace(
+            cfg, **{f: getattr(self, f) for f in _BIND_FIELDS})
+
+    def with_measured(self, *, epoch_ms: float,
+                      round_ms: float) -> "TunedConfig":
+        return dataclasses.replace(self, epoch_ms=float(epoch_ms),
+                                   round_ms=float(round_ms))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TunedConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: d[k] for k in fields})
+
+    @classmethod
+    def from_cfg(cls, cfg: BMOConfig, mode: str = "auto") -> "TunedConfig":
+        """The identity candidate: the store's hand-set defaults. Always in
+        the race, so tuning can only tie or win."""
+        return cls(mode=mode,
+                   **{f: getattr(cfg, f) for f in _BIND_FIELDS})
+
+
+def candidate_grid(store, *, backend: str = "") -> List[TunedConfig]:
+    """Enumerate the (R, P, B, floor, buffers, mode) grid for ``store``.
+
+    Sparse boxes race on the per-round driver only (no corpus blocks to
+    fuse), so their grid is the R sweep at mode="rounds". Dense/rotated
+    boxes get the fused cross product plus one per-round candidate —
+    cheap insurance for shapes where launch fusion does not pay.
+    ``kernel_buffers`` only varies where the Pallas kernel actually runs
+    (TPU); the ref/XLA interpreters ignore the knob, so racing it on CPU
+    would just time noise. The identity candidate (the store's current
+    config) is always first.
+    """
+    if not backend:
+        import jax
+        backend = jax.default_backend()
+    cfg = store.cfg
+    n = store.n_live
+    out = [TunedConfig.from_cfg(cfg)]
+    if store.kind == "sparse":
+        for R in (2, 4, 8):
+            out.append(TunedConfig(
+                epoch_rounds=R, pulls_per_round=cfg.pulls_per_round,
+                batch_arms=cfg.batch_arms, mode="rounds"))
+        return _dedup(out)
+    n_blocks = max(store.d // store.block, 1)
+    bufs = (2, 4) if backend == "tpu" else (2,)
+    for R in (2, 4, 8):
+        for P in (1, 2, 4):
+            if R * P > 4 * n_blocks:   # epoch pulls > 4 passes over the
+                continue               # row's blocks: pure waste
+            for B in (16, 32, 64):
+                if B > n:
+                    continue
+                for floor in (0, 128):
+                    for nb in bufs:
+                        out.append(TunedConfig(
+                            epoch_rounds=R, pulls_per_round=P,
+                            batch_arms=B, frontier_floor=floor,
+                            kernel_buffers=nb, mode="fused"))
+    # one per-round fallback arm (launch fusion is not always a win)
+    out.append(TunedConfig(
+        epoch_rounds=cfg.epoch_rounds, pulls_per_round=cfg.pulls_per_round,
+        batch_arms=cfg.batch_arms, mode="rounds"))
+    return _dedup(out)
+
+
+def _dedup(cands: List[TunedConfig]) -> List[TunedConfig]:
+    seen, out = set(), []
+    for c in cands:
+        key = dataclasses.astuple(dataclasses.replace(
+            c, epoch_ms=0.0, round_ms=0.0))
+        if key not in seen:
+            seen.add(key)
+            out.append(c)
+    return out
+
+
+def bind_store(store, cfg: BMOConfig):
+    """Rebind a (possibly sharded) store onto ``cfg`` without touching its
+    arrays — the tuner-side twin of ``repro.api.handle._with_cfg`` (kept
+    local: repro.tune must not import the api layer)."""
+    if hasattr(store, "shards"):
+        return dataclasses.replace(
+            store, shards=[dataclasses.replace(s, cfg=cfg)
+                           for s in store.shards])
+    return dataclasses.replace(store, cfg=cfg)
+
+
+def tuned_mode(tuned: Optional["TunedConfig"], spec_mode: str) -> str:
+    """Dispatch-time mode resolution: an explicit spec mode always wins;
+    "auto" defers to the tuned preference when one is installed."""
+    if spec_mode != "auto" or tuned is None:
+        return spec_mode
+    return tuned.mode

@@ -1,0 +1,113 @@
+"""Roofline pre-pass: model-prune the candidate grid before racing it
+(DESIGN.md §9.3).
+
+Racing a candidate costs real compiles and real wall time; the grid is
+~50 wide. This pass lowers the fused epoch kernel (``kernels/ops.py``)
+at each candidate's (Q, B, T) proxy shape, runs the HLO roofline model
+(``repro/roofline``) over the compiled artifact, and scores candidates by
+*achievable time per useful pulled element*:
+
+    e = max(t_compute, t_memory) / (Q · B · T · block)
+
+Low e = the launch amortizes its fixed costs over more useful coordinate
+reads. Candidates worse than ``prune_ratio ×`` the best e are discarded;
+the survivors (capped at ``max_candidates``) go to the measurement racer.
+The identity candidate (the store's current config) is never pruned —
+the racer must always be able to conclude "the defaults were already
+best", and a model mis-prediction must never force a regression.
+
+The model runs on whatever backend is present (``impl="ref"`` lowers on
+CPU); corpus length is capped at a proxy n — HLO flop/byte counts of the
+gather+reduce scale with (Q, B, T, block), not with n, so a small proxy
+keeps lowering cheap while preserving the candidate ordering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.roofline.analysis import analyze_compiled
+from repro.tune.candidates import TunedConfig
+
+PROXY_N = 4096          # corpus rows in the lowering proxy
+PROXY_Q = 8             # query rows in the lowering proxy
+
+
+@functools.lru_cache(maxsize=128)
+def _lowered_terms(Q: int, B: int, T: int, n: int, d_pad: int, block: int,
+                   metric: str, dtype: str):
+    """Compile the fused epoch pull at a proxy shape and extract roofline
+    terms. Cached per shape tuple — many candidates share (B, T)."""
+    x = jnp.zeros((n, d_pad), jnp.dtype(dtype))
+    qs = jnp.zeros((Q, d_pad), jnp.dtype(dtype))
+    arm = jnp.zeros((Q, B), jnp.int32)
+    blk = jnp.zeros((Q, B, T), jnp.int32)
+    fn = functools.partial(kops.fused_epoch_pull, block=block,
+                           metric=metric, impl="ref")
+    compiled = jax.jit(fn).lower(x, qs, arm, blk).compile()
+    return analyze_compiled(
+        compiled, arch=jax.default_backend(),
+        shape=f"fused_epoch Q{Q} B{B} T{T} blk{block}",
+        mesh_name="tune-proxy", chips=1,
+        # useful work: one FLOP per pulled coordinate (diff-and-reduce)
+        model_flops=float(Q * B * T * block))
+
+
+def model_efficiency(cand: TunedConfig, *, Q: int, n: int, d_pad: int,
+                     block: int, metric: str, dtype: str) -> float:
+    """Achievable seconds per useful pulled element under the candidate."""
+    T = cand.epoch_rounds * cand.pulls_per_round
+    B = min(cand.batch_arms, n)
+    terms = _lowered_terms(Q, B, T, min(n, PROXY_N), d_pad, block,
+                           metric, dtype)
+    useful = float(Q * B * T * block)
+    return max(terms.t_compute, terms.t_memory) / max(useful, 1.0)
+
+
+def seed_candidates(store, cands: List[TunedConfig], *,
+                    Q: int = PROXY_Q, max_candidates: int = 8,
+                    prune_ratio: float = 3.0,
+                    ) -> Tuple[List[TunedConfig], List[dict]]:
+    """Model-score ``cands`` for ``store``; returns (survivors, report).
+
+    Survivors are ordered best-model-score-first with the identity
+    candidate (index 0 of ``cands``) always retained. Candidates the
+    model cannot score (sparse stores, lowering failure) pass through
+    unpruned — the measurement racer is the ground truth.
+    """
+    if store.kind == "sparse":
+        return list(cands), [{"cand": c.to_dict(), "e": None}
+                             for c in cands]
+    leaf = store.shards[0] if hasattr(store, "shards") else store
+    d_pad = leaf.d_pad
+    dtype = str(leaf.x.dtype)
+    metric = store.cfg.metric
+    scored: List[Tuple[float, TunedConfig]] = []
+    report = []
+    for c in cands:
+        if c.mode == "rounds":      # different driver — model not comparable
+            scored.append((0.0, c))
+            report.append({"cand": c.to_dict(), "e": None})
+            continue
+        try:
+            e = model_efficiency(c, Q=Q, n=store.n_live, d_pad=d_pad,
+                                 block=store.block, metric=metric,
+                                 dtype=dtype)
+        except Exception:           # pragma: no cover — lowering quirk
+            e = 0.0
+        scored.append((e, c))
+        report.append({"cand": c.to_dict(), "e": e if e else None})
+    floor_e = min((e for e, _ in scored if e > 0.0), default=0.0)
+    keep: List[TunedConfig] = []
+    for i, (e, c) in enumerate(scored):
+        if i == 0 or e == 0.0 or e <= prune_ratio * floor_e:
+            keep.append(c)
+    # best model score first; identity stays in regardless of rank
+    order = {id(c): e for e, c in scored}
+    ranked = sorted(keep[1:], key=lambda c: order[id(c)])
+    survivors = [keep[0]] + ranked[: max(max_candidates - 1, 0)]
+    return survivors, report

@@ -87,10 +87,11 @@ def test_serve_stats_schema_and_legacy_keys():
     # fields) and 2 -> 3 in PR 6 (obs_* registry fields; latency
     # percentiles are now 0.0 instead of None on an empty window;
     # DESIGN.md §8 changelog note) — the v1 fields and the legacy knn_*
-    # keys are unchanged
+    # keys are unchanged; 3 -> 4 in PR 7 (QuerySpec.use_tuned,
+    # DESIGN.md §9.6)
     st = ServeStats(races=3, cache_hits=5)
     d = st.as_dict()
-    assert d["schema_version"] == 3 and d["races"] == 3
+    assert d["schema_version"] == 4 and d["races"] == 3
     assert d["plane_submitted"] == 0 and d["plane_latency_p99_ms"] == 0.0
     assert st["knn_races"] == 3 and st["knn_cache_hits"] == 5
     assert st["races"] == 3                        # new names work too

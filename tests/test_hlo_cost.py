@@ -123,3 +123,44 @@ def test_cpu_upcast_artifact_detection():
     txt = _compile_text(f, w, x)
     art = cpu_upcast_artifact_bytes(txt)
     assert art >= 128 * 128 * 4  # the hoisted f32 copy of w
+
+
+def test_roofline_terms_of_fused_epoch_pull_lowering():
+    """repro.tune's seed pass scores candidates by roofline terms of the
+    fused epoch kernel's lowering — pin the contract it depends on: the
+    terms are finite and positive at real (R, B) grid points, and grow
+    monotonically with both the fused pull count T = R·P and the arm
+    batch B (more pulled blocks / more arms = strictly more modeled
+    work, never less)."""
+    import functools
+
+    from repro.kernels import ops as kops
+    from repro.roofline.analysis import analyze_compiled
+
+    n, d_pad, block, Q = 1024, 512, 128, 8
+
+    def lower(B, T):
+        x = jnp.zeros((n, d_pad), jnp.float32)
+        qs = jnp.zeros((Q, d_pad), jnp.float32)
+        arm = jnp.zeros((Q, B), jnp.int32)
+        blk = jnp.zeros((Q, B, T), jnp.int32)
+        fn = functools.partial(kops.fused_epoch_pull, block=block,
+                               metric="l2", impl="ref")
+        compiled = jax.jit(fn).lower(x, qs, arm, blk).compile()
+        return analyze_compiled(
+            compiled, arch="cpu", shape=f"B{B} T{T}", mesh_name="test",
+            chips=1, model_flops=float(Q * B * T * block))
+
+    lo = lower(16, 4)      # (R=2, P=2, B=16)
+    hi = lower(64, 16)     # (R=8, P=2, B=64)
+    for terms in (lo, hi):
+        for v in (terms.t_compute, terms.t_memory, terms.hlo_flops,
+                  terms.hlo_bytes):
+            assert np.isfinite(v) and v > 0.0, terms.to_dict()
+        assert terms.bottleneck in ("compute", "memory", "collective")
+    # 4× arms × 4× pulls: modeled work must grow strictly, and at least
+    # linearly in one of the two resources
+    assert hi.hlo_flops > lo.hlo_flops
+    assert hi.hlo_bytes > lo.hlo_bytes
+    assert max(hi.t_compute, hi.t_memory) >= \
+        4.0 * max(lo.t_compute, lo.t_memory)

@@ -575,3 +575,69 @@ def test_kernel_launch_and_coord_op_counters():
                obs2.registry.collect()
                if m.name == "repro_kernel_launches_total"}
     assert "block_pull_multi" in series2
+
+
+# ---------------------------------------------------------------------------
+# jax compile telemetry (repro_xla_compiles_total)
+# ---------------------------------------------------------------------------
+
+
+def test_xla_compile_counter_counts_fresh_compiles():
+    """The jax.monitoring hook lands backend compiles in whatever obs
+    context is CURRENT at compile time — test-injected contexts see
+    exactly the compiles their own traffic caused."""
+    from repro.obs import compiles_total, set_obs
+
+    ctx = ObsContext("compiles")
+    old = set_obs(ctx)
+    try:
+        idx, queries = _dense_index(n=128, d=256, seed=7)
+        idx.query(queries, jax.random.PRNGKey(0))
+        fresh = compiles_total(ctx)
+    finally:
+        set_obs(old)
+    assert fresh >= 1                     # build + first race compile
+    h = ctx.registry.histogram("repro_xla_compile_ms",
+                               "XLA backend compile wall time (ms)")
+    assert h.count == fresh and h.sum > 0.0
+
+
+def test_warm_race_precompile_leaves_zero_midtraffic_compiles():
+    """Regression gate for the warm-start compile chain (DESIGN.md §9):
+    the pow2 survivor buckets and pow2-quantized adaptive R bound the
+    reachable (W, R) specializations to a log²-sized set, so a handful of
+    full-certification warm races must exhaust it — and same-shape
+    traffic after that must trigger ZERO further XLA backend compiles.
+    An unbounded specialization chain (e.g. un-quantized adaptive R)
+    never goes quiet and fails the convergence budget."""
+    from repro.obs import compiles_total, set_obs
+
+    idx, queries = _dense_index(n=256, d=256, seed=3)
+
+    def one_race(i):
+        rng = np.random.default_rng(i)
+        qs = (np.asarray(queries)
+              + rng.normal(size=np.asarray(queries).shape)
+              .astype(np.float32))
+        ctx = ObsContext(f"race{i}")
+        old = set_obs(ctx)
+        try:
+            idx.query(qs, jax.random.PRNGKey(i), cache="bypass")
+        finally:
+            set_obs(old)
+        return compiles_total(ctx)
+
+    # warm until the chain is exhausted (two consecutive quiet races)
+    quiet, budget = 0, 12
+    for i in range(budget):
+        quiet = quiet + 1 if one_race(i) == 0 else 0
+        if quiet >= 2:
+            break
+    assert quiet >= 2, (
+        f"compile chain did not converge within {budget} warm races — "
+        "specializations are no longer bounded")
+    # ...and stays exhausted: mid-traffic races compile NOTHING
+    mid = sum(one_race(100 + j) for j in range(3))
+    assert mid == 0, (
+        f"{mid} XLA compile(s) fired mid-traffic after a warm race — "
+        "the precompile chain no longer covers serving shapes")

@@ -1,0 +1,303 @@
+"""repro.tune — the self-racing autotuner (DESIGN.md §9).
+
+Covers the signature scheme, the candidate grid + roofline pruning, the
+successive-halving measurement race, the Index.tune() admin op, the
+tuned.json sidecar round trip with strict signature-drift fallback, the
+per-query ``use_tuned`` opt-out, and the deadline-aware fused-round cap
+the tuned cost estimates enable.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Index, QuerySpec
+from repro.configs.base import BMOConfig
+from repro.data.synthetic import make_knn_benchmark_data
+from repro.tune import (TUNED_FILE, TunedConfig, cache_clear, cache_get,
+                        candidate_grid, load_tuned, save_tuned,
+                        seed_candidates, signature_of, tune_store,
+                        tuned_mode)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tune_cache():
+    cache_clear()
+    yield
+    cache_clear()
+
+
+def _cfg(**kw):
+    kw.setdefault("k", 3)
+    kw.setdefault("delta", 0.01)
+    kw.setdefault("batch_arms", 16)
+    kw.setdefault("pulls_per_round", 2)
+    return BMOConfig(**kw)
+
+
+def _store(n=256, d=256, seed=0, **kw):
+    corpus, queries = make_knn_benchmark_data("dense", n, d, 4, seed=seed)
+    from repro.index.builder import build_index
+    return build_index(corpus, _cfg(**kw), jax.random.PRNGKey(0)), queries
+
+
+# ---------------------------------------------------------------------------
+# signature
+# ---------------------------------------------------------------------------
+
+
+def test_signature_fields_and_pow2_bucketing():
+    store, _ = _store(n=200)
+    sig = signature_of(store, backend="cpu")
+    assert sig.n_bucket == 256            # next_pow2(200)
+    assert sig.kind == "dense" and sig.shards == 1
+    assert sig.d == store.d and sig.block == store.block
+    # round-trips through its dict form (the sidecar encoding)
+    from repro.tune import StoreSignature
+    assert StoreSignature.from_dict(sig.to_dict()) == sig
+
+
+def test_signature_is_insert_stable_within_bucket():
+    from repro.index import mutable
+    store, _ = _store(n=200)
+    grown, _gids = mutable.insert(store, np.zeros((10, store.d), np.float32))
+    assert signature_of(grown, "cpu") == signature_of(store, "cpu")
+    # ...but crossing the pow2 bucket changes it
+    big, _gids = mutable.insert(
+        store, np.zeros((100, store.d), np.float32))
+    assert signature_of(big, "cpu") != signature_of(store, "cpu")
+
+
+# ---------------------------------------------------------------------------
+# candidates + roofline seed
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_grid_identity_first_and_deduped():
+    store, _ = _store()
+    cands = candidate_grid(store, backend="cpu")
+    assert cands[0] == TunedConfig.from_cfg(store.cfg)
+    keys = [dataclasses.astuple(dataclasses.replace(
+        c, epoch_ms=0.0, round_ms=0.0)) for c in cands]
+    assert len(keys) == len(set(keys))
+    assert any(c.mode == "rounds" for c in cands)       # fallback arm
+    assert all(c.batch_arms <= store.n_live for c in cands)
+
+
+def test_tuned_config_bind_touches_only_perf_knobs():
+    cfg = _cfg(epoch_rounds=2)
+    t = TunedConfig(epoch_rounds=8, pulls_per_round=1, batch_arms=64,
+                    frontier_floor=128, kernel_buffers=4)
+    bound = t.bind(cfg)
+    assert (bound.epoch_rounds, bound.pulls_per_round,
+            bound.batch_arms) == (8, 1, 64)
+    assert bound.frontier_floor == 128 and bound.kernel_buffers == 4
+    # certification contract untouched
+    assert (bound.k, bound.delta, bound.metric) == \
+        (cfg.k, cfg.delta, cfg.metric)
+    assert TunedConfig.from_dict(t.to_dict()) == t
+
+
+def test_seed_candidates_prunes_but_keeps_identity():
+    store, _ = _store()
+    cands = candidate_grid(store, backend="cpu")
+    survivors, report = seed_candidates(store, cands, max_candidates=4)
+    assert survivors[0] == cands[0]       # identity never pruned
+    assert 1 <= len(survivors) <= 4
+    assert len(report) == len(cands)
+    scored = [r["e"] for r in report if r["e"] is not None]
+    assert scored and all(e > 0 for e in scored)
+
+
+def test_tuned_mode_resolution():
+    t = TunedConfig(epoch_rounds=2, pulls_per_round=2, batch_arms=16,
+                    mode="rounds")
+    assert tuned_mode(t, "auto") == "rounds"
+    assert tuned_mode(t, "fused") == "fused"    # explicit spec mode wins
+    assert tuned_mode(None, "auto") == "auto"
+
+
+# ---------------------------------------------------------------------------
+# tune_store + in-process cache
+# ---------------------------------------------------------------------------
+
+
+def test_tune_store_winner_and_cache():
+    store, queries = _store()
+    tuned, report = tune_store(store, queries, jax.random.PRNGKey(0),
+                               levels=1, max_candidates=2)
+    assert not report["cached"]
+    assert report["winner_median_ms"] <= report["default_median_ms"] + 1e-9
+    assert tuned.round_ms > 0.0           # the deadline planner's basis
+    assert cache_get(signature_of(store)) == tuned
+    # equal-signature re-tune is a cache hit, no re-race
+    again, rep2 = tune_store(store, queries, jax.random.PRNGKey(1))
+    assert rep2["cached"] and again == tuned
+
+
+def test_tune_store_sparse_requires_queries():
+    from repro.data.synthetic import clustered_sparse
+    from repro.index.builder import build_index
+    corpus = clustered_sparse(64, 512, seed=1)
+    cfg = _cfg(block=1, pulls_per_round=8, init_pulls=16, metric="l1",
+               sparse=True)
+    store = build_index(corpus, cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="sparse"):
+        tune_store(store, None, jax.random.PRNGKey(0))
+    # sparse grid is per-round only
+    cands = candidate_grid(store, backend="cpu")
+    assert all(c.mode in ("auto", "rounds") for c in cands)
+
+
+# ---------------------------------------------------------------------------
+# Index.tune + sidecar round trip
+# ---------------------------------------------------------------------------
+
+
+def _built_index(n=256, d=256, **kw):
+    corpus, queries = make_knn_benchmark_data("dense", n, d, 4, seed=2)
+    return Index.build(corpus, _cfg(**kw), jax.random.PRNGKey(0)), queries
+
+
+def test_index_tune_applies_under_epoch_fence():
+    idx, queries = _built_index()
+    base = np.sort(np.asarray(
+        idx.query(queries, jax.random.PRNGKey(0)).indices))
+    e0 = idx.epoch
+    report = idx.tune(queries, jax.random.PRNGKey(0), levels=1,
+                      max_candidates=2)
+    assert report["applied"] and idx.tuned is not None
+    assert idx.epoch == e0 + 1            # installed through the fence
+    # tuning changes cost, never results: δ-PAC exactness is preserved
+    got = np.sort(np.asarray(
+        idx.query(queries, jax.random.PRNGKey(0)).indices))
+    assert np.array_equal(got, base)
+    # served config now carries the tuned knobs
+    assert idx.cfg == idx.tuned.bind(idx._base_cfg)
+
+
+def test_index_tune_apply_false_measures_only():
+    idx, queries = _built_index()
+    e0 = idx.epoch
+    report = idx.tune(queries, jax.random.PRNGKey(0), levels=1,
+                      max_candidates=2, apply=False)
+    assert not report["applied"]
+    assert idx.tuned is None and idx.epoch == e0
+
+
+def test_use_tuned_opt_out_races_build_config():
+    idx, queries = _built_index()
+    idx.tune(queries, jax.random.PRNGKey(0), levels=1, max_candidates=2)
+    spec = QuerySpec(use_tuned=False)
+    assert not spec.cacheable             # opt-out bypasses the LRU
+    res = idx.query(queries, jax.random.PRNGKey(0), spec=spec)
+    exact = np.sort(np.asarray(
+        idx.query(queries, jax.random.PRNGKey(1)).indices))
+    assert np.array_equal(np.sort(np.asarray(res.indices)), exact)
+
+
+def test_sidecar_roundtrip_and_signature_drift(tmp_path):
+    idx, queries = _built_index()
+    base = np.sort(np.asarray(
+        idx.query(queries, jax.random.PRNGKey(0)).indices))
+    idx.tune(queries, jax.random.PRNGKey(0), levels=1, max_candidates=2)
+    path = str(tmp_path / "ckpt")
+    idx.save(path)
+    assert os.path.exists(os.path.join(path, TUNED_FILE))
+
+    cache_clear()                          # force the sidecar path
+    idx2 = Index.load(path)
+    assert idx2.tuned == idx.tuned         # serves tuned with NO re-tune
+    got = np.sort(np.asarray(
+        idx2.query(queries, jax.random.PRNGKey(0)).indices))
+    assert np.array_equal(got, base)
+    # accepted sidecar also primes the in-process cache
+    assert cache_get(signature_of(idx2.store)) == idx.tuned
+
+    # drifted signature → bit-compatible fallback to build defaults
+    fpath = os.path.join(path, TUNED_FILE)
+    doc = json.load(open(fpath))
+    doc["signature"]["n_bucket"] *= 2
+    json.dump(doc, open(fpath, "w"))
+    cache_clear()
+    idx3 = Index.load(path)
+    assert idx3.tuned is None
+    assert idx3.cfg == idx._base_cfg
+
+    # stale version → same fallback
+    doc = json.load(open(fpath))
+    doc["version"] = 999
+    json.dump(doc, open(fpath, "w"))
+    cache_clear()
+    assert Index.load(path).tuned is None
+
+    # unreadable file → same fallback
+    with open(fpath, "w") as f:
+        f.write("{not json")
+    cache_clear()
+    assert Index.load(path).tuned is None
+
+
+def test_missing_sidecar_is_silent_default(tmp_path):
+    idx, _ = _built_index()
+    path = str(tmp_path / "plain")
+    idx.save(path)                         # never tuned → no sidecar
+    assert not os.path.exists(os.path.join(path, TUNED_FILE))
+    assert Index.load(path).tuned is None
+    tuned, why = load_tuned(path, idx.store)
+    assert tuned is None and why == "missing"
+
+
+def test_save_tuned_explicit_roundtrip(tmp_path):
+    store, _ = _store()
+    sig = signature_of(store)
+    t = TunedConfig(epoch_rounds=4, pulls_per_round=1, batch_arms=32,
+                    round_ms=1.5, epoch_ms=6.0)
+    save_tuned(str(tmp_path), sig, t, measured={"round_ms": 1.5})
+    got, why = load_tuned(str(tmp_path), store)
+    assert why == "ok" and got == t
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware fused-round selection (DESIGN.md §9.7)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_caps_fused_rounds_on_the_pow2_chain():
+    from repro.index.anytime import make_session
+    store, queries = _store()
+    sess = make_session(store, queries, jax.random.PRNGKey(0),
+                        cfg=store.cfg)
+    R0, R_cap = sess._R0, sess._R_cap
+    # no deadline → identity
+    assert sess._deadline_R(R_cap) == R_cap
+    # huge budget → uncapped
+    sess.set_deadline(1e6, round_ms=1.0)
+    assert sess._deadline_R(R_cap) == R_cap
+    # tight budget → floor of the chain, never below R0
+    sess.set_deadline(0.01, round_ms=50.0)
+    assert sess._deadline_R(R_cap) == min(R_cap, R0)
+    # mid budget lands ON the R0·2^j chain (a warm compile point)
+    sess.set_deadline(100.0, round_ms=1.0)
+    r = sess._deadline_R(1 << 20)
+    assert r >= R0 and (r % R0 == 0)
+    assert (r // R0) & ((r // R0) - 1) == 0   # pow2 multiplier
+    # zero round estimate (untuned) → rule disabled
+    sess.set_deadline(0.01, round_ms=0.0)
+    assert sess._deadline_R(R_cap) == R_cap
+
+
+def test_race_deadline_ms_still_certifies():
+    idx, queries = _built_index()
+    idx.tune(queries, jax.random.PRNGKey(0), levels=1, max_candidates=2)
+    sess = idx.race(queries, jax.random.PRNGKey(0), deadline_ms=1e6)
+    while sess.step():
+        pass
+    snap = sess.snapshot
+    assert np.asarray(snap.done).all()
+    exact = np.sort(np.asarray(
+        idx.query(queries, jax.random.PRNGKey(1)).indices))
+    assert np.array_equal(np.sort(np.asarray(snap.ids)), exact)

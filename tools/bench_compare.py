@@ -1,0 +1,110 @@
+"""Diff a fresh bench JSON against a committed baseline (CI perf gate).
+
+Every bench in this repo emits ``{"bench": ..., "entries": [...]}`` with
+identity fields (mode / Q / n / d / R / shards / …) and measurement
+fields (qps*, acc*, latency percentiles). This tool matches entries
+between a fresh run and a committed ``BENCH_*.json`` baseline on their
+shared identity fields and enforces:
+
+  * every ``qps*`` field: fresh >= --tol × baseline (qps tolerance band —
+    CI machines are noisy, so the default band is wide; the gate exists
+    to catch structural regressions, not 10% jitter),
+  * every ``acc*`` field: fresh >= baseline - 1e-6 (exactness never
+    regresses, no tolerance),
+  * at least one entry pair must match (a baseline that matches nothing
+    is a broken gate, not a pass).
+
+Exit status: 0 clean, 1 regression / no matches, 2 usage.
+
+    PYTHONPATH=src python tools/bench_compare.py fresh.json baseline.json
+    PYTHONPATH=src python tools/bench_compare.py fresh.json baseline.json \\
+        --tol 0.5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Tuple
+
+#: fields that IDENTIFY an entry (matched on equality when present in both)
+ID_FIELDS = ("bench", "mode", "Q", "n", "d", "k", "R", "shards",
+             "shards_from", "shards_to")
+
+
+def _identity(entry: dict) -> tuple:
+    return tuple((f, entry[f]) for f in ID_FIELDS if f in entry)
+
+
+def _load(path: str) -> List[dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    entries = doc.get("entries", [])
+    for e in entries:
+        e.setdefault("bench", doc.get("bench"))
+    return entries
+
+
+def compare(fresh: List[dict], baseline: List[dict], *,
+            tol: float = 0.5) -> Tuple[bool, List[str]]:
+    """Returns (ok, report rows). ``tol`` is the minimum fresh/baseline
+    qps ratio tolerated."""
+    base_by_id = {_identity(e): e for e in baseline}
+    rows, ok, matched = [], True, 0
+    for e in fresh:
+        b = base_by_id.get(_identity(e))
+        if b is None:
+            continue
+        matched += 1
+        ident = " ".join(f"{k}={v}" for k, v in _identity(e))
+        for field in sorted(set(e) & set(b)):
+            fv, bv = e[field], b[field]
+            if not isinstance(fv, (int, float)) or \
+                    not isinstance(bv, (int, float)):
+                continue
+            if field.startswith("qps"):
+                ratio = fv / bv if bv else float("inf")
+                bad = ratio < tol
+                ok &= not bad
+                rows.append(
+                    f"{'FAIL' if bad else ' ok '} [{ident}] {field}: "
+                    f"{fv:.1f} vs baseline {bv:.1f} "
+                    f"(x{ratio:.2f}, floor x{tol:.2f})")
+            elif field.startswith("acc"):
+                bad = fv < bv - 1e-6
+                ok &= not bad
+                rows.append(
+                    f"{'FAIL' if bad else ' ok '} [{ident}] {field}: "
+                    f"{fv:.4f} vs baseline {bv:.4f} (no tolerance)")
+    if matched == 0:
+        ok = False
+        rows.append("FAIL no fresh entry matched any baseline entry — "
+                    "identity fields drifted or wrong baseline file")
+    return ok, rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff fresh bench JSON vs a committed baseline")
+    ap.add_argument("fresh", help="freshly produced BENCH JSON")
+    ap.add_argument("baseline", help="committed baseline BENCH JSON")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="minimum tolerated fresh/baseline qps ratio "
+                         "(default 0.5: flag >2x slowdowns, ignore jitter)")
+    args = ap.parse_args(argv)
+    try:
+        fresh = _load(args.fresh)
+        baseline = _load(args.baseline)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+    ok, rows = compare(fresh, baseline, tol=args.tol)
+    for row in rows:
+        print(row)
+    print(f"bench_compare: {'CLEAN' if ok else 'REGRESSION'} "
+          f"({args.fresh} vs {args.baseline}, tol {args.tol})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -35,6 +36,28 @@ def _timed(fn):
     r = fn()
     jax.block_until_ready(r.values)
     return r, time.perf_counter() - t0
+
+
+def _timed_pct(fn, Q: int, reps: int = 5):
+    """Timed reps with per-query latency percentiles through the obs
+    histogram substrate (the same quantile estimator serving reports):
+    returns (last result, median wall seconds, {p50,p95,p99} ms)."""
+    from repro.obs import ObsContext
+    fn()                                   # warm
+    hist = ObsContext("bench", enabled=False).registry.histogram(
+        "repro_bench_query_ms", "per-query bench latency (ms)")
+    walls = []
+    r = None
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        r = fn()
+        jax.block_until_ready(r.values)
+        wall = time.perf_counter() - t0
+        walls.append(wall)
+        hist.observe(wall * 1e3 / Q)
+    pct = {f"latency_p{p}_ms": hist.quantile(p / 100.0)
+           for p in (50, 95, 99)}
+    return r, float(np.median(walls)), pct
 
 
 def _row_acc(handle: Index, res, exact_idx, Q: int) -> float:
@@ -86,8 +109,8 @@ def main_sharded(shards: int, live_reshard: int = 0, n: int = 1024,
         t0 = time.perf_counter()
         handle.reshard(live_reshard)
         t_swap = time.perf_counter() - t0
-        after, t_after = _timed(lambda: handle.query(
-            queries, jax.random.PRNGKey(3), cache="bypass"))
+        after, t_after, pct_after = _timed_pct(lambda: handle.query(
+            queries, jax.random.PRNGKey(3), cache="bypass"), Q, reps=3)
         acc_after = _row_acc(handle, after, ex.indices, Q)
         fresh = Index.build(corpus, cfg, jax.random.PRNGKey(0),
                             shards=live_reshard)
@@ -110,6 +133,7 @@ def main_sharded(shards: int, live_reshard: int = 0, n: int = 1024,
             "qps_live": Q / t_after, "qps_fresh": Q / t_fresh,
             "qps_ratio_live_vs_fresh": ratio,
             "acc": acc_after,
+            **pct_after,                             # p50/p95/p99 per query
             "serve_stats": handle.stats.as_dict(),   # typed ServeStats
         })
 
@@ -137,6 +161,75 @@ def main_sharded(shards: int, live_reshard: int = 0, n: int = 1024,
                        "devices": jax.device_count(),
                        "entries": entries}, f, indent=1)
         print(f"wrote {out} ({len(entries)} entries)")
+
+
+def main_tune(shards: int = 1, n: int = 1024, d: int = 1024, Q: int = 8,
+              k: int = 5, reps: int = 3, out: str = "BENCH_autotune.json"):
+    """Autotune evidence run (fig8 smoke shape): default-config qps vs
+    ``Index.tune()``'d qps on the same handle, exact accuracy asserted on
+    both sides. Entries MERGE into ``out`` keyed by shard count, so the
+    single-shard and sharded runs share one evidence file:
+
+        PYTHONPATH=src python tools/bench_index.py --tune
+        XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+            PYTHONPATH=src python tools/bench_index.py --tune --shards 4
+    """
+    shards = max(shards, 1)
+    corpus, queries = make_knn_benchmark_data("dense", n, d, Q, seed=8)
+    cfg = BMOConfig(k=k, delta=0.01, block=128, batch_arms=32,
+                    pulls_per_round=2, metric="l2")
+    ex = oracle.exact_knn(corpus, queries, k, "l2")
+    handle = Index.build(corpus, cfg, jax.random.PRNGKey(0), shards=shards)
+
+    def run():
+        return handle.query(queries, jax.random.PRNGKey(1), cache="bypass")
+
+    res_d, t_default, pct_d = _timed_pct(run, Q, reps=reps)
+    acc_default = _row_acc(handle, res_d, ex.indices, Q)
+    assert acc_default == 1.0, f"default acc {acc_default} != 1.0"
+
+    t0 = time.perf_counter()
+    report = handle.tune(rng=jax.random.PRNGKey(7))
+    t_tune = time.perf_counter() - t0
+
+    res_t, t_tuned, pct_t = _timed_pct(run, Q, reps=reps)
+    acc_tuned = _row_acc(handle, res_t, ex.indices, Q)
+    assert acc_tuned == 1.0, f"tuned acc {acc_tuned} != 1.0"
+
+    speedup = t_default / t_tuned
+    print(f"default (S={shards}): {Q / t_default:8.1f} qps  "
+          f"acc={acc_default:.3f}  p95={pct_d['latency_p95_ms']:.1f}ms")
+    print(f"tuned   (S={shards}): {Q / t_tuned:8.1f} qps  "
+          f"acc={acc_tuned:.3f}  p95={pct_t['latency_p95_ms']:.1f}ms  "
+          f"speedup={speedup:.2f}x  (tune pass {t_tune:.1f}s, "
+          f"{report['raced']}/{report['grid_size']} raced)")
+    assert speedup >= 1.15, (
+        f"tuned config is only {speedup:.2f}x the defaults (bar: 1.15x)")
+
+    entry = {
+        "bench": "autotune", "shards": shards,
+        "n": n, "d": d, "Q": Q, "k": k, "reps": reps,
+        "qps_default": Q / t_default, "qps_tuned": Q / t_tuned,
+        "speedup": speedup, "acc_default": acc_default,
+        "acc_tuned": acc_tuned, "tune_seconds": t_tune,
+        "default": {f"default_{kk}": v for kk, v in pct_d.items()},
+        **pct_t,                                  # tuned p50/p95/p99
+        "signature": report["signature"],
+        "tuned_config": report["config"],
+        "grid_size": report["grid_size"], "raced": report["raced"],
+    }
+    doc = {"bench": "bench_autotune", "backend": jax.default_backend(),
+           "devices": jax.device_count(), "entries": []}
+    if out and os.path.exists(out):
+        with open(out) as f:
+            doc = json.load(f)
+    doc["entries"] = [e for e in doc["entries"]
+                      if e.get("shards") != shards] + [entry]
+    doc["entries"].sort(key=lambda e: e["shards"])
+    if out:
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {out} ({len(doc['entries'])} entries)")
 
 
 def main(n: int = 1024, d: int = 1024, Q: int = 16, k: int = 5):
@@ -196,8 +289,16 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="",
                     help="JSON output path for the live-reshard entry "
                          "(ServeStats schema; '' disables)")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune evidence run: default vs Index.tune()'d "
+                         "qps at the fig8 smoke shape (merges an entry "
+                         "into --tune-out per shard count)")
+    ap.add_argument("--tune-out", default="BENCH_autotune.json",
+                    help="merge target for --tune entries")
     args = ap.parse_args()
-    if args.shards > 1:
+    if args.tune:
+        main_tune(shards=args.shards, out=args.tune_out)
+    elif args.shards > 1:
         main_sharded(args.shards, live_reshard=args.live_reshard,
                      out=args.out)
     else:
