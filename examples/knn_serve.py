@@ -56,6 +56,14 @@ _ap.add_argument("--trace", default="", metavar="PATH",
                  help="PR-6 obs walkthrough: dump the raw trace-event log "
                       "here and a Perfetto-loadable Chrome trace next to it "
                       "(PATH with a .perfetto.json suffix)")
+_ap.add_argument("--audit", action="store_true",
+                 help="PR-8 walkthrough: shadow δ-audit every certified "
+                      "ticket off the critical path, then inject a wrong "
+                      "answer below the plane and watch the auditor catch "
+                      "it, bundle it, and replay it (DESIGN.md §10)")
+_ap.add_argument("--audit-dir", default="", metavar="DIR",
+                 help="where --audit writes flight-recorder bundles "
+                      "(default: a temp dir)")
 ARGS = _ap.parse_args()
 if ARGS.shards > 1 and "xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", ""):
@@ -109,6 +117,12 @@ def main():
 
     knn = KNNLMConfig(lam=0.25, index_shards=ARGS.shards, bmo=BMOConfig(
         k=8, delta=0.05, block=16, batch_arms=16, metric="l2"))
+    audit_dir = None
+    if ARGS.audit:
+        from repro.serve.plane import PlaneConfig
+        audit_dir = ARGS.audit_dir or tempfile.mkdtemp(prefix="bmo_audit_")
+        knn = dataclasses.replace(knn, plane=PlaneConfig(
+            audit_rate=1.0, audit_dir=audit_dir))
 
     # ONE construction path for any shard count: the handle hides the
     # single-shard/sharded split, and the next-token payload is attached at
@@ -263,6 +277,69 @@ def main():
                    / max(demo.obs_epoch_ms["count"], 1))
         print(f"obs: {demo.obs_events} events recorded, "
               f"mean scheduler epoch {mean_ms:.2f} ms")
+
+    # -- PR-8: online δ-audit + failure flight recorder (DESIGN.md §10) ----
+    # A fraction of certified tickets (here: all of them) is re-answered
+    # EXACTLY, off the critical path, and compared against what was
+    # served. Clean traffic drives the Wilson upper bound on the error
+    # rate down toward the paper's δ; a wrong answer is caught, written to
+    # a replayable bundle, and reproduced offline.
+    if ARGS.audit:
+        from repro.obs import health_snapshot, print_health
+
+        # 1) clean run: audit everything the plane served above. The
+        # anytime/deadline tickets exited PARTIAL — they never claimed the
+        # full 1-δ contract, so the auditor skips them as 'uncertified'.
+        for j in range(4):
+            plane.submit(probe + 0.001 * j, rng=jax.random.PRNGKey(50 + j),
+                         cache="bypass")
+        plane.drain()
+        done = plane.audit_flush()          # the oracle bill, paid off-path
+        a = plane.auditor.summary()
+        print(f"audit (clean): {done} ticket(s) flushed, "
+              f"{a['mismatch_rows']}/{a['sampled_rows']} rows mismatched, "
+              f"err_upper={a['err_upper']:.4g} vs delta="
+              f"{knn.bmo.delta} (skipped: {a['skipped']})")
+        assert a["mismatch_rows"] == 0
+
+        # 2) injected failure: corrupt ONE served answer BELOW the plane —
+        # the scheduler, cache and certification all believe it; only the
+        # shadow oracle can notice. A duplicated neighbor id means some
+        # true neighbor is missing, which check_topk flags no matter how
+        # the distances tie.
+        real_build = plane._build_result
+
+        def corrupted(entry, terminal, reason):
+            res = real_build(entry, terminal, reason)
+            if terminal and reason == "certified":
+                res.indices[0, 0] = res.indices[0, 1]
+                plane._build_result = real_build      # one ticket only
+            return res
+
+        plane._build_result = corrupted
+        bad_ticket = plane.submit(probe, rng=jax.random.PRNGKey(60),
+                                  cache="bypass")
+        plane.drain()
+        plane.audit_flush()
+        a = plane.auditor.summary()
+        assert a["mismatch_rows"] == 1 and len(a["bundles"]) == 1
+        bundle = a["bundles"][0]
+        print(f"audit (injected): ticket {bad_ticket.trace_id} flagged, "
+              f"flight-recorder bundle -> {bundle}")
+
+        # 3) replay: save the index as it is NOW, reload it like an
+        # offline investigation would, and re-run the bundle through
+        # tools/replay_audit.py — the mismatch reproduces deterministically.
+        replay_dir = tempfile.mkdtemp(prefix="bmo_replay_") + "/idx"
+        engine.index.save(replay_dir)
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "tools"))
+        import replay_audit
+        rc = replay_audit.main(["--index-dir", replay_dir, bundle])
+        assert rc == 0
+        print("replay: recorded mismatch reproduced against the reloaded "
+              "index (exit 0)")
+        print_health(health_snapshot(plane=plane), out=sys.stdout)
 
     print("note: at this smoke scale (d=64, n≈500) exact search is cheap; "
           "the bandit gain appears at the paper's d≈4k–28k regime "

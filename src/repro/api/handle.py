@@ -78,6 +78,9 @@ class Index:
         self._base_cfg = store.cfg    # pre-tuning config: the use_tuned=False
                                       # contract races exactly this
         self._tuned = None            # active repro.tune.TunedConfig (or None)
+        self._force_untuned = False   # recall-guard fallback: serve every
+                                      # query on build-time defaults
+        self._retune_reason = None    # pending re-tune request (or None)
         self.cache_policy = cache if cache is not None else CachePolicy()
         self.compaction_policy = (compaction if compaction is not None
                                   else CompactionPolicy())
@@ -226,6 +229,46 @@ class Index:
         return self._tuned
 
     @property
+    def serving_fallback(self) -> bool:
+        """True while the recall guard has forced ``use_tuned=False`` for
+        ALL queries (``force_untuned``) — the spec's own ``use_tuned`` is
+        then ignored until the fallback is lifted."""
+        return self._force_untuned
+
+    @property
+    def retune_requested(self) -> bool:
+        """True while a re-tune has been flagged (``request_retune``) and
+        not yet serviced by ``tune()``."""
+        return self._retune_reason is not None
+
+    @property
+    def retune_reason(self) -> Optional[str]:
+        return self._retune_reason
+
+    def force_untuned(self, on: bool = True) -> None:
+        """Recall-guard fallback (DESIGN.md §10.3): serve EVERY query on
+        the pre-tuning build config until lifted. Cost-only, not an epoch
+        event — the tuned config changes racing knobs, never which
+        neighbors are correct, so certified cached results stay valid."""
+        if on != self._force_untuned:
+            log.warning("serving fallback %s: %s the tuned config",
+                        "ENGAGED" if on else "lifted",
+                        "bypassing" if on else "restoring")
+        self._force_untuned = bool(on)
+
+    def request_retune(self, reason: str = "") -> None:
+        """Flag that the active tuning is suspect and should be re-raced
+        (``tune(force=True)`` clears the flag). Advisory — the launcher or
+        an operator decides when to pay the re-race."""
+        self._retune_reason = reason or "requested"
+
+    def _serving_tuned(self, spec: QuerySpec) -> bool:
+        """Whether THIS query races the tuned config: needs an active
+        tuning, the spec opting in, and no recall-guard fallback."""
+        return (self._tuned is not None and spec.use_tuned
+                and not self._force_untuned)
+
+    @property
     def payload(self) -> Optional[np.ndarray]:
         """(capacity,)+ global-id-aligned side values; index with
         ``KNNResult.indices``."""
@@ -255,6 +298,8 @@ class Index:
                              if self._shard_coord_ops is not None else None),
             shard_rounds=(self._shard_rounds.tolist()
                           if self._shard_rounds is not None else None),
+            serving_fallback=self._force_untuned,
+            retune_requested=self._retune_reason is not None,
         )
 
     # -- internal plumbing --------------------------------------------------
@@ -351,8 +396,9 @@ class Index:
     def _query_cfg(self, spec: QuerySpec):
         """The config a spec binds against: the served (tuned) config on
         the fast path, the pre-tuning build config under
-        ``use_tuned=False``."""
-        base = self.cfg if (spec.use_tuned or self._tuned is None) \
+        ``use_tuned=False`` or a recall-guard ``force_untuned`` fallback."""
+        base = self.cfg if (self._tuned is None
+                            or self._serving_tuned(spec)) \
             else self._base_cfg
         return spec.bind(base)
 
@@ -361,7 +407,7 @@ class Index:
         if want != store.cfg:     # δ / budget / tuning-opt-out overrides
             store = _with_cfg(store, want)
         mode = spec.mode
-        if mode == "auto" and spec.use_tuned and self._tuned is not None:
+        if mode == "auto" and self._serving_tuned(spec):
             mode = self._tuned.mode       # tuned fused-vs-rounds dispatch
         return _index_knn(store, queries, rng, k=cfg.k, impl=spec.impl,
                           eliminate=spec.eliminate,
@@ -516,8 +562,8 @@ class Index:
                 "epoch-fused driver; mode='rounds' is blocking-query only")
         if deadline_ms is None and spec.deadline is not None:
             deadline_ms = spec.deadline.ms
-        round_ms = (self._tuned.round_ms
-                    if self._tuned is not None and spec.use_tuned else 0.0)
+        round_ms = (self._tuned.round_ms if self._serving_tuned(spec)
+                    else 0.0)
         session = make_session(
             self._route(), queries, rng, cfg=cfg, impl=spec.impl,
             eliminate=spec.eliminate, warm_start=spec.warm_start,
@@ -709,6 +755,12 @@ class Index:
             report = dict(report, applied=bool(apply))
             if apply:
                 self._apply_tuned(tuned)
+                # a fresh tuning services any pending recall-guard state:
+                # the suspect config is gone, so the fallback lifts and
+                # the re-tune request is satisfied
+                if self._force_untuned:
+                    self.force_untuned(False)
+                self._retune_reason = None
         return report
 
     def add_replicas(self, n_replicas: int) -> int:

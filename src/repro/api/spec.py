@@ -38,7 +38,10 @@ CACHE_POLICIES = ("use", "bypass", "refresh")
 #: (DESIGN.md §8.6).
 #: v4 (PR 7): QuerySpec gained ``use_tuned`` — per-query opt-out of the
 #: autotuned serving config (DESIGN.md §9.6).
-SCHEMA_VERSION = 4
+#: v5 (PR 8): ServeStats gained the audit_*/slo_alerts/serving_fallback/
+#: retune_requested fields — the online δ-audit and SLO burn-rate state
+#: (DESIGN.md §10).
+SCHEMA_VERSION = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,6 +186,16 @@ class ServeStats:
     obs_event_drops: int = 0   # events overwritten before export
     obs_epoch_ms: Optional[dict] = None    # race-epoch histogram snapshot
     obs_latency_ms: Optional[dict] = None  # ticket-latency histogram snap
+    # -- δ-audit / SLO (schema v5, DESIGN.md §10) --------------------------
+    audit_sampled: int = 0     # query rows shadow-audited so far
+    audit_mismatches: int = 0  # audited rows violating the 1-δ contract
+    # 1.0 = "no claim yet": the Wilson bound carries no evidence until
+    # rows have actually been audited (and is 1.0 with auditing off)
+    audit_err_upper: float = 1.0
+    audit_pending: int = 0     # sampled tickets awaiting the oracle
+    slo_alerts: int = 0        # burn-rate alerts fired (lifetime)
+    serving_fallback: bool = False  # tuned config forced off (recall guard)
+    retune_requested: bool = False  # an Index.tune() re-race is flagged
 
     _LEGACY = {
         "knn_races": "races",

@@ -70,6 +70,24 @@ def main(argv=None):
     ap.add_argument("--autoscale-apply", action="store_true",
                     help="actually apply an add_replicas recommendation "
                          "to the live handle (reshard stays advisory)")
+    ap.add_argument("--audit-rate", type=float, default=0.0,
+                    help="shadow δ-audit: re-answer this fraction of "
+                         "certified tickets exactly, off the critical path, "
+                         "and compare against the served ids "
+                         "(repro.obs.audit, DESIGN.md §10)")
+    ap.add_argument("--audit-dir", default=None, metavar="DIR",
+                    help="write a replayable flight-recorder bundle here "
+                         "for every audited mismatch "
+                         "(replay with tools/replay_audit.py)")
+    ap.add_argument("--slo", action="store_true",
+                    help="evaluate burn-rate SLOs (recall vs δ, shed rate) "
+                         "over the plane's telemetry after serving; a "
+                         "burning recall SLO engages the recall guard "
+                         "(fallback to untuned, flag a re-tune) when "
+                         "--autoscale-apply is set, else it is logged")
+    ap.add_argument("--health-dump", default=None, metavar="PATH",
+                    help="write the combined health snapshot (stats + "
+                         "audit + SLO state) here on exit as JSON")
     ap.add_argument("--metrics-dump", default=None, metavar="PATH",
                     help="write the obs metrics registry here on exit "
                          "(.json = JSON snapshot, else Prometheus text)")
@@ -99,9 +117,12 @@ def main(argv=None):
         ds_rng = np.random.default_rng(0)
         keys = ds_rng.normal(size=(args.datastore_size, cfg.d_model)).astype(np.float32)
         next_ids = ds_rng.integers(0, cfg.vocab_size, args.datastore_size).astype(np.int32)
+        from repro.serve.plane import PlaneConfig
         knn_cfg = KNNLMConfig(lam=0.2, index_shards=args.index_shards,
                               bmo=BMOConfig(
-            k=8, delta=0.05, block=min(64, cfg.d_model), batch_arms=16))
+            k=8, delta=0.05, block=min(64, cfg.d_model), batch_arms=16),
+                              plane=PlaneConfig(audit_rate=args.audit_rate,
+                                                audit_dir=args.audit_dir))
         policies = dict(cache=knn_cfg.cache_policy(),
                         compaction=knn_cfg.compaction_policy())
         shards = max(args.index_shards, 1)
@@ -165,6 +186,15 @@ def main(argv=None):
              out.shape, dt, out.size / dt,
              f"; retrieval coord-ops={retrieval_ops:.0f}" if args.knn_lm else "")
     if args.knn_lm:
+        if args.audit_rate > 0.0 and engine.plane is not None:
+            done = engine.plane.audit_flush()   # oracle runs post-serve
+            a = engine.plane.auditor.summary()
+            log.info("δ-audit: %d ticket(s) flushed — %d/%d audited rows "
+                     "mismatched, err_upper=%.4g (%s), %d bundle(s)",
+                     done, a["mismatch_rows"], a["sampled_rows"],
+                     a["err_upper"], a["method"], len(a["bundles"]))
+            for b in a["bundles"]:
+                log.warning("flight-recorder bundle: %s", b)
         st = engine.stats            # typed repro.api.ServeStats (schema v2)
         log.info("engine stats: %s", st.as_dict())
         if st.shard_coord_ops is not None:
@@ -183,6 +213,34 @@ def main(argv=None):
                 engine.index.add_replicas(decision.value)
                 log.info("applied: read fan-out now %d replicas",
                          engine.stats.replicas)
+        if args.slo and engine.plane is not None:
+            from repro.obs import (AlertSink, SLOEngine, default_slos,
+                                   plane_sources)
+            from repro.serve.scale import RecallGuardPolicy, apply_guard
+            plane = engine.plane
+            delta = float(engine.index.cfg.delta)
+            sink = AlertSink()
+            slo = SLOEngine(default_slos(delta), sink=sink, obs=plane.obs)
+            slo.observe(plane_sources(plane, plane.auditor))
+            state = slo.state()
+            for s in state["slos"]:
+                burning = any(r["active"] for r in s["rules"])
+                log.info("SLO %s: bad_frac=%.4g budget=%g %s", s["name"],
+                         s["bad_frac"], s["budget"],
+                         "BURNING" if burning else "ok")
+            guard = RecallGuardPolicy(sink)
+            decision = guard.recommend(engine.stats)
+            log.info("recall guard: %s (%s)", decision.action,
+                     decision.reason or "no signal")
+            if args.autoscale_apply and apply_guard(engine.index, decision):
+                log.info("applied: serving_fallback=%s retune_requested=%s",
+                         engine.index.serving_fallback,
+                         engine.index.retune_requested)
+    if args.health_dump:
+        from repro.obs import dump_health
+        dump_health(args.health_dump, plane=engine.plane,
+                    index=engine.index)
+        log.info("health snapshot -> %s", args.health_dump)
     if args.metrics_dump or args.trace:
         from repro.obs import dump_events, dump_metrics, get_obs
         obs = get_obs()

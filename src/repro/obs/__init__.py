@@ -22,19 +22,30 @@ from __future__ import annotations
 import os
 from typing import Optional
 
+from repro.obs.audit import (DeltaAuditor, FlightRecorder,
+                             clopper_pearson_upper, exact_topk,
+                             load_bundle, replay_bundle, wilson_upper)
 from repro.obs.export import (dump_events, dump_metrics, events_doc,
                               json_snapshot, prometheus_text)
+from repro.obs.health import (dump_health, health_snapshot,
+                              print_health)
 from repro.obs.jaxmon import compiles_total, install_compile_hook
 from repro.obs.registry import (DEFAULT_MS_BUCKETS, Counter, EventLog,
                                 Gauge, Histogram, MetricsRegistry)
+from repro.obs.slo import (SLO, Alert, AlertSink, BurnRule, SLOEngine,
+                           default_slos, plane_sources)
 from repro.obs.trace import NULL_SPAN, Span, Tracer, new_trace_id
 
 __all__ = [
-    "Counter", "DEFAULT_MS_BUCKETS", "EventLog", "Gauge", "Histogram",
-    "MetricsRegistry", "NULL_SPAN", "ObsContext", "Span", "Tracer",
-    "compiles_total", "dump_events", "dump_metrics", "events_doc",
-    "get_obs", "install_compile_hook", "json_snapshot", "new_trace_id",
-    "prometheus_text", "reset_obs", "set_obs",
+    "Alert", "AlertSink", "BurnRule", "Counter", "DEFAULT_MS_BUCKETS",
+    "DeltaAuditor", "EventLog", "FlightRecorder", "Gauge", "Histogram",
+    "MetricsRegistry", "NULL_SPAN", "ObsContext", "SLO", "SLOEngine",
+    "Span", "Tracer", "clopper_pearson_upper", "compiles_total",
+    "default_slos", "dump_events", "dump_health", "dump_metrics",
+    "events_doc", "exact_topk", "get_obs", "health_snapshot",
+    "install_compile_hook", "json_snapshot", "load_bundle",
+    "new_trace_id", "plane_sources", "print_health", "prometheus_text",
+    "replay_bundle", "reset_obs", "set_obs", "wilson_upper",
 ]
 
 
@@ -51,6 +62,25 @@ class ObsContext:
         self.registry = MetricsRegistry()
         self.events = EventLog(event_capacity)
         self.tracer = Tracer(self.events, enabled=enabled)
+        # ring overflow must be visible, not silent (DESIGN.md §10): every
+        # overwrite counts into the registry, and the FIRST one warns so a
+        # truncated trace never masquerades as a complete one
+        self._drops_counter = self.registry.counter(
+            "repro_obs_event_drops_total",
+            "trace events overwritten before export (ring overflow)",
+            ring=name)
+        self._drop_warned = False
+        self.events.on_drop = self._on_event_drop
+
+    def _on_event_drop(self, ring) -> None:
+        self._drops_counter.inc()
+        if not self._drop_warned:
+            self._drop_warned = True
+            from repro.utils import get_logger
+            get_logger("repro.obs").bind(ring=self.name).warning(
+                "trace event ring overflowed (capacity %d): oldest events "
+                "are being dropped — raise REPRO_OBS_EVENTS or export "
+                "more often", ring.capacity)
 
 
 _default: Optional[ObsContext] = None

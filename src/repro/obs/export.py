@@ -13,14 +13,27 @@ Three stable output shapes, all derivable offline from one ``ObsContext``:
 """
 from __future__ import annotations
 
+import collections
 import json
 from typing import List, Optional
 
 from repro.obs.registry import Counter, Gauge, Histogram, MetricsRegistry
 
 
+def _esc_label(v) -> str:
+    """Label-value escaping per the exposition format: backslash, double
+    quote and newline."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _esc_help(s: str) -> str:
+    """HELP-text escaping: backslash and newline only."""
+    return s.replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _fmt_labels(labels, extra: str = "") -> str:
-    parts = [f'{k}="{v}"' for k, v in labels]
+    parts = [f'{k}="{_esc_label(v)}"' for k, v in labels]
     if extra:
         parts.append(extra)
     return "{" + ",".join(parts) + "}" if parts else ""
@@ -29,37 +42,51 @@ def _fmt_labels(labels, extra: str = "") -> str:
 def _fmt_value(v: float) -> str:
     if v == float("inf"):
         return "+Inf"
+    if v == float("-inf"):
+        return "-Inf"
+    if v != v:
+        return "NaN"
     return repr(v) if isinstance(v, float) and not v.is_integer() \
         else str(int(v))
 
 
 def prometheus_text(registry: MetricsRegistry) -> str:
-    """Prometheus exposition text for every series in the registry."""
-    lines: List[str] = []
-    seen = set()
+    """Prometheus exposition text (text/plain 0.0.4) for every series in
+    the registry. Scraper-conformant: all series of one metric name are
+    emitted contiguously in one group (registration can interleave
+    names), each group carries exactly one ``# TYPE`` (before any sample)
+    and at most one ``# HELP`` (escaped), label values are escaped, and
+    histograms emit cumulative ``le`` buckets + ``+Inf`` + ``_sum`` +
+    ``_count``."""
+    groups: "collections.OrderedDict[str, List[object]]" = \
+        collections.OrderedDict()
     for m in registry.collect():
-        if m.name not in seen:
-            seen.add(m.name)
-            if m.help:
-                lines.append(f"# HELP {m.name} {m.help}")
-            lines.append(f"# TYPE {m.name} {m.kind}")
-        if isinstance(m, (Counter, Gauge)):
-            lines.append(f"{m.name}{_fmt_labels(m.labels)} "
-                         f"{_fmt_value(m.value)}")
-        elif isinstance(m, Histogram):
-            cum = 0
-            for b, c in zip(m.buckets, m.counts):
-                cum += c
-                le = 'le="' + _fmt_value(b) + '"'
+        groups.setdefault(m.name, []).append(m)
+    lines: List[str] = []
+    for name, series in groups.items():
+        help_text = next((m.help for m in series if m.help), "")
+        if help_text:
+            lines.append(f"# HELP {name} {_esc_help(help_text)}")
+        lines.append(f"# TYPE {name} {series[0].kind}")
+        for m in series:
+            if isinstance(m, (Counter, Gauge)):
+                lines.append(f"{m.name}{_fmt_labels(m.labels)} "
+                             f"{_fmt_value(m.value)}")
+            elif isinstance(m, Histogram):
+                cum = 0
+                for b, c in zip(m.buckets, m.counts):
+                    cum += c
+                    le = 'le="' + _fmt_value(b) + '"'
+                    lines.append(f"{m.name}_bucket"
+                                 f"{_fmt_labels(m.labels, le)} {cum}")
+                cum += m.counts[-1]
+                le_inf = 'le="+Inf"'
                 lines.append(f"{m.name}_bucket"
-                             f"{_fmt_labels(m.labels, le)} {cum}")
-            cum += m.counts[-1]
-            le_inf = 'le="+Inf"'
-            lines.append(f"{m.name}_bucket"
-                         f"{_fmt_labels(m.labels, le_inf)} {cum}")
-            lines.append(f"{m.name}_sum{_fmt_labels(m.labels)} "
-                         f"{_fmt_value(m.sum)}")
-            lines.append(f"{m.name}_count{_fmt_labels(m.labels)} {m.count}")
+                             f"{_fmt_labels(m.labels, le_inf)} {cum}")
+                lines.append(f"{m.name}_sum{_fmt_labels(m.labels)} "
+                             f"{_fmt_value(m.sum)}")
+                lines.append(
+                    f"{m.name}_count{_fmt_labels(m.labels)} {m.count}")
     return "\n".join(lines) + "\n"
 
 

@@ -178,11 +178,15 @@ class EventLog:
         self._count = 0       # events currently buffered
         self.total = 0        # events ever appended (lifetime)
         self.drops = 0        # events overwritten before being exported
+        self.on_drop = None   # callback(ring) per overwrite — ObsContext
+                              # wires the drops counter + warn-once here
 
     def append(self, event: dict) -> None:
         i = self._head
         if self._buf[i] is not None:
             self.drops += 1
+            if self.on_drop is not None:
+                self.on_drop(self)
         else:
             self._count += 1
         self._buf[i] = event

@@ -641,3 +641,109 @@ def test_warm_race_precompile_leaves_zero_midtraffic_compiles():
     assert mid == 0, (
         f"{mid} XLA compile(s) fired mid-traffic after a warm race — "
         "the precompile chain no longer covers serving shapes")
+
+
+def test_prometheus_exposition_scraper_conformance():
+    """Satellite (PR 8): parse the exposition text the way a scraper does
+    and enforce the 0.0.4 grammar — all series of one name contiguous even
+    when registration interleaves names, exactly one # TYPE per group
+    emitted before any of its samples, HELP/label escaping, cumulative
+    monotone ``le`` buckets ending at +Inf == _count, and a _sum sample."""
+    obs = ObsContext("t")
+    reg = obs.registry
+    # interleave registrations across names and label sets on purpose
+    reg.counter("repro_x_total", "x events", tenant="a").inc(1)
+    h = reg.histogram("repro_ms", "hist with \\ backslash\nnewline",
+                      buckets=(1.0, 5.0), tenant="a")
+    reg.counter("repro_x_total", "x events", tenant='we"ird\none').inc(2)
+    reg.gauge("repro_g", "a gauge").set(1.5)
+    h2 = reg.histogram("repro_ms", "", buckets=(1.0, 5.0), tenant="b")
+    for v in (0.5, 2.0, 50.0):
+        h.observe(v)
+    h2.observe(0.1)
+    text = prometheus_text(reg)
+    assert text.endswith("\n")
+
+    seen_groups, cur = [], None
+    types, samples = {}, collections.defaultdict(list)
+    for line in text.splitlines():
+        assert line == line.strip() and line
+        if line.startswith("# HELP "):
+            _, name, help_text = line.split(" ", 2)
+            assert "\n" not in help_text        # escaped, single line
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ")
+            assert name not in types, f"duplicate TYPE for {name}"
+            types[name] = kind
+            seen_groups.append(name)
+            cur = name
+            continue
+        sample, value = line.rsplit(" ", 1)
+        base = sample.split("{")[0]
+        for suffix in ("_bucket", "_sum", "_count"):
+            if base.endswith(suffix) and \
+                    base[: -len(suffix)] in types:
+                base = base[: -len(suffix)]
+                break
+        assert base == cur, f"sample {line!r} outside its TYPE group"
+        assert base in types, f"sample before TYPE: {line!r}"
+        samples[sample.split(" ")[0]].append(float(value))
+        samples[base].append(float(value))
+    # contiguous: each name opened exactly one group (the context itself
+    # eagerly registers its ring-drop counter, hence the leading entry)
+    assert seen_groups == ["repro_obs_event_drops_total", "repro_x_total",
+                           "repro_ms", "repro_g"]
+    assert types == {"repro_obs_event_drops_total": "counter",
+                     "repro_x_total": "counter", "repro_ms": "histogram",
+                     "repro_g": "gauge"}
+    # escaped label value survives as one line
+    assert 'tenant="we\\"ird\\none"' in text
+    assert "repro_ms hist with \\\\ backslash\\nnewline" in text
+    # per-series buckets: cumulative, monotone, +Inf == _count
+    for tenant, (c1, c5, cinf, total) in (("a", (1, 2, 3, 3)),
+                                          ("b", (1, 1, 1, 1))):
+        pre = f'repro_ms_bucket{{tenant="{tenant}",'
+        bucket_lines = [l for l in text.splitlines() if l.startswith(pre)]
+        vals = [int(l.rsplit(" ", 1)[1]) for l in bucket_lines]
+        assert vals == sorted(vals) == [c1, c5, cinf]
+        assert f'repro_ms_count{{tenant="{tenant}"}} {total}' in text
+        assert any(l.startswith(f'repro_ms_sum{{tenant="{tenant}"}} ')
+                   for l in text.splitlines())
+
+
+def test_event_ring_overflow_exports_drop_counter_and_warns_once():
+    """Satellite (PR 8): ring overflow is a first-class signal — the drop
+    count exports as ``repro_obs_event_drops_total`` and the first
+    overflow warns through the structured logger exactly once."""
+    from repro.utils.logging import get_logger
+    records = []
+
+    class _Cap(logging.Handler):
+        def emit(self, record):
+            records.append(record.getMessage())
+
+    cap = _Cap(level=logging.WARNING)
+    lg = get_logger("repro.obs")
+    lg.logger.addHandler(cap)
+    try:
+        obs = ObsContext("ovf", event_capacity=4, enabled=True)
+        for i in range(3):
+            obs.tracer.instant(f"e{i}", trace="t")
+        drops = [m for m in obs.registry.collect()
+                 if m.name == "repro_obs_event_drops_total"]
+        assert len(drops) == 1 and drops[0].value == 0
+        assert dict(drops[0].labels)["ring"] == "ovf"
+        assert not records                       # no overflow yet, no noise
+        for i in range(6):
+            obs.tracer.instant(f"f{i}", trace="t")
+        assert obs.events.drops == 5
+        assert drops[0].value == 5               # counter tracks the ring
+        warned = [m for m in records if "ring=ovf" in m]
+        assert len(warned) == 1                  # warn-once, not per-event
+        assert "4" in warned[0]                  # names the capacity
+    finally:
+        lg.logger.removeHandler(cap)
+    # the Prometheus view carries it too
+    assert 'repro_obs_event_drops_total{ring="ovf"} 5' in \
+        prometheus_text(obs.registry)

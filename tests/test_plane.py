@@ -358,15 +358,16 @@ def test_blocking_shim_matches_index_query_and_caches():
 def test_serve_stats_v3_schema_and_legacy_keys():
     """PR-6 satellite: as_dict() carries the obs_* fields; the v2
     plane_* and legacy ``knn_*`` keys keep working (schema bumped 3 -> 4
-    in PR 7 for QuerySpec.use_tuned)."""
+    in PR 7 for QuerySpec.use_tuned, 4 -> 5 in PR 8 for the audit/SLO
+    fields)."""
     from repro.api import ServeStats
     from repro.api.spec import SCHEMA_VERSION
-    assert SCHEMA_VERSION == 4
+    assert SCHEMA_VERSION == 5
     idx, queries = _dense_index()
     plane = RequestPlane(idx)
     plane.query(queries, rng=jax.random.PRNGKey(1))
     d = plane.stats.as_dict()
-    assert d["schema_version"] == 4
+    assert d["schema_version"] == 5
     for f in ("plane_submitted", "plane_shed", "plane_queue_depth",
               "plane_latency_p99_ms", "obs_events", "obs_event_drops",
               "obs_epoch_ms", "obs_latency_ms"):

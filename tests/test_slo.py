@@ -1,0 +1,466 @@
+"""PR-8 coverage (DESIGN.md §10): the shadow δ-auditor's exact oracle
+(parity with the racing drivers across dense / sparse / sharded boxes),
+the Wilson / Clopper–Pearson error-rate bounds, the off-critical-path
+property of the audit reservoir, the injected-failure regression (a wrong
+answer below the plane is caught, bundled, and replayed by
+``tools/replay_audit.py``), the multi-window burn-rate SLO engine
+(rising-edge fire + resolve), the recall guard → fallback → re-tune
+chain on the live handle, and the health snapshot rollup.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Deadline, Index, QuerySpec
+from repro.configs.base import BMOConfig
+from repro.data.synthetic import clustered_sparse, make_knn_benchmark_data
+from repro.obs import ObsContext
+from repro.obs.audit import (DeltaAuditor, FlightRecorder, check_topk,
+                             clopper_pearson_upper, exact_theta_of,
+                             exact_topk, load_bundle, replay_bundle,
+                             wilson_upper)
+from repro.obs.slo import (SLO, AlertSink, BurnRule, SLOEngine,
+                           default_slos, plane_sources)
+from repro.serve.plane import PlaneConfig, RequestPlane
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(prog: str, devices: int = 4, timeout: int = 560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c",
+                          "import repro\n" + textwrap.dedent(prog)],
+                         capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=timeout)
+    assert out.returncode == 0 and "OK" in out.stdout, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+
+
+def _dense_index(n=256, d=256, Q=4, seed=1, **kw):
+    corpus, queries = make_knn_benchmark_data("dense", n, d, Q, seed=seed)
+    cfg = dict(k=4, delta=0.05, block=64, batch_arms=16, metric="l2")
+    cfg.update(kw)
+    return (Index.build(corpus, BMOConfig(**cfg), jax.random.PRNGKey(0)),
+            queries)
+
+
+# -- estimator bounds --------------------------------------------------------
+
+def test_error_bounds_properties():
+    # no evidence -> no claim
+    assert wilson_upper(0, 0) == 1.0
+    assert clopper_pearson_upper(0, 0) == 1.0
+    # monotone in failures, bounded in [point estimate, 1]
+    prev = 0.0
+    for f in range(0, 20):
+        u = wilson_upper(f, 20)
+        assert u >= f / 20 - 1e-12 and u <= 1.0
+        assert u > prev
+        prev = u
+    # more clean evidence -> tighter bound
+    assert wilson_upper(0, 1000) < wilson_upper(0, 100) < wilson_upper(0, 10)
+    # the exact CP bound has coverage >= the asymptotic Wilson bound on
+    # clean streaks (both shrink toward 0; CP is the conservative one)
+    for n in (10, 100, 1000):
+        assert clopper_pearson_upper(0, n) >= wilson_upper(0, n)
+    # CP closed form on zero failures: 1 - (1-conf)^(1/n)
+    n = 50
+    assert clopper_pearson_upper(0, n, confidence=0.95) == \
+        pytest.approx(1.0 - 0.05 ** (1.0 / n), rel=1e-4)
+    with pytest.raises(ValueError):
+        wilson_upper(5, 3)
+    with pytest.raises(ValueError):
+        clopper_pearson_upper(-1, 3)
+
+
+# -- the exact oracle --------------------------------------------------------
+
+def test_exact_oracle_parity_dense():
+    idx, queries = _dense_index(delta=0.01)
+    ids, vals = exact_topk(idx.store, queries, 4)
+    res = idx.query(queries, jax.random.PRNGKey(3), cache="bypass")
+    # a certified race answers the exact top-k with prob >= 1-δ; at δ=0.01
+    # on 4 queries a mismatch here means the oracle is wrong, not the race
+    chk = check_topk(idx.store, queries, res.indices, 4)
+    assert chk.mismatches == 0
+    assert np.all(np.diff(vals, axis=1) >= -1e-12)      # ascending θ
+    # exact_theta_of agrees with exact_topk on its own ids
+    theta = exact_theta_of(idx.store, queries, ids)
+    assert np.allclose(theta, vals, rtol=1e-5, atol=1e-6)
+    # invalid / tombstoned ids price at inf
+    bad = ids.copy()
+    bad[0, 0] = -1
+    assert np.isinf(exact_theta_of(idx.store, queries, bad)[0, 0])
+    idx.delete([int(ids[1, 0])])
+    assert np.isinf(exact_theta_of(idx.store, queries, ids)[1, 0])
+
+
+def test_exact_oracle_parity_sparse():
+    from repro.core.datasets import SparseDataset
+    corpus = clustered_sparse(150, 2048, seed=4)
+    ds = SparseDataset.build(corpus)
+    queries = (ds.indices[:3], ds.values[:3], ds.nnz[:3])
+    cfg = BMOConfig(k=3, delta=0.01, block=1, batch_arms=16,
+                    pulls_per_round=8, init_pulls=16, metric="l1",
+                    sparse=True)
+    idx = Index.build(corpus, cfg, jax.random.PRNGKey(0))
+    res = idx.query(queries, jax.random.PRNGKey(5), cache="bypass")
+    chk = check_topk(idx.store, queries, res.indices, 3)
+    assert chk.mismatches == 0
+    ids, vals = exact_topk(idx.store, queries, 3)
+    assert np.allclose(np.sort(vals, axis=1), vals)
+
+
+def test_exact_oracle_parity_sharded():
+    _run("""
+        import jax, numpy as np
+        from repro.api import Index
+        from repro.configs.base import BMOConfig
+        from repro.data.synthetic import make_knn_benchmark_data
+        from repro.obs.audit import check_topk, exact_topk
+
+        corpus, queries = make_knn_benchmark_data("dense", 256, 256, 4,
+                                                  seed=2)
+        cfg = BMOConfig(k=4, delta=0.01, block=64, batch_arms=16,
+                        metric="l2")
+        idx = Index.build(corpus, cfg, jax.random.PRNGKey(0), shards=4)
+        res = idx.query(queries, jax.random.PRNGKey(3), cache="bypass")
+        chk = check_topk(idx.store, queries, res.indices, 4)
+        assert chk.mismatches == 0, chk.row_mismatch
+        ids, vals = exact_topk(idx.store, queries, 4)
+        assert set(map(int, ids.ravel())) == \\
+            set(map(int, np.asarray(res.indices).ravel()))
+        print("OK")
+    """)
+
+
+def test_check_topk_flags_wrong_and_duplicate_ids():
+    idx, queries = _dense_index()
+    res = idx.query(queries, jax.random.PRNGKey(3), cache="bypass")
+    served = np.asarray(res.indices).copy()
+    assert check_topk(idx.store, queries, served, 4).mismatches == 0
+    # a duplicated neighbor id = some true neighbor missing -> mismatch,
+    # regardless of how the distances tie
+    dup = served.copy()
+    dup[0, 0] = dup[0, 1]
+    chk = check_topk(idx.store, queries, dup, 4)
+    assert chk.row_mismatch[0] and chk.mismatches == 1
+    # an id with θ far above the exact k-th -> mismatch on that row only
+    ids, vals = exact_topk(idx.store, queries, idx.store.capacity // 2)
+    wrong = served.copy()
+    wrong[1, 0] = int(ids[1, -1])          # the worst candidate we know
+    chk = check_topk(idx.store, queries, wrong, 4)
+    assert chk.row_mismatch[1] and not chk.row_mismatch[0]
+
+
+# -- the shadow auditor on the plane ----------------------------------------
+
+def test_auditor_clean_run_and_off_critical_path():
+    idx, queries = _dense_index()
+    obs = ObsContext("t", enabled=True)
+    plane = RequestPlane(idx, PlaneConfig(audit_rate=1.0), obs=obs)
+    for i in range(3):
+        plane.submit(queries + 0.001 * i, rng=jax.random.PRNGKey(10 + i),
+                     cache="bypass")
+    plane.drain()
+    # the oracle has NOT run yet: sampling at _finish only copies arrays
+    # into the reservoir — drain()'s steps all started non-idle
+    assert plane.auditor.pending == 3
+    assert plane.auditor.sampled_rows == 0
+    # an idle step (nothing queued, nothing racing) pays for ONE item
+    plane.step()
+    assert plane.auditor.pending == 2
+    assert plane.audit_flush() == 2
+    s = plane.auditor.summary()
+    assert s["mismatch_rows"] == 0
+    assert s["sampled_rows"] == 3 * queries.shape[0]
+    assert 0.0 < s["err_upper"] < 1.0
+    st = plane.stats
+    assert st.audit_sampled == s["sampled_rows"]
+    assert st.audit_mismatches == 0 and st.audit_pending == 0
+    assert st.audit_err_upper == pytest.approx(s["err_upper"])
+
+
+def test_auditor_skips_uncertified_and_stale_epochs():
+    idx, queries = _dense_index(n=512, d=1024)
+    plane = RequestPlane(idx, PlaneConfig(audit_rate=1.0),
+                         obs=ObsContext("t", enabled=True))
+    # a deadline exit is partial: it never claimed the full 1-δ contract
+    plane.submit(queries, rng=jax.random.PRNGKey(1), cache="bypass",
+                 deadline=Deadline(ms=1e-3))
+    plane.drain()
+    assert plane.auditor.summary()["skipped"]["uncertified"] >= 1
+    # sample a certified ticket, then mutate the store before the oracle
+    # runs: the ground truth moved, the item must be skipped, not judged
+    plane.submit(queries, rng=jax.random.PRNGKey(2), cache="bypass")
+    plane.drain()
+    assert plane.auditor.pending == 1
+    idx.insert(np.asarray(queries[:1]))           # epoch fence bump
+    assert plane.audit_flush() == 1               # processed = skipped
+    s = plane.auditor.summary()
+    assert s["skipped"]["stale_epoch"] == 1
+    assert s["sampled_rows"] == 0
+
+
+def test_auditor_sampling_rate_and_reservoir_bound():
+    idx, queries = _dense_index()
+    auditor = DeltaAuditor(idx, rate=0.0, seed=7)
+    r = auditor.offer(trace_id="t", tenant="a", store_epoch=idx.epoch,
+                      contract="default", k=2, delta=0.05,
+                      queries=np.asarray(queries),
+                      served_ids=np.zeros((4, 2), np.int64),
+                      served_vals=np.zeros((4, 2)))
+    assert not r and auditor.pending == 0         # rate 0 samples nothing
+    auditor = DeltaAuditor(idx, rate=1.0, reservoir=2, seed=7)
+    for i in range(5):
+        auditor.offer(trace_id=f"t{i}", tenant="a", store_epoch=idx.epoch,
+                      contract="default", k=2, delta=0.05,
+                      queries=np.asarray(queries),
+                      served_ids=np.zeros((4, 2), np.int64),
+                      served_vals=np.zeros((4, 2)))
+    assert auditor.pending == 2                   # drop-oldest, bounded
+    assert auditor.dropped == 3
+    with pytest.raises(ValueError):
+        DeltaAuditor(idx, rate=1.5)
+    with pytest.raises(ValueError):
+        auditor.offer(trace_id="t", tenant="a", store_epoch=0,
+                      contract="nonsense", k=2, delta=0.05,
+                      queries=np.asarray(queries),
+                      served_ids=np.zeros((4, 2), np.int64),
+                      served_vals=np.zeros((4, 2)))
+
+
+def test_injected_failure_caught_bundled_and_replayed(tmp_path):
+    """Satellite 3: corrupt ONE served result BELOW the plane — scheduler,
+    cache and certification all believe it — and assert the auditor flags
+    exactly that ticket, writes a replayable bundle, and
+    tools/replay_audit.py reproduces the mismatch offline."""
+    idx, queries = _dense_index()
+    obs = ObsContext("t", enabled=True)
+    bundles = tmp_path / "bundles"
+    plane = RequestPlane(idx, PlaneConfig(audit_rate=1.0,
+                                          audit_dir=str(bundles)), obs=obs)
+    good = plane.submit(queries, rng=jax.random.PRNGKey(1), cache="bypass")
+    plane.drain()
+
+    real_build = plane._build_result
+
+    def corrupted(entry, terminal, reason):
+        res = real_build(entry, terminal, reason)
+        if terminal and reason == "certified":
+            res.indices[0, 0] = res.indices[0, 1]
+            plane._build_result = real_build       # one ticket only
+        return res
+
+    plane._build_result = corrupted
+    bad = plane.submit(queries + 0.002, rng=jax.random.PRNGKey(2),
+                       cache="bypass")
+    plane.drain()
+    plane.audit_flush()
+    s = plane.auditor.summary()
+    assert s["mismatch_rows"] == 1
+    assert len(s["bundles"]) == 1
+    bundle = s["bundles"][0]
+
+    doc, arrays = load_bundle(bundle)
+    assert doc["trace_id"] == bad.trace_id        # that ticket, not good's
+    assert doc["trace_id"] != good.trace_id
+    assert doc["mismatch_rows"] == [0]
+    assert arrays["served_ids"][0, 0] == arrays["served_ids"][0, 1]
+    # the bundle carries the ticket's trace events as evidence
+    assert any(e.get("trace") == bad.trace_id for e in doc["events"])
+
+    # in-process replay on the live handle: deterministic reproduction
+    rep = replay_bundle(idx, bundle)
+    assert rep["reproduced"] and rep["epoch_match"]
+    assert rep["mismatch_rows_now"] == [0]
+
+    # offline replay through the CLI against a save/load round-trip
+    index_dir = tmp_path / "idx"
+    idx.save(str(index_dir))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "replay_audit.py"),
+         "--index-dir", str(index_dir), "--json",
+         str(tmp_path / "replay.json"), bundle],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "REPRODUCED" in out.stdout
+    rep_doc = json.loads((tmp_path / "replay.json").read_text())
+    assert rep_doc["reports"][0]["reproduced"]
+
+    # stats + health reflect the violation (err_rate 1/20 == δ boundary
+    # is fine; the Wilson upper bound is what trips `violated`)
+    st = plane.stats
+    assert st.audit_mismatches == 1
+    from repro.obs import health_snapshot
+    doc = health_snapshot(plane=plane)
+    assert not doc["ok"] and len(doc["violations"]) == 1
+    json.dumps(doc)                               # JSON-safe end to end
+
+
+# -- SLO burn-rate engine ----------------------------------------------------
+
+def _engine(budget=0.05, min_events=1, obs=None):
+    rules = (BurnRule(long_s=60.0, short_s=5.0, factor=10.0,
+                      severity="page"),
+             BurnRule(long_s=300.0, short_s=30.0, factor=2.0,
+                      severity="ticket"))
+    clock = {"t": 0.0}
+    slo = SLO(name="recall", source="recall", budget=budget, rules=rules,
+              min_events=min_events)
+    eng = SLOEngine((slo,), obs=obs, clock=lambda: clock["t"])
+    return eng, clock
+
+
+def test_slo_fire_and_resolve_edges():
+    obs = ObsContext("t", enabled=True)
+    eng, clock = _engine(budget=0.05, obs=obs)
+    # clean traffic: no alerts no matter how long
+    for t in range(0, 120, 5):
+        clock["t"] = float(t)
+        assert eng.observe({"recall": (0.0, float(10 * (t + 1)))}) == []
+    assert eng.active_alerts == []
+    # everything failing: burn = 1/0.05 = 20x >= both factors -> both
+    # rules fire ONCE (rising edge), not on every observation
+    clock["t"] = 125.0
+    fired = eng.observe({"recall": (600.0, 1250.0)})
+    assert {a.severity for a in fired} == {"page", "ticket"}
+    clock["t"] = 130.0
+    assert eng.observe({"recall": (650.0, 1300.0)}) == []   # still burning
+    assert len(eng.active_alerts) == 2
+    assert eng.sink.active("recall")
+    # recovery: clean traffic pushes the short window burn under the
+    # factor -> the page rule (5s short window) resolves first
+    for t in range(135, 460, 5):
+        clock["t"] = float(t)
+        eng.observe({"recall": (650.0, 650.0 + 10.0 * t)})
+    assert eng.active_alerts == []
+    resolves = [a for a in eng.sink.alerts if not a.active]
+    assert len(resolves) == 2
+    # the lifetime counter saw exactly the two rising edges
+    fired_total = sum(m.value for m in obs.registry.collect()
+                      if m.name == "repro_slo_alerts_total")
+    assert fired_total == 2
+    assert eng.alerts_fired == 2
+
+
+def test_slo_min_events_gate_and_validation():
+    eng, clock = _engine(budget=0.01, min_events=100)
+    clock["t"] = 1.0
+    # 5 bad of 5: 100% bad but under min_events -> no alert
+    assert eng.observe({"recall": (5.0, 5.0)}) == []
+    clock["t"] = 2.0
+    assert eng.observe({"recall": (200.0, 200.0)}) != []
+    with pytest.raises(ValueError):
+        SLO(name="x", source="x", budget=0.0)
+    with pytest.raises(ValueError):
+        BurnRule(long_s=5.0, short_s=60.0, factor=2.0)
+    with pytest.raises(ValueError):
+        BurnRule(long_s=60.0, short_s=5.0, factor=2.0, severity="sms")
+    with pytest.raises(ValueError):
+        SLOEngine((SLO(name="a", source="s", budget=0.1),
+                   SLO(name="a", source="s", budget=0.2)))
+
+
+def test_default_slos_and_plane_sources():
+    slos = default_slos(0.05, latency_ms=50.0)
+    assert [s.name for s in slos] == ["recall", "latency", "shed"]
+    assert slos[0].budget == 0.05                 # budget IS the paper's δ
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx, PlaneConfig(audit_rate=1.0),
+                         obs=ObsContext("t", enabled=True))
+    plane.submit(queries, rng=jax.random.PRNGKey(1), cache="bypass")
+    plane.drain()
+    plane.audit_flush()
+    src = plane_sources(plane, latency_ms=50.0)
+    bad, total = src["recall"]
+    assert total == queries.shape[0] and bad == 0.0
+    assert src["shed"][1] == 1.0                  # 1 submission, 0 shed
+    lat_bad, lat_total = src["latency"]
+    assert lat_total == 1.0 and 0.0 <= lat_bad <= lat_total
+    # engine state() round-trips to JSON
+    eng = SLOEngine(slos)
+    eng.observe(src)
+    json.dumps(eng.state())
+
+
+# -- recall guard on the live handle ----------------------------------------
+
+def test_recall_guard_fallback_and_retune_chain():
+    from repro.obs.slo import Alert
+    from repro.serve.scale import (RecallGuardPolicy, ScaleDecision,
+                                   apply_guard)
+    from repro.tune import TunedConfig
+    idx, queries = _dense_index()
+    # install a tuned config the cheap way (identity knobs, measured stamp)
+    tuned = TunedConfig.from_cfg(idx.cfg).with_measured(epoch_ms=1.0,
+                                                        round_ms=0.0)
+    idx._apply_tuned(tuned)
+    assert idx._serving_tuned(QuerySpec())
+    epoch_before = idx.epoch
+
+    sink = AlertSink()
+    guard = RecallGuardPolicy(sink)
+    assert guard.recommend(idx.stats).action == "none"     # healthy
+
+    sink.emit(Alert(slo="recall", severity="page", rule="10x/60s",
+                    burn_long=20.0, burn_short=20.0, bad_frac=1.0,
+                    budget=0.05, at=0.0))
+    d1 = guard.recommend(idx.stats)
+    assert d1.action == "fallback_untuned" and "burning" in d1.reason
+    assert apply_guard(idx, d1)
+    assert idx.serving_fallback
+    # fallback is a COST decision, not a correctness event: no epoch bump
+    assert idx.epoch == epoch_before
+    assert not idx._serving_tuned(QuerySpec())             # served untuned
+    assert idx._query_cfg(QuerySpec()) == QuerySpec().bind(idx._base_cfg)
+
+    d2 = guard.recommend(idx.stats)
+    assert d2.action == "retune"
+    assert apply_guard(idx, d2)
+    assert idx.retune_requested and "burning" in idx.retune_reason
+    assert guard.recommend(idx.stats).action == "none"     # chain complete
+
+    # a fresh tune() lifts the fallback and clears the re-tune flag
+    idx.tune(rng=jax.random.PRNGKey(13), queries=np.asarray(queries))
+    assert not idx.serving_fallback and not idx.retune_requested
+    assert idx._serving_tuned(QuerySpec())
+
+    with pytest.raises(ValueError):
+        ScaleDecision(action="reboot")
+    assert not apply_guard(idx, ScaleDecision())           # none is a no-op
+
+
+def test_health_snapshot_shapes(tmp_path):
+    from repro.obs import dump_health, health_snapshot
+    idx, queries = _dense_index()
+    plane = RequestPlane(idx, PlaneConfig(audit_rate=1.0),
+                         obs=ObsContext("t", enabled=True))
+    plane.submit(queries, rng=jax.random.PRNGKey(1), cache="bypass")
+    plane.drain()
+    plane.audit_flush()
+    slos = default_slos(float(idx.cfg.delta))
+    eng = SLOEngine(slos)
+    eng.observe(plane_sources(plane))
+    p = tmp_path / "health.json"
+    doc = dump_health(str(p), plane=plane, slo=eng)
+    parsed = json.loads(p.read_text())
+    assert parsed["ok"] is True
+    assert parsed["schema_version"] == doc["schema_version"]
+    assert parsed["stats"]["audit_sampled"] == queries.shape[0]
+    assert parsed["index"]["delta"] == pytest.approx(0.05)
+    assert parsed["audit"]["mismatch_rows"] == 0
+    assert [s["name"] for s in parsed["slo"]["slos"]] == ["recall", "shed"]
+    # a forced fallback alone flips the rollup
+    idx.force_untuned(True)
+    assert health_snapshot(plane=plane)["ok"] is False

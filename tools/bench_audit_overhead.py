@@ -1,0 +1,135 @@
+"""Measure the serving-side overhead of the shadow δ-auditor
+(DESIGN.md §10.6 — the PR 8 acceptance gate: ≤ 2% qps at audit_rate=0.05).
+
+What the auditor charges the serving path is ONLY ``offer()``: an RNG
+draw plus array copies into a bounded reservoir. The oracle itself runs
+off-path (``audit_flush`` after the timed window here; idle plane steps
+in production). This bench isolates that charge the same way the PR 6
+tracing-overhead bench did:
+
+  * ONE process, ONE index, ONE jit cache — both arms race identical
+    query batches through identical ``RequestPlane``s, differing only in
+    ``audit_rate`` (0.05 vs 0.0).
+  * paired A/B rounds with ALTERNATING order (A,B then B,A), so drift
+    (thermal, allocator) cancels instead of biasing one arm.
+  * the reported statistic is the MEDIAN over rounds of the per-round
+    qps ratio — robust to a straggler round.
+
+    PYTHONPATH=src python tools/bench_audit_overhead.py --smoke
+    PYTHONPATH=src python tools/bench_audit_overhead.py \
+        --out BENCH_audit_overhead.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.api import Index
+from repro.configs.base import BMOConfig
+from repro.data.synthetic import make_knn_benchmark_data
+from repro.serve.plane import PlaneConfig, RequestPlane
+
+
+def _run_round(plane, reqs, seed0):
+    """Submit + drain every request batch; returns elapsed seconds."""
+    t = time.perf_counter()
+    for i, r in enumerate(reqs):
+        plane.submit(r, rng=jax.random.PRNGKey(seed0 + i), cache="bypass")
+    plane.drain()
+    return time.perf_counter() - t
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=2048)
+    ap.add_argument("--q", type=int, default=4)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--requests", type=int, default=24,
+                    help="request batches per round per arm")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--audit-rate", type=float, default=0.05)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.n, args.d, args.requests, args.rounds = 1024, 1024, 10, 4
+
+    t0 = time.perf_counter()
+    corpus, _ = make_knn_benchmark_data("dense", args.n, args.d, 2,
+                                        seed=args.seed)
+    cfg = BMOConfig(k=args.k, delta=0.05, block=min(128, args.d),
+                    batch_arms=32, metric="l2")
+    index = Index.build(corpus, cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(args.seed + 1)
+    reqs = [(corpus[rng.integers(0, args.n, args.q)]
+             + 0.05 * rng.normal(size=(args.q, args.d))).astype(np.float32)
+            for _ in range(args.requests)]
+
+    mk = lambda rate: RequestPlane(index, PlaneConfig(
+        audit_rate=rate, audit_reservoir=args.requests * args.rounds + 8))
+    audited, plain = mk(args.audit_rate), mk(0.0)
+
+    # warm both arms with one FULL untimed round each: the scheduler
+    # coalesces concurrent tickets into larger group sizes than any single
+    # submit reaches, and those pow2 specializations must compile before
+    # either arm's clock starts (they share one jit cache anyway)
+    for p in (audited, plain):
+        _run_round(p, reqs, seed0=1)
+
+    n_queries = args.requests * args.q
+    qps_a, qps_p, ratios = [], [], []
+    for r in range(args.rounds):
+        pair = [(audited, qps_a), (plain, qps_p)]
+        if r % 2:                           # alternate order per round
+            pair.reverse()
+        for plane, sink in pair:
+            dt = _run_round(plane, reqs, seed0=1000 * (r + 1))
+            sink.append(n_queries / dt)
+        ratios.append(qps_a[-1] / qps_p[-1])
+
+    # the oracle bill is paid here, after every timed window closed
+    t_flush = time.perf_counter()
+    flushed = audited.audit_flush()
+    flush_s = time.perf_counter() - t_flush
+    a = audited.auditor.summary()
+
+    overhead = 1.0 - float(np.median(ratios))
+    out = {
+        "schema_version": 1,
+        "config": {"n": args.n, "d": args.d, "q": args.q, "k": args.k,
+                   "requests": args.requests, "rounds": args.rounds,
+                   "audit_rate": args.audit_rate,
+                   "smoke": bool(args.smoke)},
+        "qps_audited_median": round(float(np.median(qps_a)), 2),
+        "qps_plain_median": round(float(np.median(qps_p)), 2),
+        "qps_ratio_per_round": [round(x, 4) for x in ratios],
+        "qps_ratio_median": round(float(np.median(ratios)), 4),
+        "overhead_frac": round(overhead, 4),
+        "budget_frac": 0.02,
+        "within_budget": bool(overhead <= 0.02),
+        "audit": {"flushed_tickets": flushed,
+                  "sampled_rows": a["sampled_rows"],
+                  "mismatch_rows": a["mismatch_rows"],
+                  "err_upper": round(a["err_upper"], 6),
+                  "offpath_flush_s": round(flush_s, 3)},
+        "wall_s": round(time.perf_counter() - t0, 1),
+    }
+    print(json.dumps(out, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"[bench_audit_overhead] wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -71,6 +71,15 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="small preset for CI (<~2 min)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--audit-rate", type=float, default=0.0,
+                    help="shadow δ-audit sampling rate on the plane side "
+                         "(the oracle runs AFTER the timed window; the "
+                         "JSON gains an 'audit' section)")
+    ap.add_argument("--audit-dir", default="", metavar="DIR",
+                    help="flight-recorder bundle directory for audited "
+                         "mismatches")
+    ap.add_argument("--health-dump", default="", metavar="PATH",
+                    help="write the health/SLO snapshot here on exit")
     ap.add_argument("--out", default="")
     ap.add_argument("--metrics-dump", default="", metavar="PATH",
                     help="write the obs metrics registry here on exit "
@@ -123,7 +132,10 @@ def main(argv=None):
 
     # -- request plane: open-loop submit + cooperative scheduler ------------
     plane = RequestPlane(index, PlaneConfig(
-        max_group_queries=max(args.q * 8, 16)))
+        max_group_queries=max(args.q * 8, 16),
+        audit_rate=args.audit_rate,
+        audit_reservoir=max(256, args.requests),
+        audit_dir=args.audit_dir or None))
     # warm the pow2 group-size specializations outside the timed window
     for size in {args.q, 2 * args.q, 4 * args.q, 8 * args.q}:
         warm = [plane.submit(reqs[0] + j, rng=jax.random.PRNGKey(7 + j),
@@ -158,12 +170,37 @@ def main(argv=None):
                          if bounded[j]]
     lat_base_bounded = [lat_base[j] for j in range(args.requests)
                         if bounded[j]]
+
+    # -- post-drain shadow audit (UNTIMED: the oracle runs after the
+    # latency window closes, so it cannot contaminate the measurement) -----
+    audit = None
+    if plane.auditor is not None:
+        flushed = plane.audit_flush()
+        a = plane.auditor.summary()
+        audited_recall = (1.0 - a["mismatch_rows"] / a["sampled_rows"]
+                          if a["sampled_rows"] else None)
+        audit = {
+            "rate": args.audit_rate,
+            "flushed_tickets": flushed,
+            "sampled_rows": a["sampled_rows"],
+            "mismatch_rows": a["mismatch_rows"],
+            "audited_recall": (round(audited_recall, 6)
+                               if audited_recall is not None else None),
+            "err_upper": round(a["err_upper"], 6),
+            "method": a["method"],
+            "delta": cfg.delta,
+            "skipped": a["skipped"],
+            "bundles": a["bundles"],
+        }
+        print(f"[bench_serve_plane] audit: {a['sampled_rows']} rows, "
+              f"{a['mismatch_rows']} mismatches, "
+              f"err_upper={a['err_upper']:.4g} vs delta={cfg.delta}")
     st = plane.stats
 
     reasons = [t_.result.reason for t_ in tickets]
     certified = [int(np.min(t_.result.certified_count)) for t_ in tickets]
     out = {
-        "schema_version": 3,
+        "schema_version": 4,      # v4: optional "audit" section (PR 8)
         "config": {"n": args.n, "d": args.d, "q": args.q, "k": args.k,
                    "requests": args.requests, "load": args.load,
                    "deadline_ms": round(deadline_ms, 3),
@@ -188,7 +225,14 @@ def main(argv=None):
             if lat_base_bounded and lat_plane_bounded else None),
         "wall_s": round(time.perf_counter() - t0, 1),
     }
+    if audit is not None:
+        out["audit"] = audit
     print(json.dumps(out, indent=1))
+    if args.health_dump:
+        from repro.obs import dump_health
+        doc = dump_health(args.health_dump, plane=plane)
+        print(f"[bench_serve_plane] wrote {args.health_dump} "
+              f"(ok={doc['ok']})")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(out, f, indent=1)
