@@ -36,6 +36,15 @@ The tail demos the PR-5 **async request plane** (DESIGN.md §7): submit an
 anytime ticket against ``engine.plane``, stream certified-prefix partials,
 exit early once enough of the answer is certified, then run a
 deadline-bounded query that returns its certified prefix at expiry.
+
+With ``--fleet`` the walkthrough adds the PR-9 **namespace fleet**
+(DESIGN.md §11): three namespaces on one shared plane with an LRU
+residency budget of two — create → query by ``namespace=`` label → force
+an eviction → watch the next query reload the checkpoint transparently
+with bit-identical top-k → drop one and recover the rest from the
+manifest via ``Fleet.open``:
+
+    PYTHONPATH=src python examples/knn_serve.py --fleet
 """
 import argparse
 import os
@@ -64,6 +73,11 @@ _ap.add_argument("--audit", action="store_true",
 _ap.add_argument("--audit-dir", default="", metavar="DIR",
                  help="where --audit writes flight-recorder bundles "
                       "(default: a temp dir)")
+_ap.add_argument("--fleet", action="store_true",
+                 help="PR-9 walkthrough: a 3-namespace fleet (2 resident) "
+                      "on one shared request plane — transparent LRU "
+                      "eviction/reload, bit-identical post-reload top-k, "
+                      "manifest recovery (repro.fleet, DESIGN.md §11)")
 ARGS = _ap.parse_args()
 if ARGS.shards > 1 and "xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", ""):
@@ -340,6 +354,50 @@ def main():
         print("replay: recorded mismatch reproduced against the reloaded "
               "index (exit 0)")
         print_health(health_snapshot(plane=plane), out=sys.stdout)
+
+    # -- PR-9: the namespace fleet (DESIGN.md §11) -------------------------
+    # Thousands of per-tenant collections can't each own a mesh. A Fleet
+    # multiplexes named namespaces over ONE plane: an LRU residency budget
+    # keeps the hot few in memory, everything else lives as a checkpoint
+    # and reloads transparently (bit-identically) on its next query.
+    if ARGS.fleet:
+        from repro.fleet import Fleet, FleetConfig
+
+        root = tempfile.mkdtemp(prefix="bmo_fleet_") + "/fleet"
+        fleet = Fleet(root, FleetConfig(max_resident=2))
+        fan = np.random.default_rng(3)
+        for name in ("wiki", "code", "mail"):
+            corpus = (keys + fan.normal(scale=0.05, size=keys.shape)
+                      ).astype(np.float32)
+            fleet.create(name, corpus, knn.bmo, jax.random.PRNGKey(7),
+                         payload=next_ids)
+        print(f"fleet @ {root}: {len(fleet)} namespaces, "
+              f"{fleet.resident_count} resident (budget 2) — 'wiki' was "
+              "LRU-evicted to its checkpoint at the third create")
+        fplane = fleet.serve()
+        q = keys[:2]
+        before = fplane.query(q, rng=jax.random.PRNGKey(77),
+                              namespace="code")
+        assert fleet.evict("code")
+        after = fplane.query(q, rng=jax.random.PRNGKey(77),
+                             namespace="code")     # transparent reload
+        assert before.indices.tolist() == after.indices.tolist()
+        print("evict('code') → checkpoint; its next query reloaded it "
+              f"transparently with bit-identical top-k "
+              f"(reloads={fleet.reload_count})")
+        wiki = fplane.query(q, rng=jax.random.PRNGKey(78), namespace="wiki")
+        print(f"cold 'wiki' served through the SAME plane: "
+              f"k={wiki.indices.shape[1]}, reason={wiki.reason}")
+        st = fplane.stats
+        print(f"fleet plane stats: resident={st.fleet_namespaces_resident} "
+              f"evicted={st.fleet_namespaces_evicted} "
+              f"reloads={st.fleet_reloads}")
+        fleet.drop("mail")
+        assert "mail" not in fleet and len(fleet) == 2
+        reopened = Fleet.open(root)
+        assert sorted(reopened.namespaces) == ["code", "wiki"]
+        print(f"drop('mail') + Fleet.open(root): manifest recovered "
+              f"{len(reopened)} namespaces — {sorted(reopened.namespaces)}")
 
     print("note: at this smoke scale (d=64, n≈500) exact search is cheap; "
           "the bandit gain appears at the paper's d≈4k–28k regime "

@@ -86,6 +86,8 @@ class Index:
                                   else CompactionPolicy())
         self._cache = (QueryCache(self.cache_policy.capacity)
                        if self.cache_policy.capacity > 0 else None)
+        self._cache_ns: Optional[str] = None  # fleet-set namespace label; a
+                                              # shared cache keys/fences on it
         self._payload = payload
         self._build_gids = build_gids
         self._epoch = 0
@@ -318,7 +320,9 @@ class Index:
         self._store = store
         self._epoch += 1
         if self._cache is not None:
-            self._cache.clear()
+            # a standalone handle (_cache_ns=None) owns the whole cache; a
+            # fleet-owned handle shares it and may only fence its own slice
+            self._cache.clear(self._cache_ns)
         self._replica_stores = None
         new_shards = store.n_shards if hasattr(store, "shards") else None
         if new_shards != old_shards:
@@ -434,7 +438,8 @@ class Index:
         base = np.asarray(self._store.prior_var, np.float32)
         rows, found = [], False
         for i in miss:
-            near = self._cache.get_near(hid[i], pol.near_threshold)
+            near = self._cache.get_near(hid[i], pol.near_threshold,
+                                        self._cache_ns)
             if near is None:
                 rows.append(base)
             else:
@@ -483,7 +488,7 @@ class Index:
         coord_ops = np.zeros((Q,), np.float32)
         rounds = np.zeros((Q,), np.int32)
         n_exact = np.zeros((Q,), np.int32)
-        keys = [QueryCache.key(row) for row in hid]
+        keys = [QueryCache.key(row, self._cache_ns) for row in hid]
         miss = []
         for i in range(Q):
             got = None if spec.cache == "refresh" else self._cache.get(keys[i])
@@ -515,7 +520,7 @@ class Index:
                 rounds[i] = r_rounds[j]
                 n_exact[i] = r_exact[j]
                 self._cache.put(keys[i], (idx[i].copy(), vals[i].copy()),
-                                vec=hid[i])
+                                vec=hid[i], namespace=self._cache_ns)
             self._record_race(raw, len(miss))
         return self._result(raw, indices=idx, values=vals,
                             coord_ops=coord_ops, rounds=rounds,
@@ -709,18 +714,25 @@ class Index:
     def save(self, path: str) -> None:
         """Persist through the checkpoint layer (per-shard checkpoints +
         manifest when sharded); an attached payload is written as a
-        ``payload.npy`` sidecar that ``Index.load`` restores and remaps."""
+        ``payload.npy`` sidecar that ``Index.load`` restores and remaps.
+
+        Crash-safe: the sidecars are staged INSIDE the checkpoint layer's
+        all-or-nothing directory publish, so ``path`` only ever holds a
+        complete index (arrays + manifest + payload + tuned config) — a
+        kill at any byte leaves the previous version untouched."""
+        def _sidecars(tmp: str) -> None:
+            if self._payload is not None:
+                np.save(os.path.join(tmp, PAYLOAD_FILE), self._payload)
+            if self._tuned is not None:
+                from repro.tune import save_tuned, signature_of
+                save_tuned(tmp, signature_of(self._store), self._tuned,
+                           measured={"epoch_ms": self._tuned.epoch_ms,
+                                     "round_ms": self._tuned.round_ms})
+
         if self.sharded:
-            save_sharded_index(self._store, path)
+            save_sharded_index(self._store, path, extra=_sidecars)
         else:
-            save_index(self._store, path)
-        if self._payload is not None:
-            np.save(os.path.join(path, PAYLOAD_FILE), self._payload)
-        if self._tuned is not None:
-            from repro.tune import save_tuned, signature_of
-            save_tuned(path, signature_of(self._store), self._tuned,
-                       measured={"epoch_ms": self._tuned.epoch_ms,
-                                 "round_ms": self._tuned.round_ms})
+            save_index(self._store, path, extra=_sidecars)
 
     # -- admin ops (admin.py) ------------------------------------------------
 

@@ -41,7 +41,12 @@ CACHE_POLICIES = ("use", "bypass", "refresh")
 #: v5 (PR 8): ServeStats gained the audit_*/slo_alerts/serving_fallback/
 #: retune_requested fields — the online δ-audit and SLO burn-rate state
 #: (DESIGN.md §10).
-SCHEMA_VERSION = 5
+#: v6 (PR 9): ServeStats gained the fleet rollup fields — per-namespace
+#: residency/eviction/reload counters and live per-namespace queue depths
+#: (``fleet_namespaces_resident/evicted``, ``fleet_reloads``,
+#: ``ns_queue_depth``) so autoscaling can see namespace pressure
+#: (DESIGN.md §11).
+SCHEMA_VERSION = 6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,6 +201,11 @@ class ServeStats:
     slo_alerts: int = 0        # burn-rate alerts fired (lifetime)
     serving_fallback: bool = False  # tuned config forced off (recall guard)
     retune_requested: bool = False  # an Index.tune() re-race is flagged
+    # -- fleet rollup (schema v6, DESIGN.md §11) ---------------------------
+    fleet_namespaces_resident: int = 0  # namespaces open in memory (now)
+    fleet_namespaces_evicted: int = 0   # namespaces checkpointed cold (now)
+    fleet_reloads: int = 0              # cold reloads paid (lifetime)
+    ns_queue_depth: Optional[dict] = None  # namespace -> waiting tickets
 
     _LEGACY = {
         "knn_races": "races",

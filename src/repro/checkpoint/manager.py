@@ -8,10 +8,11 @@ the target sharding) — the basis of elastic scaling (runtime/elastic.py).
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,19 +41,41 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
-def save(path: str, state, *, meta: Optional[Dict[str, Any]] = None) -> None:
-    """Atomic checkpoint write."""
-    tmp = path + ".tmp"
+@contextlib.contextmanager
+def staged_dir(path: str):
+    """All-or-nothing directory publish: yields a fresh sibling tmp dir to
+    write the COMPLETE new content into; on clean exit the tmp dir replaces
+    ``path`` in one rename, on exception it is torn down and ``path`` is
+    left exactly as it was. A crash mid-write (even ``os._exit``) leaves at
+    worst a stale ``<path>.tmp-*`` sibling that readers never look at —
+    never a half-written ``path``. This is the directory-granularity twin of
+    the tmp+``os.replace`` idiom used by ``tune/sidecar.py`` file writes."""
+    tmp = f"{path}.tmp-{os.getpid()}"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
-    os.makedirs(tmp, exist_ok=True)
-    flat = _flatten(state)
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-    with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
-        f.write(msgpack.packb(meta or {}))
+    os.makedirs(tmp)
+    try:
+        yield tmp
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     if os.path.exists(path):
         shutil.rmtree(path)
     os.rename(tmp, path)
+
+
+def save(path: str, state, *, meta: Optional[Dict[str, Any]] = None,
+         extra: Optional[Callable[[str], None]] = None) -> None:
+    """Atomic checkpoint write. ``extra(tmpdir)`` lets callers stage
+    sidecars (payloads, tuned configs) into the same publish, so the
+    checkpoint and its sidecars appear — or don't — together."""
+    with staged_dir(path) as tmp:
+        flat = _flatten(state)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+            f.write(msgpack.packb(meta or {}))
+        if extra is not None:
+            extra(tmp)
 
 
 def restore(path: str, like, *, shardings=None):

@@ -1,0 +1,26 @@
+"""repro.fleet — multi-tenant namespace fleet over one mesh and one
+request plane (DESIGN.md §11).
+
+Thousands of per-tenant/per-collection indexes, multiplexed: ``Fleet``
+owns named namespaces (each a ``repro.api.Index``), an LRU residency set
+with transparent evict-to-checkpoint / reload-on-touch, a shared
+namespace-keyed query cache, mesh placement by live-row footprint, and a
+versioned atomic manifest so ``Fleet.open(root)`` recovers everything
+across restarts. Serving rides ONE shared ``RequestPlane`` via
+``fleet.serve()`` with ``namespace=``-labeled tickets.
+"""
+from repro.fleet.core import Fleet, FleetConfig
+from repro.fleet.manifest import (FLEET_FILE, FLEET_VERSION, load_manifest,
+                                  save_manifest)
+from repro.fleet.placement import device_load, plan_placement
+
+__all__ = [
+    "FLEET_FILE",
+    "FLEET_VERSION",
+    "Fleet",
+    "FleetConfig",
+    "device_load",
+    "load_manifest",
+    "plan_placement",
+    "save_manifest",
+]

@@ -1,0 +1,66 @@
+"""Fleet manifest: one versioned JSON sidecar at the fleet root
+(DESIGN.md §11.3).
+
+``fleet.json`` is the recovery record for a whole namespace fleet: every
+namespace's name, shard count, placement (device offset), admission
+override and live-row footprint — enough for ``Fleet.open(root)`` to
+rebuild the routing table WITHOUT materializing a single index (lazy
+open-on-access; the per-namespace checkpoints, tuned sidecars and payloads
+live in the namespace directories and load on first touch).
+
+Writes are atomic (tmp + ``os.replace``, the ``tune/sidecar.py`` idiom) so
+a crash mid-update leaves the previous manifest readable. Fallback is
+strict: a missing, unreadable, or version-bumped manifest means "no fleet
+here" — ``Fleet.open`` fails loudly instead of serving half a fleet.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.utils import get_logger
+
+log = get_logger("repro.fleet")
+
+FLEET_FILE = "fleet.json"
+FLEET_VERSION = 1
+
+
+def save_manifest(root: str, namespaces: dict) -> str:
+    """Atomically publish the fleet manifest under ``root``.
+
+    ``namespaces``: name → record dict (``shards``, ``device_offset``,
+    ``max_queue``, ``n_live``, ``kind``). The record is advisory metadata
+    for placement/routing — the namespace checkpoint stays the source of
+    truth for the index itself.
+    """
+    doc = {"version": FLEET_VERSION, "namespaces": namespaces}
+    fpath = os.path.join(root, FLEET_FILE)
+    tmp = fpath + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    os.replace(tmp, fpath)
+    return fpath
+
+
+def load_manifest(root: str) -> Optional[dict]:
+    """Read + validate ``root``'s manifest; None when there is no (valid)
+    fleet at ``root``."""
+    fpath = os.path.join(root, FLEET_FILE)
+    if not os.path.exists(fpath):
+        return None
+    try:
+        with open(fpath) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        log.warning("unreadable fleet manifest at %s", fpath)
+        return None
+    if doc.get("version") != FLEET_VERSION:
+        log.warning("fleet manifest version %r != %d at %s",
+                    doc.get("version"), FLEET_VERSION, fpath)
+        return None
+    if not isinstance(doc.get("namespaces"), dict):
+        log.warning("malformed fleet manifest at %s", fpath)
+        return None
+    return doc

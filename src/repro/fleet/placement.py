@@ -1,0 +1,71 @@
+"""Namespace → mesh placement (DESIGN.md §11.2).
+
+The mesh is one shared resource; every sharded namespace occupies a
+contiguous device window ``[offset, offset + shards)`` (the
+``ShardedIndexStore.device_offset`` contract from the PR-4 replica
+fan-out). This module bin-packs namespaces onto that mesh by live-row
+footprint — the same greedy least-loaded logic ``index/placement.py``
+applies to rows-within-shards, lifted to namespaces-within-devices:
+heaviest namespace first, each placed at the window whose max per-device
+load stays lowest (ties → lowest offset, so placement is deterministic and
+the manifest round-trips it).
+
+``reshard`` (``Index.reshard`` / ``repro.api.admin.live_reshard``) is the
+rebalance primitive when a window change alone cannot fix the imbalance —
+the Fleet re-plans offsets cheaply on every eviction/reload and leaves the
+expensive shard-count changes to an explicit ``Fleet.reshard`` call.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def plan_placement(footprints: Dict[str, Tuple[int, int]],
+                   n_devices: int) -> Dict[str, int]:
+    """Greedy contiguous-window bin-packing of namespaces onto devices.
+
+    ``footprints``: namespace → ``(n_shards, live_rows)``. Returns
+    namespace → device offset. Deterministic: namespaces sorted by
+    (-live_rows, name), windows scanned low-to-high, ties toward the
+    lowest offset — the same plan reproduces from the same manifest.
+
+    A namespace whose shard count exceeds the mesh is pinned at offset 0
+    (the store itself raises at launch if the devices truly aren't there —
+    placement must not hide that error by refusing to plan).
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    load = np.zeros((n_devices,), np.float64)
+    plan: Dict[str, int] = {}
+    order = sorted(footprints, key=lambda ns: (-footprints[ns][1], ns))
+    for ns in order:
+        shards, rows = footprints[ns]
+        shards = max(1, int(shards))
+        if shards >= n_devices:
+            off = 0
+            span = n_devices
+        else:
+            # the window whose heaviest device stays lightest after adding
+            # this namespace's per-device share
+            share = rows / shards
+            costs = [load[o:o + shards].max() + share
+                     for o in range(n_devices - shards + 1)]
+            off = int(np.argmin(costs))
+            span = shards
+        plan[ns] = off
+        load[off:off + span] += rows / span
+    return plan
+
+
+def device_load(footprints: Dict[str, Tuple[int, int]],
+                plan: Dict[str, int], n_devices: int) -> np.ndarray:
+    """(n_devices,) live rows per device under ``plan`` — the balance
+    telemetry benches and ``health_snapshot`` surface."""
+    load = np.zeros((n_devices,), np.float64)
+    for ns, off in plan.items():
+        shards, rows = footprints[ns]
+        span = min(max(1, int(shards)), n_devices)
+        load[off:off + span] += rows / span
+    return load

@@ -119,10 +119,14 @@ def _build_sparse(corpus, cfg: BMOConfig, capacity: Optional[int]) -> IndexStore
 # ---------------------------------------------------------------------------
 
 
-def save_index(store: IndexStore, path: str) -> None:
-    """Atomic write of the store's arrays + meta (checkpoint layout)."""
+def save_index(store: IndexStore, path: str, *, extra=None) -> None:
+    """Atomic write of the store's arrays + meta (checkpoint layout).
+    ``extra(tmpdir)``: optional callback staging sidecars (payload, tuned
+    config) into the same all-or-nothing publish — a crash mid-save can
+    never leave an index without its sidecars (or vice versa)."""
     from repro import checkpoint
-    checkpoint.manager.save(path, store.arrays(), meta=store.meta())
+    checkpoint.manager.save(path, store.arrays(), meta=store.meta(),
+                            extra=extra)
 
 
 def load_index(path: str) -> IndexStore:

@@ -346,27 +346,33 @@ def sharded_maybe_compact(store: ShardedIndexStore, *,
 # ---------------------------------------------------------------------------
 
 
-def save_sharded_index(store: ShardedIndexStore, path: str) -> None:
-    """path/shard_%04d/ (checkpoint layout, one per shard) + path/manifest."""
+def save_sharded_index(store: ShardedIndexStore, path: str, *,
+                       extra=None) -> None:
+    """path/shard_%04d/ (checkpoint layout, one per shard) + path/manifest.
+
+    The whole directory — every shard, the manifest, and any ``extra``
+    sidecars — is staged in a tmp sibling and published with one rename
+    (``checkpoint.manager.staged_dir``): a crash mid-save leaves the
+    previous index intact, never a mix of old and new shards."""
     import msgpack
     from repro import checkpoint
-    os.makedirs(path, exist_ok=True)
-    for s, shard in enumerate(store.shards):
-        checkpoint.manager.save(os.path.join(path, f"shard_{s:04d}"),
-                                shard.arrays(), meta=shard.meta())
-    manifest = {
-        "version": 1,
-        "n_shards": store.n_shards,
-        "stride": store.stride,
-        "placement": store.placement,
-        "kind": store.kind,
-        "live_per_shard": store.live_per_shard,
-        "capacities": [s.capacity for s in store.shards],
-    }
-    tmp = os.path.join(path, MANIFEST + ".tmp")
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(manifest))
-    os.replace(tmp, os.path.join(path, MANIFEST))
+    with checkpoint.manager.staged_dir(path) as tmp:
+        for s, shard in enumerate(store.shards):
+            checkpoint.manager.save(os.path.join(tmp, f"shard_{s:04d}"),
+                                    shard.arrays(), meta=shard.meta())
+        manifest = {
+            "version": 1,
+            "n_shards": store.n_shards,
+            "stride": store.stride,
+            "placement": store.placement,
+            "kind": store.kind,
+            "live_per_shard": store.live_per_shard,
+            "capacities": [s.capacity for s in store.shards],
+        }
+        with open(os.path.join(tmp, MANIFEST), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        if extra is not None:
+            extra(tmp)
 
 
 def is_sharded_index_dir(path: str) -> bool:

@@ -59,6 +59,17 @@ def main(argv=None):
                          "winner; with --index-dir the tuned.json sidecar is "
                          "persisted next to the checkpoint so later launches "
                          "serve tuned without re-racing")
+    ap.add_argument("--fleet-root", default=None, metavar="DIR",
+                    help="serve retrieval from a namespace fleet rooted "
+                         "here (repro.fleet, DESIGN.md §11): the index "
+                         "becomes the fleet's 'default' namespace "
+                         "(created on first launch, recovered from the "
+                         "manifest afterwards) and the engine shares the "
+                         "fleet's request plane; overrides --index-dir")
+    ap.add_argument("--max-resident", type=int, default=8,
+                    help="with --fleet-root: LRU residency budget — "
+                         "namespaces beyond this many are checkpointed "
+                         "and evicted, reloading transparently on access")
     ap.add_argument("--datastore-size", type=int, default=2048)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
@@ -108,7 +119,7 @@ def main(argv=None):
     params = init_params(model.param_specs(), rng)
     max_seq = args.max_seq or (args.prompt_len + args.new_tokens + 8)
 
-    knn_cfg = index = None
+    knn_cfg = index = fleet = fleet_plane = None
     if args.knn_lm:
         import os
 
@@ -126,7 +137,27 @@ def main(argv=None):
         policies = dict(cache=knn_cfg.cache_policy(),
                         compaction=knn_cfg.compaction_policy())
         shards = max(args.index_shards, 1)
-        if args.index_dir and os.path.exists(args.index_dir):
+        if args.fleet_root:
+            from repro.fleet import Fleet, FleetConfig
+            fleet = Fleet(args.fleet_root,
+                          FleetConfig(max_resident=args.max_resident))
+            if "default" in fleet:
+                index = fleet.get("default")
+                log.info("fleet %s: recovered namespace 'default' "
+                         "(%d live slots, %d shard(s); %d namespace(s) "
+                         "total, %d resident)", args.fleet_root,
+                         index.n_live, index.n_shards, len(fleet),
+                         fleet.resident_count)
+            else:
+                index = fleet.create("default", keys, knn_cfg.bmo,
+                                     jax.random.PRNGKey(7), shards=shards,
+                                     payload=next_ids)
+                log.info("fleet %s: created namespace 'default' "
+                         "(%d shard(s))", args.fleet_root, index.n_shards)
+            # default= binds the 'default' namespace as the plane's default
+            # index so the δ-auditor (--audit-rate) covers its traffic
+            fleet_plane = fleet.serve(knn_cfg.plane, default="default")
+        elif args.index_dir and os.path.exists(args.index_dir):
             # one call covers both layouts; --index-shards != saved shard
             # count re-shards on the way in, the payload sidecar rides the
             # remap inside the handle
@@ -176,7 +207,9 @@ def main(argv=None):
 
     engine = ServeEngine(model, params, plan, mesh, batch_size=args.batch,
                          max_seq=max_seq, knn_lm=knn_cfg,
-                         index=index, index_append=args.index_append)
+                         index=index, index_append=args.index_append,
+                         plane=fleet_plane,
+                         plane_namespace="default" if fleet_plane else None)
     prompts = np.random.default_rng(1).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
     t0 = time.time()
@@ -186,7 +219,8 @@ def main(argv=None):
              out.shape, dt, out.size / dt,
              f"; retrieval coord-ops={retrieval_ops:.0f}" if args.knn_lm else "")
     if args.knn_lm:
-        if args.audit_rate > 0.0 and engine.plane is not None:
+        if (args.audit_rate > 0.0 and engine.plane is not None
+                and engine.plane.auditor is not None):
             done = engine.plane.audit_flush()   # oracle runs post-serve
             a = engine.plane.auditor.summary()
             log.info("δ-audit: %d ticket(s) flushed — %d/%d audited rows "
@@ -201,6 +235,9 @@ def main(argv=None):
             log.info("per-shard coord-ops %s, max rounds %s",
                      [f"{v:.3g}" for v in st.shard_coord_ops],
                      st.shard_rounds)
+        if fleet is not None:
+            fleet.flush()       # manifest + dirty checkpoints to disk
+            log.info("fleet stats: %s", fleet.stats())
         if args.autoscale:
             from repro.serve.scale import QueueDepthPolicy
             policy = QueueDepthPolicy(sustain=1)

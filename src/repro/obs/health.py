@@ -35,16 +35,20 @@ def _jsonify(obj):
 
 
 def health_snapshot(*, plane=None, index=None, auditor=None,
-                    slo=None) -> dict:
+                    slo=None, fleet=None) -> dict:
     """One JSON-safe health document. Pass whichever pieces exist — a
-    plane implies its index and auditor unless overridden. ``ok`` is the
-    one-bit rollup: no active SLO alert, no audited key in δ-violation,
-    and no forced serving fallback."""
+    plane implies its index and auditor unless overridden; a fleet adds a
+    per-namespace residency/queue rollup (``fleet`` section). ``ok`` is
+    the one-bit rollup: no active SLO alert, no audited key in
+    δ-violation, and no forced serving fallback."""
     from repro.api.spec import SCHEMA_VERSION
     if plane is not None:
         index = index if index is not None else plane.index
         auditor = auditor if auditor is not None else \
             getattr(plane, "auditor", None)
+        if fleet is None and getattr(plane, "router", None) is not None \
+                and hasattr(plane.router, "stats"):
+            fleet = plane.router
     doc = {"schema_version": SCHEMA_VERSION,
            "generated_by": "repro.obs.health"}
     violations = []
@@ -71,6 +75,11 @@ def health_snapshot(*, plane=None, index=None, auditor=None,
         audit = auditor.summary()
         doc["audit"] = _jsonify(audit)
         violations = [k for k in audit["keys"] if k["violated"]]
+    if fleet is not None:
+        fdoc = dict(fleet.stats())
+        if plane is not None and hasattr(plane, "ns_queue_depth"):
+            fdoc["ns_queue_depth"] = plane.ns_queue_depth()
+        doc["fleet"] = _jsonify(fdoc)
     if slo is not None:
         state = slo.state()
         doc["slo"] = _jsonify(state)
@@ -83,10 +92,10 @@ def health_snapshot(*, plane=None, index=None, auditor=None,
 
 
 def dump_health(path: str, *, plane=None, index=None, auditor=None,
-                slo=None) -> dict:
+                slo=None, fleet=None) -> dict:
     """Write ``health_snapshot`` to ``path``; returns the document."""
     doc = health_snapshot(plane=plane, index=index, auditor=auditor,
-                          slo=slo)
+                          slo=slo, fleet=fleet)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
     return doc

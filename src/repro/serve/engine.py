@@ -78,13 +78,21 @@ class ServeEngine:
     def __init__(self, model, params, plan: ParallelPlan, mesh, *,
                  batch_size: int, max_seq: int,
                  knn_lm: Optional[KNNLMConfig] = None,
-                 datastore=None, index=None, index_append: bool = False):
+                 datastore=None, index=None, index_append: bool = False,
+                 plane: Optional[RequestPlane] = None,
+                 plane_namespace: Optional[str] = None):
         """``datastore``: (keys (N, d), next_token_ids (N,)) — preprocessed
         into an ``Index`` at construction. ``index``: a pre-built
         ``repro.api.Index`` handle — or a raw (Sharded)IndexStore, wrapped
         on the way in (pass next-token ids via ``datastore=(None, ids)``).
         ``index_append``: insert each decode step's (hidden, token) pairs
-        back into the index."""
+        back into the index. ``plane``: inject an externally owned
+        ``RequestPlane`` (e.g. a fleet's shared plane from
+        ``Fleet.serve()``) instead of building a private one — the decode
+        loop's retrieval then multiplexes with fleet traffic under the
+        same admission/fairness machinery. ``plane_namespace``: the
+        namespace label the decode loop's retrieval tickets carry on a
+        fleet plane (None on a single-index plane)."""
         self.model = model
         self.params = params
         self.mesh = mesh
@@ -118,9 +126,12 @@ class ServeEngine:
                 # uncovered slots vote token 0 — make that explicit
                 handle.attach_payload(np.zeros((handle.capacity,), np.int32))
             self.index = handle
-        self.plane: Optional[RequestPlane] = (
-            RequestPlane(self.index, knn_lm.plane)
-            if self.index is not None else None)
+        self.plane_namespace = plane_namespace
+        if plane is not None:
+            self.plane: Optional[RequestPlane] = plane
+        else:
+            self.plane = (RequestPlane(self.index, knn_lm.plane)
+                          if self.index is not None else None)
         if knn_lm is not None:
             # hidden-state decode (DenseLM exposes return_hidden)
             def _decode(params, cache, tokens):
@@ -158,7 +169,8 @@ class ServeEngine:
         # reserved tenant keeps the decode loop's admission queue private —
         # external backpressure can shed external tickets, never this one.
         res = self.plane.query(np.asarray(hidden, np.float32), rng=rng,
-                               tenant="__engine__")
+                               tenant="__engine__",
+                               namespace=self.plane_namespace)
         ops = float(np.asarray(res.coord_ops).sum())
         V = self.model.cfg.vocab_size
         # distance-weighted vote over retrieved next-tokens

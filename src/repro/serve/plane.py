@@ -1,5 +1,5 @@
 """repro.serve.plane — the async request plane over one ``Index`` handle
-(DESIGN.md §7).
+or a whole namespace fleet (DESIGN.md §7, §11).
 
 ``Index.query`` is a blocking, run-to-certification batch call: one hard
 query (or one greedy caller) gates everyone sharing the engine. The plane
@@ -32,6 +32,16 @@ The scheduler is cooperative (``step()`` runs one epoch across all active
 groups); ``drain()``, ``stream()`` and the blocking ``query()`` shim drive
 it. ``stats`` extends the handle's ``ServeStats`` with queue/latency
 telemetry (schema v2) that ``repro.serve.scale`` policies consume.
+
+Namespace routing (PR 9, DESIGN.md §11): the plane is decoupled from "the
+one index". Construct it with ``router=`` (a ``repro.fleet.Fleet``) and
+tickets carry a ``namespace`` label: ``submit(..., namespace="users")``
+resolves the backing ``Index`` through the router at admission (which
+transparently reloads an evicted namespace), the per-tenant fairness /
+shed / quota machinery keys on ``(tenant, namespace)``, race groups never
+mix namespaces, and per-namespace counters ride the metrics registry under
+a ``namespace`` label (``repro_plane_ns_*``). A plane built the classic
+way — ``RequestPlane(index)`` — behaves exactly as before.
 """
 from __future__ import annotations
 
@@ -115,12 +125,15 @@ class _Entry(object):
     """Plane-internal ticket state (the public handle is ``.ticket``)."""
 
     def __init__(self, ticket: Ticket, queries, rng, spec: QuerySpec,
-                 is_sparse: bool):
+                 is_sparse: bool, index: Index,
+                 namespace: Optional[str] = None):
         self.ticket = ticket
         self.queries = queries
         self.rng = rng
         self.spec = spec
         self.is_sparse = is_sparse
+        self.index = index            # the backing handle, resolved at submit
+        self.namespace = namespace    # routing label (None = default index)
         Q = ticket.n_queries
         self.cached_rows: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self.cache_epoch = -1         # store epoch the cached rows are from
@@ -142,24 +155,40 @@ class _Entry(object):
 
 
 class _Group(object):
-    """One coalesced race batch: a RaceSession plus its member tickets."""
+    """One coalesced race batch: a RaceSession plus its member tickets.
+    Pinned to ONE backing index (groups never mix namespaces) and the
+    store epoch it launched against."""
 
-    def __init__(self, session, members: List[_Member], store_epoch: int):
+    def __init__(self, session, members: List[_Member], store_epoch: int,
+                 index: Index):
         self.session = session
         self.members = members
         self.store_epoch = store_epoch
+        self.index = index
 
 
 class RequestPlane:
-    """The async request plane over one ``repro.api.Index`` handle."""
+    """The async request plane over one ``repro.api.Index`` handle — or,
+    with ``router=`` (a ``repro.fleet.Fleet``), over every namespace the
+    router serves, multiplexed through one shared scheduler."""
 
-    def __init__(self, index: Index, config: Optional[PlaneConfig] = None,
-                 *, obs=None):
+    def __init__(self, index: Optional[Index] = None,
+                 config: Optional[PlaneConfig] = None,
+                 *, obs=None, router=None):
+        if index is None and router is None:
+            raise ValueError("RequestPlane needs an index, a router "
+                             "(repro.fleet.Fleet), or both")
         self.index = index
+        self.router = router
+        if router is not None and hasattr(router, "attach_plane"):
+            router.attach_plane(self)   # wires the eviction in-flight guard
         self.config = config if config is not None else PlaneConfig()
         self.obs = obs if obs is not None else get_obs()
         self.plane_id = f"p{next(_plane_seq)}"
-        self._queues: "collections.OrderedDict[str, collections.deque]" = \
+        # admission queues keyed by (tenant, namespace): the PR-5 fairness/
+        # shed machinery applies unchanged at the pair granularity, so one
+        # hot namespace cannot starve a cold one even under a single tenant
+        self._queues: "collections.OrderedDict[tuple, collections.deque]" = \
             collections.OrderedDict()
         self._groups: List[_Group] = []
         self._next_id = 0
@@ -208,7 +237,7 @@ class RequestPlane:
         # the brute-force oracle runs OFF the critical path, only from
         # audit_step()/audit_flush() or an idle step()
         self.auditor = None
-        if self.config.audit_rate > 0.0:
+        if self.config.audit_rate > 0.0 and index is not None:
             from repro.obs.audit import DeltaAuditor, FlightRecorder
             recorder = (FlightRecorder(self.config.audit_dir)
                         if self.config.audit_dir else None)
@@ -217,23 +246,87 @@ class RequestPlane:
                 recorder=recorder, seed=self.config.audit_seed,
                 reservoir=self.config.audit_reservoir, labels=lbl)
 
+    # -- routing -------------------------------------------------------------
+
+    def _resolve(self, namespace: Optional[str]) -> Index:
+        """The backing ``Index`` for a namespace label. ``None`` routes to
+        the plane's default index; a label goes through the router, which
+        transparently reloads an evicted namespace (lazy open-on-access)
+        and bumps its LRU recency."""
+        if namespace is None:
+            if self.index is None:
+                raise ValueError(
+                    "this plane routes by namespace (router-only) — "
+                    "pass namespace= to submit()")
+            return self.index
+        if self.router is None:
+            raise ValueError(
+                f"namespace={namespace!r} submitted to a plane without a "
+                "router — construct RequestPlane(router=fleet) to serve "
+                "namespaces")
+        return self.router.resolve(namespace)
+
+    def _qkey(self, entry: _Entry) -> tuple:
+        return (entry.ticket.tenant, entry.namespace)
+
+    def _max_queue(self, namespace: Optional[str]) -> int:
+        """Per-namespace admission bound: the router's override when it has
+        one, else the plane-wide ``PlaneConfig.max_queue``."""
+        if namespace is not None and self.router is not None:
+            mq = self.router.namespace_max_queue(namespace)
+            if mq is not None:
+                return mq
+        return self.config.max_queue
+
+    def _ns_metrics(self, namespace: str):
+        """Lazily-registered per-namespace series (registry lookups are
+        dict gets — repeat calls return the same series)."""
+        reg = self.obs.registry
+        lbl = {"plane": self.plane_id, "namespace": namespace}
+        return (reg.counter("repro_plane_ns_submitted_total",
+                            "tickets submitted per namespace", **lbl),
+                reg.counter("repro_plane_ns_completed_total",
+                            "tickets finished per namespace", **lbl),
+                reg.gauge("repro_plane_ns_queue_depth",
+                          "tickets waiting for admission per namespace",
+                          **lbl))
+
+    def namespace_load(self) -> Dict[str, int]:
+        """Live tickets (queued + racing) per namespace — the Fleet's
+        eviction guard: a namespace with in-flight work is never evicted
+        out from under its tickets."""
+        load: Dict[str, int] = {}
+        for (_t, ns), q in self._queues.items():
+            if ns is not None and q:
+                load[ns] = load.get(ns, 0) + len(q)
+        for g in self._groups:
+            for m in g.members:
+                ns = m.entry.namespace
+                if ns is not None:
+                    load[ns] = load.get(ns, 0) + 1
+        return load
+
     # -- admission -----------------------------------------------------------
 
     def submit(self, queries, spec: Optional[QuerySpec] = None, *,
-               tenant: str = "default", rng=None, **overrides) -> Ticket:
+               tenant: str = "default", namespace: Optional[str] = None,
+               rng=None, **overrides) -> Ticket:
         """Admit a query batch. Returns a ``Ticket`` immediately: poll or
         stream it, or let ``drain()`` run the plane to quiescence. Keyword
         overrides (``deadline=``, ``budget=``, ``k=``, …) refine the spec
-        exactly like ``Index.query``."""
+        exactly like ``Index.query``. ``namespace`` routes the ticket to a
+        fleet namespace (requires a router); admission fairness then keys
+        on the ``(tenant, namespace)`` pair."""
         if spec is None:
             spec = QuerySpec(**overrides)
         elif overrides:
             spec = dataclasses.replace(spec, **overrides)
+        index = self._resolve(namespace)
         is_sparse = isinstance(queries, tuple)
         # reject unraceable submissions HERE, not at group launch: a bad
         # spec admitted into a coalesced bucket would abort co-admitted
         # tickets' admission mid-step
-        kind = self.index.kind
+        kind = index.kind
         if is_sparse != (kind == "sparse"):
             raise ValueError(
                 f"a {kind!r} index takes "
@@ -246,10 +339,10 @@ class RequestPlane:
             raise ValueError(
                 "anytime sessions drive dense/rotated boxes through the "
                 "epoch-fused driver; mode='rounds' is blocking-query only")
-        if spec.bind(self.index.cfg).k > self.index.n_live:
+        if spec.bind(index.cfg).k > index.n_live:
             raise ValueError(
-                f"k={spec.bind(self.index.cfg).k} exceeds the index's "
-                f"{self.index.n_live} live slots")
+                f"k={spec.bind(index.cfg).k} exceeds the index's "
+                f"{index.n_live} live slots")
         if is_sparse:
             queries = tuple(np.asarray(a) for a in queries)
             Q = queries[0].shape[0]
@@ -262,19 +355,23 @@ class RequestPlane:
                         trace_id=f"{self.plane_id}.t{self._next_id}")
         self._next_id += 1
         self._submitted.inc()
+        nsattr = {} if namespace is None else {"namespace": namespace}
+        if namespace is not None:
+            self._ns_metrics(namespace)[0].inc()
         tracer = self.obs.tracer
         tracer.instant("plane.submit", trace=ticket.trace_id,
-                       tenant=tenant, n_queries=Q)
-        entry = _Entry(ticket, queries, rng, spec, is_sparse)
+                       tenant=tenant, n_queries=Q, **nsattr)
+        entry = _Entry(ticket, queries, rng, spec, is_sparse, index,
+                       namespace)
         self._entries[ticket.id] = entry
 
-        q = self._queues.setdefault(tenant, collections.deque())
-        entry.epoch = self.index.epoch
+        q = self._queues.setdefault(self._qkey(entry), collections.deque())
+        entry.epoch = index.epoch
         self._consult_cache(entry)
         if not entry.miss_rows:          # fully served from the query LRU —
             self._finish(entry, R_CERTIFIED)   # free, never needs a slot
             return ticket
-        if len(q) >= self.config.max_queue:
+        if len(q) >= self._max_queue(namespace):
             self._shed.inc()
             ticket.status = SHED
             ticket.reason = "queue_full"
@@ -282,28 +379,32 @@ class RequestPlane:
             ticket.result = self._empty_result(entry, R_SHED)
             self._entries.pop(ticket.id, None)
             tracer.instant("plane.shed", trace=ticket.trace_id,
-                           reason="queue_full", tenant=tenant)
+                           reason="queue_full", tenant=tenant, **nsattr)
             return ticket
         entry.queue_span = tracer.start("plane.queue",
-                                        trace=ticket.trace_id, tenant=tenant)
+                                        trace=ticket.trace_id, tenant=tenant,
+                                        **nsattr)
         q.append(entry)
         return ticket
 
     def _consult_cache(self, entry: _Entry) -> None:
         """Serve exact-repeat rows from the handle's LRU at submit time
         (same contract as ``Index.query``; the shared cache keeps both
-        surfaces coherent). Near-repeat CI priors are seeded later, at
-        group launch — a ticket shed by backpressure must not pay them."""
-        cache = self.index._cache
+        surfaces coherent — and namespace-keyed, so two namespaces holding
+        identical query bytes can never exchange rows). Near-repeat CI
+        priors are seeded later, at group launch — a ticket shed by
+        backpressure must not pay them."""
+        index = entry.index
+        cache = index._cache
         spec = entry.spec
-        entry.cache_epoch = self.index.epoch
+        entry.cache_epoch = index.epoch
         if (cache is None or entry.is_sparse or not spec.cacheable
                 or spec.cache == "bypass"):
             return
         hid = entry.queries
         for i in range(entry.ticket.n_queries):
             got = (None if spec.cache == "refresh"
-                   else cache.get(QueryCache.key(hid[i])))
+                   else cache.get(QueryCache.key(hid[i], index._cache_ns)))
             if got is not None:
                 entry.cached_rows[i] = (np.asarray(got[0]).copy(),
                                         np.asarray(got[1]).copy())
@@ -311,9 +412,13 @@ class RequestPlane:
     # -- scheduling ----------------------------------------------------------
 
     def _race_key(self, entry: _Entry):
+        # id(entry.index) pins coalescing to one backing handle: race
+        # groups must never mix namespaces (or an index pre/post a fleet
+        # reload) — every entry holds a live ref, so ids are stable here
         s = entry.spec
         return (s.k, s.mode, s.impl, s.delta, s.max_rounds, s.eliminate,
-                s.warm_start, entry.is_sparse)
+                s.warm_start, entry.is_sparse, entry.namespace,
+                id(entry.index))
 
     def _admission_key(self, entry: _Entry):
         """Deadline-aware admission order: earliest absolute deadline
@@ -329,11 +434,11 @@ class RequestPlane:
         never mixes store epochs). True iff the entry still needs a race."""
         if self._expire_if_late(entry, now):
             return False
-        if entry.cache_epoch != self.index.epoch:
+        if entry.cache_epoch != entry.index.epoch:
             entry.cached_rows.clear()
             self._consult_cache(entry)
             if not entry.miss_rows:
-                entry.epoch = self.index.epoch
+                entry.epoch = entry.index.epoch
                 self._finish(entry, R_CERTIFIED)
                 return False
         return True
@@ -343,16 +448,16 @@ class RequestPlane:
         ticket may sit behind its own tenant's unbounded one) for the
         overflow slot's batch."""
         cands = sorted(
-            ((self._admission_key(e), t, e)
-             for t, q in self._queues.items() for e in q
+            ((self._admission_key(e), key, e)
+             for key, q in self._queues.items() for e in q
              if e.spec.deadline is not None),
             key=lambda c: c[0])
         picked, rows = [], 0
-        for _, tenant, entry in cands:
+        for _, qkey, entry in cands:
             if picked and (rows + len(entry.miss_rows)
                            > self.config.max_group_queries):
                 continue
-            self._queues[tenant].remove(entry)
+            self._queues[qkey].remove(entry)
             if not self._pop_ready(entry, now):
                 continue
             picked.append(entry)
@@ -362,11 +467,13 @@ class RequestPlane:
         return picked
 
     def _admit_groups(self, now: float) -> None:
-        """Join-at-epoch-boundary: pop pending tickets across tenants —
-        at most one per tenant per round (fairness against a heavy
-        tenant), earliest-deadline-first within each round (deadline-aware
-        micro-batching) — bucket them by race compatibility, and launch
-        each bucket as one pow2-coalesced race group."""
+        """Join-at-epoch-boundary: pop pending tickets across
+        (tenant, namespace) queues — at most one per queue per round
+        (fairness against a heavy tenant OR a hot namespace),
+        earliest-deadline-first within each round (deadline-aware
+        micro-batching) — bucket them by race compatibility (which pins a
+        bucket to one namespace's index), and launch each bucket as one
+        pow2-coalesced race group."""
         budget = (self.config.max_active_groups - len(self._groups))
         if budget <= 0:
             # all group slots busy with long races: deadline-bounded
@@ -388,10 +495,11 @@ class RequestPlane:
             while rows < self.config.max_group_queries:
                 progressed = False
                 heads = sorted(
-                    (t for t, q in self._queues.items() if q),
-                    key=lambda t: self._admission_key(self._queues[t][0]))
-                for tenant in heads:
-                    q = self._queues[tenant]
+                    (key for key, q in self._queues.items() if q),
+                    key=lambda key: self._admission_key(
+                        self._queues[key][0]))
+                for qkey in heads:
+                    q = self._queues[qkey]
                     if not q:
                         continue
                     entry = q[0]
@@ -423,9 +531,10 @@ class RequestPlane:
         # tenant queues) so FIFO/EDF-within-class admission order survives
         for entry in reversed([e for e in picked if e in leftover]):
             self._queues.setdefault(
-                entry.ticket.tenant, collections.deque()).appendleft(entry)
+                self._qkey(entry), collections.deque()).appendleft(entry)
 
     def _launch_group(self, entries: List[_Entry], now: float) -> None:
+        index = entries[0].index      # bucket key pins one index per group
         members: List[_Member] = []
         parts, hints, offset = [], [], 0
         for entry in entries:
@@ -441,7 +550,7 @@ class RequestPlane:
             hint = None
             if (not entry.is_sparse and entry.spec.cacheable
                     and entry.spec.cache != "bypass"):
-                hint = self.index._seeded_priors(entry.queries, rows)
+                hint = index._seeded_priors(entry.queries, rows)
             hints.append(hint)
             offset += len(rows)
         is_sparse = entries[0].is_sparse
@@ -449,7 +558,7 @@ class RequestPlane:
                  else np.concatenate(parts, axis=0))
         prior_hint = None
         if any(h is not None for h in hints):
-            base = np.asarray(self.index.store.prior_var, np.float32)
+            base = np.asarray(index.store.prior_var, np.float32)
             priors = []
             for member, hint in zip(members, hints):
                 priors.extend([base] * len(member.rows) if hint is None
@@ -485,10 +594,10 @@ class RequestPlane:
         if deadline_ms is not None:
             deadline_ms = max(deadline_ms, 0.0)
         try:
-            session = self.index.race(batch, rng, spec=spec,
-                                      raced_queries=offset,
-                                      chunk_rounds=self.config.chunk_rounds,
-                                      obs=self.obs, deadline_ms=deadline_ms)
+            session = index.race(batch, rng, spec=spec,
+                                 raced_queries=offset,
+                                 chunk_rounds=self.config.chunk_rounds,
+                                 obs=self.obs, deadline_ms=deadline_ms)
         except Exception as e:  # noqa: BLE001 — never orphan the bucket
             log.bind(plane=self.plane_id,
                      traces=",".join(e_.ticket.trace_id or ""
@@ -513,7 +622,7 @@ class RequestPlane:
             # pow2 pad rows belong to no ticket: retire them immediately so
             # they neither race nor dilute the adaptive pull reallocation
             session.retire(np.arange(session.Q) >= offset)
-        group = _Group(session, members, self.index.epoch)
+        group = _Group(session, members, index.epoch, index)
         for member in members:
             entry = member.entry
             entry.group = group
@@ -529,22 +638,27 @@ class RequestPlane:
                 entry.queue_span = None
             # the admit instant is the ticket ↔ session JOIN KEY: the
             # session's race.epoch spans record under session.sid
+            nsattr = ({} if entry.namespace is None
+                      else {"namespace": entry.namespace})
             self.obs.tracer.instant(
                 "plane.admit", trace=t.trace_id, session=session.sid,
-                rows=len(member.rows), store_epoch=group.store_epoch)
+                rows=len(member.rows), store_epoch=group.store_epoch,
+                **nsattr)
         self._groups.append(group)
 
     def _fence_groups(self) -> None:
-        """Mutation fence: a group whose store epoch fell behind either
+        """Mutation fence: a group whose store epoch fell behind (per the
+        group's OWN index — namespaces fence independently) either
         completes against its (immutable) old store or is re-admitted."""
         if self.config.on_mutation != "readmit":
             return
-        epoch = self.index.epoch
-        for group in [g for g in self._groups if g.store_epoch != epoch]:
+        for group in [g for g in self._groups
+                      if g.store_epoch != g.index.epoch]:
+            epoch = group.index.epoch
             self._groups.remove(group)
             # the epochs already paid against the old store are real load —
             # keep them in the cumulative per-shard telemetry
-            self.index._record_session_telemetry(group.session)
+            group.index._record_session_telemetry(group.session)
             for member in group.members:
                 entry = member.entry
                 if entry.ticket.terminal:
@@ -570,7 +684,7 @@ class RequestPlane:
                     "plane.queue", trace=entry.ticket.trace_id,
                     tenant=entry.ticket.tenant, readmit=True)
                 self._queues.setdefault(
-                    entry.ticket.tenant,
+                    self._qkey(entry),
                     collections.deque()).appendleft(entry)
 
     def _harvest(self, group: _Group, *, count_epoch: bool) -> None:
@@ -601,7 +715,7 @@ class RequestPlane:
             mask[retire_rows] = True
             group.session.retire(mask)
         if not group.members:
-            self.index._record_session_telemetry(group.session)
+            group.index._record_session_telemetry(group.session)
             self._groups.remove(group)
 
     def _trace_ticket_epoch(self, entry: _Entry, member: _Member,
@@ -650,16 +764,18 @@ class RequestPlane:
         for q in self._queues.values():
             for entry in [e for e in q if self._deadline_passed(e, now)]:
                 q.remove(entry)
-                entry.epoch = self.index.epoch
+                entry.epoch = entry.index.epoch
                 self._finish(entry, R_DEADLINE)
-        # drop drained tenant queues: distinct tenant names must not grow
-        # the admission scan (or stats) without bound on a long-lived plane
-        for tenant in [t for t, q in self._queues.items() if not q]:
-            del self._queues[tenant]
+        # drop drained queues: distinct (tenant, namespace) pairs must not
+        # grow the admission scan (or stats) without bound on a long plane
+        for key in [key for key, q in self._queues.items() if not q]:
+            del self._queues[key]
         if self._groups or self.active:
             self._h_epoch.observe((time.perf_counter() - t0) * 1e3)
         self._g_queue.set(sum(len(q) for q in self._queues.values()))
         self._g_active.set(sum(len(g.members) for g in self._groups))
+        for ns, depth in self.ns_queue_depth().items():
+            self._ns_metrics(ns)[2].set(depth)
         # shadow audits use IDLE steps only: with races active or tickets
         # queued the oracle never runs inside the serving epoch — audit
         # work is demonstrably off the critical path (DESIGN.md §10.2)
@@ -691,7 +807,7 @@ class RequestPlane:
 
     def _expire_if_late(self, entry: _Entry, now: float) -> bool:
         if self._deadline_passed(entry, now):
-            entry.epoch = self.index.epoch
+            entry.epoch = entry.index.epoch
             self._finish(entry, R_DEADLINE)
             return True
         return False
@@ -773,7 +889,7 @@ class RequestPlane:
 
     def _build_result(self, entry: _Entry, terminal: bool,
                       reason: str) -> AnytimeResult:
-        k = entry.spec.bind(self.index.cfg).k
+        k = entry.spec.bind(entry.index.cfg).k
         Q = entry.ticket.n_queries
         ids = np.full((Q, k), -1, np.int64)
         vals = np.full((Q, k), np.inf, np.float32)
@@ -811,16 +927,20 @@ class RequestPlane:
             self._budget_exits.inc()
         self._latencies.append(t.latency_ms)
         self._h_latency.observe(t.latency_ms)
+        if entry.namespace is not None:
+            self._ns_metrics(entry.namespace)[1].inc()
         self._fill_cache(entry, reason)
         self._offer_audit(entry, reason)
         entry.group = entry.member = None
         if entry.queue_span is not None:     # e.g. deadline expired queued
             entry.queue_span.end(outcome=reason)
             entry.queue_span = None
+        nsattr = ({} if entry.namespace is None
+                  else {"namespace": entry.namespace})
         self.obs.tracer.instant(
             "plane.shed" if reason == R_SHED else "plane.terminal",
             trace=t.trace_id, reason=reason, latency_ms=t.latency_ms,
-            epochs=t.epochs, store_epoch=entry.epoch)
+            epochs=t.epochs, store_epoch=entry.epoch, **nsattr)
         self._entries.pop(t.id, None)
 
     def _offer_audit(self, entry: _Entry, reason: str) -> None:
@@ -830,16 +950,22 @@ class RequestPlane:
         skipped, not audited against a promise they never made."""
         if self.auditor is None:
             return
+        if entry.index is not self.index:
+            # the auditor's oracle is bound to the default index; fleet
+            # namespaces are outside its contract (audited per-namespace
+            # by their own planes/benches), counted as skipped not missed
+            self.auditor.note_skip("namespaced")
+            return
         t = entry.ticket
         res = t.result
         if (reason != R_CERTIFIED
                 or int(np.min(res.certified_count)) < res.indices.shape[1]):
             self.auditor.note_skip("uncertified")
             return
-        cfg = self.index._query_cfg(entry.spec)
+        cfg = entry.index._query_cfg(entry.spec)
         self.auditor.offer(
             trace_id=t.trace_id, tenant=t.tenant, store_epoch=entry.epoch,
-            contract=("tuned" if self.index._serving_tuned(entry.spec)
+            contract=("tuned" if entry.index._serving_tuned(entry.spec)
                       else "default"),
             k=res.indices.shape[1], delta=float(cfg.delta),
             queries=entry.queries, served_ids=res.indices,
@@ -863,18 +989,20 @@ class RequestPlane:
         result certified against a superseded store epoch (an
         ``on_mutation='complete'`` group finishing after a mutation must
         not poison the new epoch's cache with, e.g., a deleted id)."""
-        cache = self.index._cache
+        index = entry.index
+        cache = index._cache
         if (cache is None or reason != R_CERTIFIED or entry.is_sparse
                 or not entry.spec.cacheable or entry.spec.cache == "bypass"
-                or entry.epoch != self.index.epoch):
+                or entry.epoch != index.epoch):
             return
         res = entry.ticket.result
         for i in entry.miss_rows:
             if int(res.certified_count[i]) < res.indices.shape[1]:
                 continue
             row = entry.queries[i]
-            cache.put(QueryCache.key(row),
-                      (res.indices[i].copy(), res.values[i].copy()), vec=row)
+            cache.put(QueryCache.key(row, index._cache_ns),
+                      (res.indices[i].copy(), res.values[i].copy()),
+                      vec=row, namespace=index._cache_ns)
 
     # -- consumption ---------------------------------------------------------
 
@@ -897,13 +1025,14 @@ class RequestPlane:
             yield self.poll(ticket)
 
     def query(self, queries, rng=None, spec: Optional[QuerySpec] = None,
-              *, tenant: str = "default", **overrides) -> AnytimeResult:
+              *, tenant: str = "default", namespace: Optional[str] = None,
+              **overrides) -> AnytimeResult:
         """Blocking shim: submit + drain — what ``ServeEngine`` calls for
         its per-decode-step retrieval (under its own reserved tenant, so
         external load can never shed the decode loop). Same cache/counter
         semantics as the pre-plane ``Index.query`` hot path."""
-        ticket = self.submit(queries, spec, tenant=tenant, rng=rng,
-                             **overrides)
+        ticket = self.submit(queries, spec, tenant=tenant,
+                             namespace=namespace, rng=rng, **overrides)
         while not ticket.terminal:
             self.step()
         if ticket.status == SHED:
@@ -914,15 +1043,27 @@ class RequestPlane:
 
     # -- telemetry -----------------------------------------------------------
 
+    def ns_queue_depth(self) -> Dict[str, int]:
+        """Waiting tickets per namespace (queued only — the live pressure
+        signal ``serve.scale`` fleet policies and eviction consume)."""
+        depth: Dict[str, int] = {}
+        for (_t, ns), q in self._queues.items():
+            if ns is not None and q:
+                depth[ns] = depth.get(ns, 0) + len(q)
+        return depth
+
     @property
     def stats(self) -> ServeStats:
         """The handle's ``ServeStats`` extended with the plane's queue,
-        latency and observability telemetry (schema v3). The counters come
-        straight off the obs metrics registry — the same series the
+        latency and observability telemetry (schema v3) and — behind a
+        router — the fleet's per-namespace rollup (schema v6). The counters
+        come straight off the obs metrics registry — the same series the
         Prometheus/JSON exporters emit — so the two views never diverge.
         Percentiles are exact over the bounded ``latency_window`` and 0.0
-        (never None/NaN) while the window is empty."""
-        st = self.index.stats
+        (never None/NaN) while the window is empty. A router-only plane
+        starts from an empty ``ServeStats`` (there is no single handle
+        whose cache/race counters could stand for the whole fleet)."""
+        st = self.index.stats if self.index is not None else ServeStats()
         lat = list(self._latencies)
         queue_depth = sum(len(q) for q in self._queues.values())
         active = sum(len(g.members) for g in self._groups)
@@ -961,8 +1102,18 @@ class RequestPlane:
             slo_alerts=int(sum(
                 m.value for m in self.obs.registry.collect()
                 if m.name == "repro_slo_alerts_total")),
-            serving_fallback=self.index.serving_fallback,
-            retune_requested=self.index.retune_requested,
+            serving_fallback=(self.index.serving_fallback
+                              if self.index is not None else False),
+            retune_requested=(self.index.retune_requested
+                              if self.index is not None else False),
+            fleet_namespaces_resident=(self.router.resident_count
+                                       if self.router is not None else 0),
+            fleet_namespaces_evicted=(self.router.evicted_count
+                                      if self.router is not None else 0),
+            fleet_reloads=(self.router.reload_count
+                           if self.router is not None else 0),
+            ns_queue_depth=(self.ns_queue_depth()
+                            if self.router is not None else None),
         )
 
 

@@ -21,17 +21,22 @@ from typing import Optional
 
 from repro.api import ServeStats
 
-ACTIONS = ("none", "add_replicas", "reshard", "fallback_untuned", "retune")
+ACTIONS = ("none", "add_replicas", "reshard", "fallback_untuned", "retune",
+           "evict_namespace", "rebalance")
 
 
 @dataclasses.dataclass(frozen=True)
 class ScaleDecision:
-    """One recommendation: do ``action`` with parameter ``value``."""
+    """One recommendation: do ``action`` with parameter ``value``.
+    ``target`` names the namespace a fleet-granularity action applies to
+    (empty for whole-plane actions)."""
 
     action: str = "none"          # none | add_replicas | reshard |
-                                  # fallback_untuned | retune
+                                  # fallback_untuned | retune |
+                                  # evict_namespace | rebalance
     value: int = 0                # target replica count / shard count
     reason: str = ""
+    target: str = ""              # namespace for fleet-granularity actions
 
     def __post_init__(self):
         if self.action not in ACTIONS:
@@ -141,6 +146,71 @@ class RecallGuardPolicy(ScalePolicy):
             return ScaleDecision("retune", 1, why + "; fallback active")
         return ScaleDecision(
             reason=why + "; fallback active, re-tune already flagged")
+
+
+@dataclasses.dataclass
+class FleetPressurePolicy(ScalePolicy):
+    """Namespace-granularity pressure policy over the schema-v6 fleet
+    rollup fields (``ns_queue_depth``, ``fleet_namespaces_resident``).
+
+    Two signals, two levers:
+
+      * a COLD namespace being starved while the residency set is full
+        (its queue is deep but it is not among the resident set's hot
+        namespaces) → ``evict_namespace`` the resident namespace with the
+        LEAST queued demand, freeing a residency slot for the starved one
+        to reload into on its next admission;
+      * sustained aggregate skew (one namespace holding more than
+        ``skew`` of all queued demand) → ``rebalance`` so the placement
+        plan re-packs device windows around the live footprint.
+
+    Recommendation-only like every ScalePolicy: the Fleet executes
+    ``evict_namespace``/``rebalance`` via ``apply_fleet``.
+    """
+
+    high_queue: int = 4            # per-namespace depth that reads as demand
+    skew: float = 0.5              # one namespace's share of queued demand
+    sustain: int = 3               # consecutive windows before acting
+    cooldown: int = 3
+    _hot: int = dataclasses.field(default=0, repr=False)
+    _hold: int = dataclasses.field(default=0, repr=False)
+
+    def recommend(self, stats: ServeStats) -> ScaleDecision:
+        if self._hold > 0:
+            self._hold -= 1
+            return ScaleDecision(reason="cooldown")
+        depth = stats.ns_queue_depth or {}
+        total = sum(depth.values())
+        hot = total > 0 and max(depth.values()) >= self.high_queue
+        self._hot = self._hot + 1 if hot else 0
+        if self._hot < self.sustain:
+            return ScaleDecision(reason="steady")
+        self._hot = 0
+        self._hold = self.cooldown
+        worst = max(depth, key=depth.get)
+        coldest = min(depth, key=depth.get)
+        if depth[worst] / max(total, 1) >= self.skew:
+            return ScaleDecision(
+                "rebalance", 0,
+                f"namespace {worst!r} holds {depth[worst]}/{total} queued "
+                f"tickets (skew >= {self.skew:g})", target=worst)
+        return ScaleDecision(
+            "evict_namespace", 0,
+            f"queued demand across {len(depth)} namespaces with "
+            f"{stats.fleet_namespaces_resident} resident — freeing the "
+            f"least-demanded slot", target=coldest)
+
+
+def apply_fleet(fleet, decision: ScaleDecision) -> bool:
+    """Execute a fleet-granularity decision on the live ``Fleet``.
+    Returns True iff it acted (an eviction refused by the in-flight
+    guard counts as not acted)."""
+    if decision.action == "evict_namespace" and decision.target:
+        return fleet.evict(decision.target)
+    if decision.action == "rebalance":
+        fleet.rebalance()
+        return True
+    return False
 
 
 def apply_guard(index, decision: ScaleDecision) -> bool:

@@ -89,12 +89,16 @@ def test_serve_stats_schema_and_legacy_keys():
     # DESIGN.md §8 changelog note) — the v1 fields and the legacy knn_*
     # keys are unchanged; 3 -> 4 in PR 7 (QuerySpec.use_tuned,
     # DESIGN.md §9.6); 4 -> 5 in PR 8 (audit_* / slo_alerts /
-    # serving_fallback / retune_requested, DESIGN.md §10)
+    # serving_fallback / retune_requested, DESIGN.md §10); 5 -> 6 in
+    # PR 9 (fleet_namespaces_resident/evicted, fleet_reloads,
+    # ns_queue_depth, DESIGN.md §11)
     st = ServeStats(races=3, cache_hits=5)
     d = st.as_dict()
-    assert d["schema_version"] == 5 and d["races"] == 3
+    assert d["schema_version"] == 6 and d["races"] == 3
     assert d["audit_sampled"] == 0 and d["audit_err_upper"] == 1.0
     assert d["serving_fallback"] is False
+    assert d["fleet_namespaces_resident"] == 0 and d["fleet_reloads"] == 0
+    assert d["ns_queue_depth"] is None
     assert d["plane_submitted"] == 0 and d["plane_latency_p99_ms"] == 0.0
     assert st["knn_races"] == 3 and st["knn_cache_hits"] == 5
     assert st["races"] == 3                        # new names work too

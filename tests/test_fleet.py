@@ -1,0 +1,428 @@
+"""Fleet coverage (DESIGN.md §11): namespace lifecycle + LRU residency,
+manifest recovery (payload + tuned sidecar + per-namespace quota),
+shared-plane namespace isolation of the query cache, eviction → reload
+bit-identity, the in-flight eviction guard, hot-namespace fairness on the
+shared plane, placement planning, the fleet pressure policy, and the
+crash-safe staged-directory checkpoint publish.
+
+The two-sharded-namespaces-on-one-mesh case runs as a subprocess on a
+forced 4-device host mesh (the test_distributed.py harness), covering
+placement windows, post-reload bit-identity and the sharded crash-safe
+save regardless of the parent's device count.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Index, ServeStats
+from repro.configs.base import BMOConfig
+from repro.fleet import (Fleet, FleetConfig, device_load, load_manifest,
+                         plan_placement)
+from repro.serve.plane import PlaneConfig, RequestPlane
+from repro.serve.scale import FleetPressurePolicy, ScaleDecision, apply_fleet
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(prog: str, devices: int = 4, timeout: int = 560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c",
+                          "import repro\n" + textwrap.dedent(prog)],
+                         capture_output=True, text=True, env=env,
+                         cwd=ROOT, timeout=timeout)
+    assert out.returncode == 0 and "OK" in out.stdout, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+
+
+def _cfg(**kw):
+    base = dict(k=4, delta=0.01, block=64, batch_arms=16, pulls_per_round=2,
+                metric="l2")
+    base.update(kw)
+    return BMOConfig(**base)
+
+
+def _corpus(n=160, d=128, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle + LRU residency
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_and_lru_residency(tmp_path):
+    root = str(tmp_path / "fleet")
+    fleet = Fleet(root, FleetConfig(max_resident=2))
+    for i, name in enumerate(("a", "b", "c")):
+        fleet.create(name, _corpus(seed=i), _cfg(), jax.random.PRNGKey(i))
+    assert fleet.namespaces == ["a", "b", "c"]
+    # third create pushed the LRU namespace out to its checkpoint
+    assert fleet.resident_count == 2 and fleet.evicted_count == 1
+    assert fleet.resident == ["b", "c"] and fleet.peek("a") is None
+    assert os.path.isdir(os.path.join(root, "ns", "a"))   # durable from birth
+
+    idx = fleet.get("a")                    # transparent reload
+    assert idx.n_live == 160 and fleet.reload_count == 1
+    assert fleet.resident_count == 2        # someone else made room
+    assert "a" in fleet.resident
+
+    with pytest.raises(ValueError, match="already exists"):
+        fleet.create("a", _corpus(), _cfg())
+    with pytest.raises(ValueError, match="bad namespace name"):
+        fleet.create("no/slashes", _corpus(), _cfg())
+    with pytest.raises(KeyError):
+        fleet.get("nope")
+
+    # the fleet-granularity scale actions execute against the live fleet
+    assert apply_fleet(fleet, ScaleDecision("evict_namespace", target="a"))
+    assert fleet.peek("a") is None
+    assert not fleet.evict("a")             # already cold → refused
+    assert apply_fleet(fleet, ScaleDecision("rebalance"))
+
+    fleet.drop("b")
+    assert "b" not in fleet and len(fleet) == 2
+    assert not os.path.exists(os.path.join(root, "ns", "b"))
+
+
+def test_open_recovers_manifest_with_sidecars(tmp_path):
+    from repro.tune import TunedConfig
+    root = str(tmp_path / "fleet")
+    ids = np.arange(160, dtype=np.int32)
+    fleet = Fleet(root, FleetConfig(max_resident=4))
+    fleet.create("a", _corpus(seed=1), _cfg(), jax.random.PRNGKey(0),
+                 payload=ids)
+    fleet.create("b", _corpus(seed=2), _cfg(), jax.random.PRNGKey(1),
+                 max_queue=3)
+    t = TunedConfig(epoch_rounds=4, pulls_per_round=1, batch_arms=16)
+    fleet.get("a")._apply_tuned(t)          # dirties the epoch
+    assert fleet.flush() >= 1               # re-checkpoints the dirty ns
+
+    fl2 = Fleet.open(root)
+    assert fl2.namespaces == ["a", "b"]
+    assert fl2.resident_count == 0          # lazy: nothing materialized yet
+    assert fl2.namespace_max_queue("b") == 3
+    assert fl2.namespace_max_queue("a") is None
+    a2 = fl2.get("a")
+    assert a2.tuned == t                    # tuned sidecar rode the reload
+    np.testing.assert_array_equal(a2.payload, fleet.get("a").payload)
+
+    doc = load_manifest(root)
+    assert doc["version"] == 1 and sorted(doc["namespaces"]) == ["a", "b"]
+    with pytest.raises(FileNotFoundError):
+        Fleet.open(str(tmp_path / "not_a_fleet"))
+
+
+# ---------------------------------------------------------------------------
+# shared plane: cache isolation, bit-identical reload, fairness, guard
+# ---------------------------------------------------------------------------
+
+
+def test_namespace_cache_isolation_on_shared_plane(tmp_path):
+    """Two namespaces holding IDENTICAL query vectors must never exchange
+    cached rows; drop+recreate of the same name starts cold."""
+    ca, cb = _corpus(seed=1), _corpus(seed=2)
+    fleet = Fleet(str(tmp_path / "fleet"), FleetConfig(max_resident=4))
+    fleet.create("a", ca, _cfg(), jax.random.PRNGKey(0))
+    fleet.create("b", cb, _cfg(), jax.random.PRNGKey(0))
+    plane = fleet.serve()
+    q = ca[:2]
+
+    ra = plane.query(q, rng=jax.random.PRNGKey(5), namespace="a")
+    rb = plane.query(q, rng=jax.random.PRNGKey(5), namespace="b")
+    # same bytes, different namespaces → each namespace's own answer
+    assert not np.array_equal(ra.values, rb.values)
+    ref = Index.build(cb, _cfg(), jax.random.PRNGKey(0)).query(
+        q, jax.random.PRNGKey(5))
+    assert rb.indices.tolist() == ref.indices.tolist()
+
+    hits0 = fleet._cache.hits               # exact repeat within a ns hits
+    ra2 = plane.query(q, rng=jax.random.PRNGKey(9), namespace="a")
+    assert fleet._cache.hits >= hits0 + q.shape[0]
+    assert ra2.indices.tolist() == ra.indices.tolist()
+
+    # drop + recreate same name (different corpus) must start cold: no
+    # stale hit may serve the OLD namespace's rows
+    fleet.drop("a")
+    fleet.create("a", cb, _cfg(), jax.random.PRNGKey(0))
+    hits1 = fleet._cache.hits
+    r3 = plane.query(q, rng=jax.random.PRNGKey(5), namespace="a")
+    assert fleet._cache.hits == hits1       # cold, as required
+    assert r3.indices.tolist() == ref.indices.tolist()
+
+
+def test_evict_reload_bit_identical_topk(tmp_path):
+    c = _corpus(seed=3)
+    fleet = Fleet(str(tmp_path / "fleet"), FleetConfig(max_resident=2))
+    fleet.create("x", c, _cfg(), jax.random.PRNGKey(0),
+                 payload=np.arange(c.shape[0], dtype=np.int32))
+    plane = fleet.serve()
+    q = c[:3] + 0.01
+
+    before = plane.query(q, rng=jax.random.PRNGKey(7), namespace="x",
+                         cache="bypass")
+    assert fleet.evict("x") and fleet.peek("x") is None
+    after = plane.query(q, rng=jax.random.PRNGKey(7), namespace="x",
+                        cache="bypass")    # transparent reload
+    assert fleet.reload_count == 1 and fleet.eviction_count >= 1
+    np.testing.assert_array_equal(before.indices, after.indices)
+    np.testing.assert_array_equal(before.values, after.values)
+    np.testing.assert_array_equal(
+        fleet.get("x").payload[before.indices],
+        fleet.get("x").payload[after.indices])
+
+    st = plane.stats
+    assert st.fleet_namespaces_resident == 1
+    assert st.fleet_namespaces_evicted == 0
+    assert st.fleet_reloads == 1
+    assert st.ns_queue_depth == {}          # drained
+
+
+def test_eviction_guard_refuses_inflight_namespace(tmp_path):
+    c = _corpus(seed=4)
+    fleet = Fleet(str(tmp_path / "fleet"), FleetConfig(max_resident=2))
+    fleet.create("x", c, _cfg(), jax.random.PRNGKey(0))
+    plane = fleet.serve()
+    t = plane.submit(c[:2], rng=jax.random.PRNGKey(1), namespace="x",
+                     cache="bypass")
+    assert fleet.evict("x") is False        # in-flight ticket → refused
+    with pytest.raises(RuntimeError, match="in-flight"):
+        fleet.drop("x")
+    plane.drain()
+    assert t.result.terminal
+    assert fleet.evict("x") is True         # quiesced → allowed
+
+
+def test_hot_namespace_cannot_starve_cold(tmp_path):
+    """Admission round-robins across (tenant, namespace) queues: a COLD
+    namespace's single ticket rides the very next race group even while a
+    hot namespace floods the plane — and its reload is transparent."""
+    ca, cb = _corpus(seed=1), _corpus(seed=2)
+    fleet = Fleet(str(tmp_path / "fleet"), FleetConfig(max_resident=2))
+    fleet.create("hot", ca, _cfg(), jax.random.PRNGKey(0))
+    fleet.create("cold", cb, _cfg(), jax.random.PRNGKey(1))
+    plane = fleet.serve(PlaneConfig(max_group_queries=8,
+                                    max_active_groups=2))
+    assert fleet.evict("cold")              # make it actually cold
+
+    heavy = [plane.submit(ca[:4] + i, tenant="t", namespace="hot",
+                          rng=jax.random.PRNGKey(i), cache="bypass")
+             for i in range(6)]
+    cold = plane.submit(cb[:4], tenant="t", namespace="cold",
+                        rng=jax.random.PRNGKey(99), cache="bypass")
+    assert fleet.peek("cold") is not None   # reloaded at submit
+    plane.step()
+    # first admission round: one hot ticket + the cold ticket — the flood
+    # cannot push the cold namespace past its fair slot
+    assert cold.admitted_at is not None
+    assert heavy[0].admitted_at is not None
+    assert all(t.admitted_at is None for t in heavy[1:])
+    plane.drain()
+    assert cold.finished_at <= min(t.finished_at for t in heavy[1:])
+    assert cold.result.reason == "certified"
+    assert all(t.result.reason == "certified" for t in heavy)
+
+
+def test_router_plane_requires_namespace(tmp_path):
+    fleet = Fleet(str(tmp_path / "fleet"), FleetConfig(max_resident=2))
+    fleet.create("x", _corpus(), _cfg(), jax.random.PRNGKey(0))
+    plane = fleet.serve()
+    with pytest.raises(ValueError):
+        plane.submit(_corpus()[:2], rng=jax.random.PRNGKey(0))  # no ns
+    with pytest.raises(KeyError):
+        plane.submit(_corpus()[:2], rng=jax.random.PRNGKey(0),
+                     namespace="ghost")
+    with pytest.raises(ValueError):
+        RequestPlane()                      # neither index nor router
+
+
+def test_fleet_plane_default_namespace_enables_audit(tmp_path):
+    """``fleet.serve(default=ns)`` binds that namespace's handle as the
+    plane's default index: its fully-certified traffic is δ-audited (and
+    un-namespaced submits route to it), while other namespaces stay
+    outside the auditor's contract (``note_skip("namespaced")``)."""
+    fleet = Fleet(str(tmp_path / "fleet"), FleetConfig(max_resident=2))
+    fleet.create("a", _corpus(seed=1), _cfg(), jax.random.PRNGKey(0))
+    fleet.create("b", _corpus(seed=2), _cfg(), jax.random.PRNGKey(1))
+    plane = fleet.serve(PlaneConfig(audit_rate=1.0), default="a")
+    assert plane.auditor is not None and plane.index is fleet.peek("a")
+    q = _corpus(seed=3)[:2]
+    ra = plane.query(q, rng=jax.random.PRNGKey(5), namespace="a",
+                     cache="bypass")
+    r0 = plane.query(q, rng=jax.random.PRNGKey(5), cache="bypass")
+    assert r0.indices.tolist() == ra.indices.tolist()  # routed to 'a'
+    plane.query(q, rng=jax.random.PRNGKey(6), namespace="b", cache="bypass")
+    plane.audit_flush()
+    a = plane.auditor.summary()
+    assert a["sampled_rows"] == 2 * q.shape[0]     # both 'a' tickets
+    assert a["mismatch_rows"] == 0
+    assert plane.auditor.skipped["namespaced"] == 1   # the 'b' ticket
+    # a router-only plane (no default) keeps auditing off, not crashing
+    assert fleet.serve(PlaneConfig(audit_rate=1.0)).auditor is None
+
+
+# ---------------------------------------------------------------------------
+# placement + pressure policy
+# ---------------------------------------------------------------------------
+
+
+def test_placement_plan_deterministic_and_balanced():
+    fp = {"big": (2, 1000), "s1": (1, 10), "s2": (1, 10)}
+    plan = plan_placement(fp, 4)
+    assert plan == plan_placement(fp, 4)    # deterministic
+    assert plan["big"] == 0                 # heaviest first, lowest tie
+    assert plan["s1"] != plan["big"] or plan["s1"] >= 2
+    load = device_load(fp, plan, 4)
+    assert load.max() == pytest.approx(500.0)   # smalls avoid big's window
+    # a namespace spanning the whole mesh pins at offset 0
+    assert plan_placement({"span": (8, 100)}, 4)["span"] == 0
+    with pytest.raises(ValueError):
+        plan_placement(fp, 0)
+
+
+def test_fleet_pressure_policy_recommends_and_cools_down():
+    pol = FleetPressurePolicy(high_queue=4, sustain=2, cooldown=1, skew=0.9)
+    st = ServeStats(ns_queue_depth={"a": 5, "b": 1},
+                    fleet_namespaces_resident=2)
+    assert pol.recommend(st).action == "none"       # window 1 of 2
+    d = pol.recommend(st)                            # sustained → act
+    assert d.action == "evict_namespace" and d.target == "b"
+    assert pol.recommend(st).reason == "cooldown"
+
+    skewed = FleetPressurePolicy(high_queue=4, sustain=1, skew=0.5)
+    d2 = skewed.recommend(ServeStats(ns_queue_depth={"a": 9, "b": 1}))
+    assert d2.action == "rebalance" and d2.target == "a"
+    # empty depth never trips
+    idle = FleetPressurePolicy(sustain=1)
+    assert idle.recommend(ServeStats()).action == "none"
+
+
+# ---------------------------------------------------------------------------
+# crash-safe checkpoint publish (satellite: kill the write midway)
+# ---------------------------------------------------------------------------
+
+
+def test_crash_mid_save_preserves_previous_checkpoint(tmp_path, monkeypatch):
+    """Kill the save after the arrays are written but before the payload
+    sidecar lands: the destination must still hold the COMPLETE previous
+    checkpoint (all-or-nothing publish), with no tmp residue."""
+    c = _corpus(seed=5)
+    ids = np.arange(c.shape[0], dtype=np.int32)
+    idx = Index.build(c, _cfg(), jax.random.PRNGKey(0), payload=ids)
+    path = str(tmp_path / "idx")
+    idx.save(path)
+    q = c[:2]
+    want = Index.load(path).query(q, jax.random.PRNGKey(3))
+    n_before = idx.n_live
+
+    idx.insert(c[:8] + 5.0, payload=ids[:8])
+    real_save = np.save
+
+    def boom(file, arr, *a, **kw):
+        if str(file).endswith("payload.npy"):
+            raise OSError("disk died mid-write")
+        return real_save(file, arr, *a, **kw)
+
+    monkeypatch.setattr("repro.api.handle.np.save", boom)
+    with pytest.raises(OSError, match="mid-write"):
+        idx.save(path)
+    monkeypatch.undo()
+
+    assert not [p for p in os.listdir(tmp_path) if ".tmp-" in p]
+    again = Index.load(path)
+    assert again.n_live == n_before         # old checkpoint, fully intact
+    got = again.query(q, jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(got.indices, want.indices)
+    np.testing.assert_array_equal(again.payload[:ids.shape[0]], ids)
+
+    # a stale tmp sibling from a dead writer is ignored by load and does
+    # not block the next successful publish
+    os.makedirs(path + ".tmp-99999")
+    with open(os.path.join(path + ".tmp-99999", "junk"), "w") as f:
+        f.write("partial")
+    idx.save(path)
+    assert Index.load(path).n_live == n_before + 8
+
+
+# ---------------------------------------------------------------------------
+# two sharded namespaces on one 4-device mesh (subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_two_sharded_namespaces_on_one_mesh_subprocess():
+    _run("""
+    import os, tempfile
+    import numpy as np, jax
+    from repro.api import Index
+    from repro.configs.base import BMOConfig
+    from repro.fleet import Fleet, FleetConfig
+    import repro.checkpoint.manager as mgr
+
+    cfg = BMOConfig(k=4, delta=0.01, block=64, batch_arms=16,
+                    pulls_per_round=2, metric="l2")
+    r = np.random.default_rng(0)
+    A = r.normal(size=(256, 128)).astype(np.float32)
+    B = r.normal(size=(320, 128)).astype(np.float32)
+    root = tempfile.mkdtemp(prefix="bmo_fleet_") + "/fleet"
+    fleet = Fleet(root, FleetConfig(max_resident=2))
+    fleet.create("a", A, cfg, jax.random.PRNGKey(1), shards=2)
+    fleet.create("b", B, cfg, jax.random.PRNGKey(2), shards=2)
+
+    # placement: two S=2 namespaces pack into disjoint device windows
+    plan = fleet.rebalance(4)
+    assert sorted(plan.values()) == [0, 2], plan
+    offs = {n: fleet.get(n).store.device_offset for n in ("a", "b")}
+    assert offs == plan, (offs, plan)
+
+    plane = fleet.serve()
+    qa = A[:3] + 0.01
+    ra = plane.query(qa, rng=jax.random.PRNGKey(5), namespace="a",
+                     cache="bypass")
+    rb = plane.query(B[:3] + 0.01, rng=jax.random.PRNGKey(6),
+                     namespace="b", cache="bypass")
+    assert ra.reason == "certified" and rb.reason == "certified"
+    ref = Index.build(A, cfg, jax.random.PRNGKey(1), shards=2).query(
+        qa, jax.random.PRNGKey(5))
+    assert ra.indices.tolist() == ref.indices.tolist()
+
+    # evict + reload of a SHARDED namespace: bit-identical and the planned
+    # device window is re-applied to the fresh handle
+    assert fleet.evict("a")
+    ra2 = plane.query(qa, rng=jax.random.PRNGKey(5), namespace="a",
+                      cache="bypass")
+    assert ra2.indices.tolist() == ra.indices.tolist()
+    assert fleet.get("a").store.device_offset == plan["a"]
+
+    # crash-safe sharded save: die after one shard is staged — the
+    # previous checkpoint must survive whole
+    idx = fleet.get("b")
+    idx.insert(B[:4] + 9.0)
+    calls = {"n": 0}
+    real = mgr.save
+    def boom(p, state, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise OSError("killed mid-save")
+        return real(p, state, **kw)
+    mgr.save = boom
+    try:
+        idx.save(os.path.join(root, "ns", "b"))
+        raise SystemExit("save should have died")
+    except OSError:
+        pass
+    mgr.save = real
+    assert not [p for p in os.listdir(os.path.join(root, "ns"))
+                if ".tmp-" in p]
+    old = Index.load(os.path.join(root, "ns", "b"))
+    assert old.n_live == 320, old.n_live     # pre-insert checkpoint intact
+
+    st = plane.stats
+    assert st.fleet_namespaces_resident == 2 and st.fleet_reloads >= 1
+    print("OK")
+    """, devices=4)

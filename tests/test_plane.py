@@ -359,15 +359,15 @@ def test_serve_stats_v3_schema_and_legacy_keys():
     """PR-6 satellite: as_dict() carries the obs_* fields; the v2
     plane_* and legacy ``knn_*`` keys keep working (schema bumped 3 -> 4
     in PR 7 for QuerySpec.use_tuned, 4 -> 5 in PR 8 for the audit/SLO
-    fields)."""
+    fields, 5 -> 6 in PR 9 for the fleet_*/ns_queue_depth fields)."""
     from repro.api import ServeStats
     from repro.api.spec import SCHEMA_VERSION
-    assert SCHEMA_VERSION == 5
+    assert SCHEMA_VERSION == 6
     idx, queries = _dense_index()
     plane = RequestPlane(idx)
     plane.query(queries, rng=jax.random.PRNGKey(1))
     d = plane.stats.as_dict()
-    assert d["schema_version"] == 5
+    assert d["schema_version"] == 6
     for f in ("plane_submitted", "plane_shed", "plane_queue_depth",
               "plane_latency_p99_ms", "obs_events", "obs_event_drops",
               "obs_epoch_ms", "obs_latency_ms"):
@@ -426,7 +426,9 @@ def test_requeue_preserves_same_tenant_fifo():
                       cache="bypass")
     plane.step()                          # launches t1's bucket only
     assert t1.admitted_at is not None
-    queued_ids = [e.ticket.id for e in plane._queues["default"]]
+    # queues are keyed (tenant, namespace) since the fleet refactor (§11.2)
+    queued_ids = [e.ticket.id
+                  for e in plane._queues[("default", None)]]
     assert queued_ids == [t2.id, t3.id]   # FIFO survives the requeue
     plane.drain()
     assert [t.result.reason for t in (t1, t2, t3)] == ["certified"] * 3

@@ -1,0 +1,238 @@
+"""Fleet serving bench (DESIGN.md §11.6): N namespaces, M resident, one
+request plane.
+
+Builds a fleet of ``--namespaces`` single-shard namespaces with an LRU
+residency budget of ``--resident`` (everything else lives as a crash-safe
+checkpoint), then offers mixed open-loop Poisson traffic through the ONE
+shared ``RequestPlane``: a small hot set takes ``--hot-frac`` of requests,
+the rest spread uniformly over the remaining (mostly cold) namespaces —
+every cold hit pays a transparent reload inside ``submit``. Latency is
+finish − intended arrival (open loop: arrivals never wait), charged
+honestly to hot and cold traffic alike.
+
+Evidence emitted (BENCH_fleet.json is the committed artifact; CI runs
+``--smoke`` against benchmarks/baselines/BENCH_fleet_smoke.json via
+tools/bench_compare.py):
+
+  * per-class (hot / cold / all) p50/p99 + qps entries,
+  * reload latency percentiles + count, resident-set ceiling over the run,
+  * a bit-identity probe: one namespace queried, evicted, re-queried — the
+    post-reload top-k must match exactly.
+
+    PYTHONPATH=src python tools/bench_fleet.py --smoke
+    PYTHONPATH=src python tools/bench_fleet.py --out BENCH_fleet.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.api.stream import percentile as _pct
+from repro.configs.base import BMOConfig
+from repro.fleet import Fleet, FleetConfig
+from repro.serve.plane import PlaneConfig
+
+
+def _summary(lat_ms):
+    if not lat_ms:
+        return {"p50_ms": None, "p99_ms": None, "mean_ms": None, "n": 0}
+    return {"p50_ms": round(_pct(lat_ms, 50), 3),
+            "p99_ms": round(_pct(lat_ms, 99), 3),
+            "mean_ms": round(float(np.mean(lat_ms)), 3),
+            "n": len(lat_ms)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--namespaces", type=int, default=64)
+    ap.add_argument("--resident", type=int, default=8)
+    ap.add_argument("--n", type=int, default=256, help="rows per namespace")
+    ap.add_argument("--d", type=int, default=256)
+    ap.add_argument("--q", type=int, default=4, help="queries per request")
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=160)
+    ap.add_argument("--hot-frac", type=float, default=0.7,
+                    help="fraction of requests aimed at the 2-namespace "
+                         "hot set (the rest spread over the cold tail)")
+    ap.add_argument("--load", type=float, default=2.0,
+                    help="offered load as a multiple of measured hot "
+                         "service capacity")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small preset for CI (<~2 min)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--root", default="",
+                    help="fleet root (default: a fresh temp dir)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.namespaces, args.resident = 12, 4
+        args.n, args.d, args.requests = 192, 128, 40
+
+    t0 = time.perf_counter()
+    root = args.root or tempfile.mkdtemp(prefix="bmo_bench_fleet_") + "/fleet"
+    cfg = BMOConfig(k=args.k, delta=0.05, block=min(64, args.d),
+                    batch_arms=16, pulls_per_round=2, metric="l2")
+    fleet = Fleet(root, FleetConfig(max_resident=args.resident))
+    rng = np.random.default_rng(args.seed)
+    names = [f"ns{i:03d}" for i in range(args.namespaces)]
+    corpora = {}
+    t = time.perf_counter()
+    for i, name in enumerate(names):
+        corpora[name] = rng.normal(
+            size=(args.n, args.d)).astype(np.float32)
+        fleet.create(name, corpora[name], cfg, jax.random.PRNGKey(i))
+    build_s = time.perf_counter() - t
+    print(f"[bench_fleet] built {args.namespaces} namespaces "
+          f"(n={args.n} d={args.d}) in {build_s:.1f}s — "
+          f"{fleet.resident_count} resident / "
+          f"{fleet.evicted_count} checkpointed")
+
+    # -- bit-identity probe: evict → reload must not change answers --------
+    probe_ns = names[0]                     # cold by now (LRU)
+    probe_q = corpora[probe_ns][:args.q] + 0.01
+    plane = fleet.serve(PlaneConfig(max_group_queries=max(args.q * 8, 16)))
+    r1 = plane.query(probe_q, rng=jax.random.PRNGKey(123),
+                     namespace=probe_ns, cache="bypass")
+    assert fleet.evict(probe_ns)
+    t = time.perf_counter()
+    r2 = plane.query(probe_q, rng=jax.random.PRNGKey(123),
+                     namespace=probe_ns, cache="bypass")
+    probe_reload_ms = (time.perf_counter() - t) * 1e3
+    bit_identical = (r1.indices.tolist() == r2.indices.tolist()
+                     and r1.values.tolist() == r2.values.tolist())
+    assert bit_identical, "post-reload top-k diverged"
+    print(f"[bench_fleet] evict→reload bit-identical "
+          f"(reload+query {probe_reload_ms:.1f} ms)")
+
+    # -- traffic mix: hot set vs long cold tail ----------------------------
+    hot = names[-2:]                        # most recently created → warm
+    cold_pool = names[:-2]
+    picks = [rng.choice(hot) if rng.random() < args.hot_frac
+             else rng.choice(cold_pool) for _ in range(args.requests)]
+    reqs = [corpora[ns][rng.integers(0, args.n, args.q)]
+            + 0.05 * rng.normal(size=(args.q, args.d)).astype(np.float32)
+            for ns in picks]
+    reqs = [r.astype(np.float32) for r in reqs]
+
+    # warm the pow2 group-size specializations outside the timed window
+    # (coalesced groups race at power-of-two row counts; each new size is
+    # a fresh compile that must not be charged to the open loop)
+    for size in {args.q, 2 * args.q, 4 * args.q, 8 * args.q}:
+        warm = [plane.submit(reqs[0] + j, rng=jax.random.PRNGKey(7 + j),
+                             namespace=hot[0], cache="bypass")
+                for j in range(max(1, size // args.q))]
+        plane.drain()
+        del warm
+
+    # measured hot service time sets the offered rate
+    plane.query(reqs[0], rng=jax.random.PRNGKey(1), namespace=hot[0],
+                cache="bypass")
+    t = time.perf_counter()
+    for i in range(3):
+        plane.query(reqs[i], rng=jax.random.PRNGKey(2 + i),
+                    namespace=hot[0], cache="bypass")
+    t_service = (time.perf_counter() - t) / 3
+    lam = args.load / t_service
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, args.requests))
+    print(f"[bench_fleet] hot service {t_service * 1e3:.1f} ms → offered "
+          f"{lam:.1f} req/s ({args.load}x), hot_frac={args.hot_frac}")
+
+    tickets = [None] * args.requests
+    reload_ms, max_resident = [], fleet.resident_count
+    start = time.monotonic()
+    i = 0
+    while i < args.requests or plane.active:
+        now = time.monotonic() - start
+        while i < args.requests and arrivals[i] <= now:
+            r0 = fleet.reload_count
+            t = time.perf_counter()
+            tickets[i] = plane.submit(reqs[i], tenant="bench",
+                                      namespace=picks[i],
+                                      rng=jax.random.PRNGKey(200 + i),
+                                      cache="bypass")
+            if fleet.reload_count > r0:     # this submit paid a reload
+                reload_ms.append((time.perf_counter() - t) * 1e3)
+            i += 1
+        if plane.active:
+            plane.step()
+            fleet.enforce_residency()   # pull quiesced ns back to budget
+            max_resident = max(max_resident, fleet.resident_count)
+        elif i < args.requests:
+            time.sleep(max(0.0, min(arrivals[i] - (time.monotonic() - start),
+                                    0.01)))
+    window_s = max(t_.finished_at for t_ in tickets) - start
+    lat = [((tickets[j].finished_at - start) - arrivals[j]) * 1e3
+           for j in range(args.requests)]
+    is_hot = [picks[j] in hot for j in range(args.requests)]
+    lat_hot = [lat[j] for j in range(args.requests) if is_hot[j]]
+    lat_cold = [lat[j] for j in range(args.requests) if not is_hot[j]]
+    assert all(t_.result.reason == "certified" for t_ in tickets)
+    # the budget is enforced as soon as namespaces quiesce; the transient
+    # peak (cold tickets in flight pin their namespaces) is reported
+    fleet.enforce_residency()
+    assert fleet.resident_count <= args.resident, \
+        f"residency budget violated: {fleet.resident_count} > {args.resident}"
+
+    st = plane.stats
+
+    def _entry(mode, lats, n_req):
+        # _summary's row count would shadow the corpus-size ID field "n",
+        # so it goes first and the identity fields win
+        return {**_summary(lats), "bench": "fleet", "mode": mode,
+                "Q": args.q, "n": args.n, "d": args.d, "k": args.k,
+                "namespaces": args.namespaces, "resident": args.resident,
+                "requests": n_req, "qps": round(n_req / window_s, 2)}
+
+    out = {
+        "bench": "fleet",
+        "schema_version": 1,
+        "config": {"namespaces": args.namespaces,
+                   "resident": args.resident, "n": args.n, "d": args.d,
+                   "q": args.q, "k": args.k, "requests": args.requests,
+                   "hot_frac": args.hot_frac, "load": args.load,
+                   "service_ms": round(t_service * 1e3, 3),
+                   "build_s": round(build_s, 1),
+                   "smoke": bool(args.smoke)},
+        "entries": [
+            _entry("all", lat, args.requests),
+            _entry("hot", lat_hot, len(lat_hot)),
+            _entry("cold", lat_cold, len(lat_cold)),
+        ],
+        "reload": {**_summary(reload_ms),
+                   "count": len(reload_ms),
+                   "total_reloads": fleet.reload_count,
+                   "probe_reload_ms": round(probe_reload_ms, 3),
+                   "bit_identical_after_reload": bit_identical},
+        "residency": {"max_resident_seen": max_resident,
+                      "budget": args.resident,
+                      "evictions": fleet.eviction_count,
+                      "final": fleet.stats()},
+        "cold_over_hot_p99": (
+            round(_pct(lat_cold, 99) / max(_pct(lat_hot, 99), 1e-9), 2)
+            if lat_cold and lat_hot else None),
+        "plane": {"submitted": st.plane_submitted,
+                  "epochs": st.plane_epochs,
+                  "shed": st.plane_shed},
+        "wall_s": round(time.perf_counter() - t0, 1),
+    }
+    print(json.dumps(out, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"[bench_fleet] wrote {args.out}")
+    if not args.root:
+        shutil.rmtree(root, ignore_errors=True)
+    return out
+
+
+if __name__ == "__main__":
+    main()
