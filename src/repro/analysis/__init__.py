@@ -1,0 +1,27 @@
+"""repro.analysis — the invariant lint engine (DESIGN.md §12).
+
+Nine PRs of review enforced this repo's proof obligations by eye: the
+δ union-bound accounting behind every CI radius, the epoch-fence
+discipline behind every store swap, the no-silent-host-sync rule on the
+per-epoch hot paths, the no-mid-traffic-recompile contract, the metrics
+naming scheme, and the VMEM budgets of the Pallas kernels. This package
+makes them machine-checked: an AST rule engine (``engine.py``) with a
+repo-specific rule catalog (``rules_*.py``), inline
+``# repro-lint: allow[rule]`` suppressions, and a committed ratchet
+baseline (``tools/lint_baseline.json``) so pre-existing findings are
+frozen while any NEW violation fails CI.
+
+Pure stdlib on purpose — the linter must run (and fail fast) in a CI
+job that never imports jax.
+"""
+from repro.analysis.catalog import default_rules
+from repro.analysis.engine import (BASELINE_VERSION, REPORT_VERSION, Finding,
+                                   LintEngine, LintReport, Rule,
+                                   apply_baseline, baseline_from,
+                                   load_baseline, save_baseline)
+
+__all__ = [
+    "BASELINE_VERSION", "REPORT_VERSION", "Finding", "LintEngine",
+    "LintReport", "Rule", "apply_baseline", "baseline_from",
+    "default_rules", "load_baseline", "save_baseline",
+]

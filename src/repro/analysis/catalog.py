@@ -1,0 +1,24 @@
+"""The repo's rule catalog — one ``default_rules()`` so the CLI, the CI
+job, and the tests all lint with the same set (DESIGN.md §12)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.engine import Rule
+from repro.analysis.rules_delta import DeltaLedgerRule
+from repro.analysis.rules_fence import EpochFenceRule
+from repro.analysis.rules_hostsync import HostSyncRule
+from repro.analysis.rules_metrics import MetricsConformanceRule
+from repro.analysis.rules_pallas import PallasBudgetRule
+from repro.analysis.rules_recompile import RecompileHazardRule
+
+
+def default_rules() -> List[Rule]:
+    return [
+        DeltaLedgerRule(),
+        EpochFenceRule(),
+        HostSyncRule(),
+        RecompileHazardRule(),
+        MetricsConformanceRule(),
+        PallasBudgetRule(),
+    ]

@@ -1,0 +1,133 @@
+"""host-sync: no silent device→host transfers on the per-epoch hot
+paths (DESIGN.md §12.4).
+
+A ``float()`` / ``.item()`` / ``np.asarray()`` / ``block_until_ready()``
+on a device value blocks the Python thread on the device stream. On the
+serving hot paths — one call per *epoch*, potentially thousands per
+second — a hidden sync serializes the launch pipeline and caps qps at
+the launch latency. The discipline (DESIGN.md §8): arrays cross to the
+host at ONE deliberate boundary per epoch (``RaceSession`` snapshot
+capture via ``repro.utils.hostsync.host_fetch``), and everything
+downstream works on host-resident numpy.
+
+Statically, "is this value on device?" is undecidable — so the rule
+inverts the burden: inside the configured hot functions, every sync-
+shaped call must carry an explicit boundary annotation
+(``# host-sync: <why>`` on the call's line) or go through the sanctioned
+``host_fetch`` helper (which is itself an allow-scoped
+``jax.device_get``). The runtime companion is the CI sanitize tier:
+tier-1 under ``jax.transfer_guard("disallow")``, which fails on real
+hardware exactly where an annotation is missing or lying.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Set
+
+from repro.analysis.engine import FileContext, Finding, Rule, dotted_name
+
+#: per-file hot functions — one entry per per-epoch serving loop
+HOT_FUNCTIONS: Dict[str, Set[str]] = {
+    "src/repro/index/anytime.py": {
+        "step", "_step_impl", "_refresh", "_ingest", "_record_epoch",
+        "_epoch_extra", "snapshot", "retire", "done", "exhausted",
+        "_to_host", "_merge_shard_partials",
+    },
+    "src/repro/serve/plane.py": {
+        "step", "_harvest", "_ingest", "_trace_ticket_epoch",
+        "_terminal_reason", "_row_result", "_build_result",
+        "_launch_group",
+    },
+    "src/repro/index/batched_race.py": {
+        "fused_race_topk",
+    },
+}
+
+#: sanctioned explicit-boundary helpers — calls through these pass
+SANCTIONED = ("host_fetch", "device_get")
+
+_ANNOTATION = "# host-sync:"
+
+
+def _sync_shape(node: ast.Call) -> str:
+    """'' when the call is not sync-shaped, else a short label."""
+    fn = node.func
+    if isinstance(fn, ast.Name) and fn.id == "float":
+        if node.args and not isinstance(node.args[0], ast.Constant):
+            return "float()"
+        return ""
+    name = dotted_name(fn)
+    if name in ("np.asarray", "numpy.asarray", "np.array", "numpy.array"):
+        return name + "()"
+    if isinstance(fn, ast.Attribute):
+        if fn.attr == "item" and not node.args:
+            return ".item()"
+        if fn.attr == "block_until_ready":
+            return ".block_until_ready()"
+    return ""
+
+
+class HostSyncRule(Rule):
+    name = "host-sync"
+    doc = ("device->host syncs on per-epoch hot paths go through "
+           "host_fetch or carry an explicit '# host-sync:' boundary "
+           "annotation")
+
+    def __init__(self, hot: Dict[str, Set[str]] = HOT_FUNCTIONS):
+        self.hot = hot
+
+    def _hot_set(self, rel: str):
+        for path, fns in self.hot.items():
+            # match on the repo path or any suffix of it (the engine may
+            # be handed paths relative to src/ or to the repo root)
+            if rel == path or path.endswith("/" + rel) \
+                    or rel.endswith("/" + path.split("src/", 1)[-1]):
+                return fns
+        return None
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        fns = self._hot_set(ctx.rel)
+        if fns is None:
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            label = _sync_shape(node)
+            if not label:
+                continue
+            chain = ctx.function_chain(node)
+            if not chain or not any(f in fns for f in chain):
+                continue
+            if any(f in SANCTIONED for f in chain):
+                continue  # inside the sanctioned boundary helper itself
+            # float(np.sum(host_fetch(x)))-style wrappers: the value
+            # already crossed at the sanctioned boundary
+            if any(isinstance(sub, ast.Call)
+                   and dotted_name(sub.func).rsplit(".", 1)[-1]
+                   in SANCTIONED
+                   for a in node.args for sub in ast.walk(a)):
+                continue
+            line = ctx.lines[node.lineno - 1] if \
+                node.lineno <= len(ctx.lines) else ""
+            if _ANNOTATION in line:
+                continue
+            # multi-line calls: annotation may sit on the statement head
+            # line or on a comment line directly above it
+            stmt = node
+            while hasattr(stmt, "parent") and not isinstance(
+                    stmt, ast.stmt):
+                stmt = stmt.parent  # type: ignore[attr-defined]
+            if isinstance(stmt, ast.stmt) and stmt.lineno <= len(ctx.lines):
+                head = ctx.lines[stmt.lineno - 1]
+                above = ctx.lines[stmt.lineno - 2] \
+                    if stmt.lineno >= 2 else ""
+                if _ANNOTATION in head or (
+                        above.lstrip().startswith("#")
+                        and _ANNOTATION in above):
+                    continue
+            yield ctx.finding(
+                self.name, node,
+                f"{label} inside hot function {chain[0]!r} — a silent "
+                f"device sync here serializes the epoch pipeline; route "
+                f"through repro.utils.hostsync.host_fetch or annotate "
+                f"the line with '# host-sync: <why this is host-side>'")

@@ -1,0 +1,156 @@
+"""recompile-hazard: no mid-traffic XLA recompiles (DESIGN.md §12.5).
+
+The serving stack's latency contract assumes one warm race pre-compiles
+every (Q, W, T) specialization a request can reach (DESIGN.md §7.1, §9):
+frontier widths shrink down a pow2 chain, race batches are pow2-padded,
+and adaptive R is pow2-quantized — so the set of shapes is log-sized and
+warmable. The ``repro_xla_compiles_total`` regression test enforces this
+at runtime; this rule catches the two static ways PRs have almost broken
+it:
+
+  * a ``jax.jit`` call *inside* a per-call function — every invocation
+    builds a fresh jitted callable with an empty cache, i.e. a
+    guaranteed recompile. Module level, ``__init__`` (once per object)
+    and ``lru_cache``-memoized factories are the sanctioned homes;
+  * unhashable values in ``static_argnums``/``static_argnames``
+    positions (a list/dict/set default on a static parameter) — a
+    TypeError at best, a per-call retrace forever at worst;
+  * pow2 discipline in batch construction: a ``len(...)`` fed straight
+    into a ``jnp.zeros``-style shape inside the frontier/plane files
+    creates one XLA specialization per distinct length — bucket it
+    through ``next_pow2``/``bucket_width`` first.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.engine import (FileContext, Finding, Rule, call_name,
+                                   dotted_name, has_decorator)
+
+#: files whose batch/shape construction must stay on the pow2 chain
+POW2_FILES = ("index/frontier.py", "serve/plane.py", "index/anytime.py",
+              "index/batched_race.py")
+
+#: shape-taking constructors checked by the pow2 discipline
+_SHAPE_CTORS = ("zeros", "ones", "full", "empty")
+
+#: helpers that launder a length onto the pow2 chain
+_POW2_HELPERS = ("next_pow2", "pow2_floor", "bucket_width", "floor_width")
+
+
+def _jit_target(node: ast.Call):
+    """The function object being jitted, for jax.jit(f, ...) calls."""
+    return node.args[0] if node.args else None
+
+
+def _contains_len(node: ast.AST) -> bool:
+    names = [call_name(sub) for sub in ast.walk(node)
+             if isinstance(sub, ast.Call)]
+    if any(n.rsplit(".", 1)[-1] in _POW2_HELPERS for n in names):
+        return False  # laundered through the pow2 chain
+    return any(n == "len" for n in names)
+
+
+class RecompileHazardRule(Rule):
+    name = "recompile-hazard"
+    doc = ("no per-call jax.jit, no unhashable static args, and batch "
+           "shapes in frontier/plane files stay on the pow2 chain")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        pow2_scope = any(ctx.rel.endswith(p) for p in POW2_FILES)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                cname = call_name(node)
+                if cname in ("jax.jit", "jit"):
+                    yield from self._check_jit_site(ctx, node)
+                    yield from self._check_static_args(ctx, node)
+                if pow2_scope and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _SHAPE_CTORS \
+                        and dotted_name(node.func).startswith(("jnp.",
+                                                               "jax.numpy")):
+                    yield from self._check_pow2_shape(ctx, node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_static_defaults(ctx, node)
+
+    def _check_jit_site(self, ctx: FileContext,
+                        node: ast.Call) -> Iterable[Finding]:
+        fn = ctx.enclosing_function(node)
+        if fn is None or fn.name == "__init__":
+            return
+        cur = fn
+        while cur is not None:
+            if has_decorator(cur, "lru_cache", "cache"):
+                return
+            cur = ctx.enclosing_function(cur)
+        yield ctx.finding(
+            self.name, node,
+            f"jax.jit called inside per-call function {fn.name!r} — each "
+            f"call builds a fresh jitted callable (guaranteed recompile); "
+            f"hoist to module level or memoize the factory with "
+            f"functools.lru_cache")
+
+    def _check_static_args(self, ctx: FileContext,
+                           node: ast.Call) -> Iterable[Finding]:
+        static_names = []
+        for kw in node.keywords:
+            if kw.arg == "static_argnames" and isinstance(
+                    kw.value, (ast.Tuple, ast.List)):
+                static_names = [e.value for e in kw.value.elts
+                                if isinstance(e, ast.Constant)]
+        target = _jit_target(node)
+        if not static_names or not isinstance(target, ast.Name):
+            return
+        # resolve the jitted function when defined in the same module
+        for sub in ast.walk(ctx.tree):
+            if isinstance(sub, ast.FunctionDef) and sub.name == target.id:
+                yield from self._unhashable_defaults(ctx, sub, static_names)
+                return
+
+    def _check_static_defaults(self, ctx: FileContext,
+                               fn: ast.AST) -> Iterable[Finding]:
+        """Decorator form: @partial(jax.jit, static_argnames=(...))."""
+        for dec in fn.decorator_list:
+            if not (isinstance(dec, ast.Call)
+                    and any(dotted_name(a) in ("jax.jit", "jit")
+                            for a in dec.args)):
+                continue
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames" and isinstance(
+                        kw.value, (ast.Tuple, ast.List)):
+                    names = [e.value for e in kw.value.elts
+                             if isinstance(e, ast.Constant)]
+                    yield from self._unhashable_defaults(ctx, fn, names)
+
+    def _unhashable_defaults(self, ctx: FileContext, fn: ast.AST,
+                             static_names) -> Iterable[Finding]:
+        args = fn.args
+        all_args = list(args.posonlyargs) + list(args.args) \
+            + list(args.kwonlyargs)
+        defaults = dict(zip([a.arg for a in reversed(args.args)],
+                            reversed(args.defaults)))
+        defaults.update({a.arg: d for a, d in
+                         zip(args.kwonlyargs, args.kw_defaults) if d})
+        for a in all_args:
+            if a.arg in static_names and isinstance(
+                    defaults.get(a.arg),
+                    (ast.List, ast.Dict, ast.Set)):
+                yield ctx.finding(
+                    self.name, defaults[a.arg],
+                    f"static arg {a.arg!r} of jitted {fn.name!r} defaults "
+                    f"to an unhashable {type(defaults[a.arg]).__name__} — "
+                    f"static args must be hashable (use a tuple/frozen "
+                    f"value) or jit raises/retraces per call")
+
+    def _check_pow2_shape(self, ctx: FileContext,
+                          node: ast.Call) -> Iterable[Finding]:
+        if not node.args:
+            return
+        shape = node.args[0]
+        if _contains_len(shape):
+            yield ctx.finding(
+                self.name, shape,
+                "len(...) fed directly into an array shape — one XLA "
+                "specialization per distinct length; bucket through "
+                "next_pow2/bucket_width so the compile cache stays on "
+                "the pow2 chain")

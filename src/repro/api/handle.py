@@ -338,7 +338,8 @@ class Index:
         if swap:
             self._swap(new)
         else:
-            self._store = new
+            # load-time: handle not yet published, nothing observes it
+            self._store = new  # repro-lint: allow[epoch-fence]
         self._tuned = tuned
 
     def _remap(self, old_ids: np.ndarray) -> None:

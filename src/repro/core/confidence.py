@@ -17,6 +17,15 @@ def delta_prime(delta: float, n: int, max_pulls: int) -> float:
     return delta / (n * max(max_pulls, 1))
 
 
+def shard_delta(delta: float, shards: int) -> float:
+    """Per-shard failure budget: δ/S, so the S shard-local top-k
+    contracts union-bound back to the global δ (DESIGN.md §6.2). Every
+    shard-fanout split MUST go through this helper — the delta-ledger
+    lint rule enumerates its call sites as the machine-checked split
+    table (DESIGN.md §12.2)."""
+    return delta / max(shards, 1)
+
+
 def hoeffding_radius(sigma_sq, count, log_term):
     """C = sqrt(2 σ² log(2/δ') / T); ``log_term`` = log(2/δ') precomputed."""
     c = jnp.maximum(count, 1.0)

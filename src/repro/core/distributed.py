@@ -84,7 +84,9 @@ def distributed_knn(x, queries, cfg: BMOConfig, mesh: Mesh, rng, *,
     # each shard races at δ/D so the per-interval budget matches the
     # single-machine union bound over all n arms (sharded.py)
     import dataclasses
-    cfg_loc = dataclasses.replace(cfg, delta=cfg.delta / dp_size)
+
+    from repro.core.confidence import shard_delta
+    cfg_loc = dataclasses.replace(cfg, delta=shard_delta(cfg.delta, dp_size))
 
     fn = functools.partial(_local_knn, cfg=cfg_loc, d=d, n_loc=n_loc,
                            dp_axes=dp_axes, impl=impl)

@@ -331,6 +331,7 @@ class Fleet:
         off = int(st.meta.get("device_offset", 0))
         if off and index.sharded:
             # fresh handle — placement binds before any launch, no fence
+            # repro-lint: allow[epoch-fence]
             index._store = dataclasses.replace(index._store,
                                                device_offset=off)
         self._adopt(st, index)

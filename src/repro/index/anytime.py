@@ -53,6 +53,7 @@ from repro.obs import get_obs, new_trace_id
 from repro.obs import profile as obs_profile
 from repro.core import confidence as conf
 from repro.core.ucb import INF
+from repro.utils.hostsync import host_fetch
 from repro.index.batched_race import (BatchedRaceState, RoundsRaceFns,
                                       _dense_exact_theta, _frontier_ci,
                                       _fused_epoch_step, _fused_init,
@@ -94,7 +95,9 @@ class Partial(NamedTuple):
 
 
 def _to_host(summ: RaceSummary) -> Partial:
-    return Partial(*(np.asarray(a) for a in summ))
+    # THE per-epoch device->host boundary: one deliberate fetch of the
+    # whole summary; everything downstream is host-resident numpy.
+    return Partial(*host_fetch(tuple(summ)))
 
 
 def _summarize(ids, mean, ci, exact, accepted, rejected, valid, done,
@@ -327,10 +330,12 @@ def _merge_shard_partials(p: Partial) -> Partial:
         for s in range(S):
             a = int(p.acc_count[s, q])
             for i in range(k):
+                # host-sync: p is the host-side per-shard Partial
                 v = float(p.values[s, q, i])
                 if not np.isfinite(v):
                     continue
-                entry = (v, int(p.ids[s, q, i]), float(p.ci[s, q, i]))
+                entry = (v, int(p.ids[s, q, i]),
+                         float(p.ci[s, q, i]))  # host-sync: host Partial
                 (accepted if i < a else cands).append(entry)
         accepted.sort(key=lambda e: (e[0], e[1]))
         cands.sort(key=lambda e: (e[0], e[1]))
@@ -420,6 +425,7 @@ class RaceSession:
 
     @property
     def done(self) -> np.ndarray:
+        # host-sync: _snap crossed at the _to_host boundary (numpy)
         return np.asarray(self._snap.done) | self._retired
 
     @property
@@ -428,7 +434,7 @@ class RaceSession:
         return not self.done.all() and self._rounds_spent >= self._max_rounds
 
     def retire(self, mask: np.ndarray) -> None:
-        mask = np.asarray(mask, bool)
+        mask = np.asarray(mask, bool)  # host-sync: caller-side numpy mask
         self._retired |= mask
         self._apply_force_done(jnp.asarray(self._retired))
 
@@ -436,11 +442,14 @@ class RaceSession:
         if self.done.all() or self._rounds_spent >= self._max_rounds:
             return False
         if self._prev_coord_ops is None:     # baseline excludes init pulls
+            # host-sync: _snap/shard stats are post-boundary numpy
             self._prev_coord_ops = float(np.sum(self._snap.coord_ops))
             self._prev_rounds = int(np.max(self._snap.rounds, initial=0))
             if self.shard_coord_ops is not None:
+                # host-sync: post-boundary numpy
                 self._prev_shard_coord_ops = np.array(self.shard_coord_ops,
                                                       float)
+                # host-sync: post-boundary numpy
                 self._prev_shard_rounds = np.array(self.shard_rounds, float)
         t0 = time.perf_counter()
         with obs_profile.annotate(f"repro.race.epoch.{self.kind}"):
@@ -449,8 +458,8 @@ class RaceSession:
         return alive
 
     def _record_epoch(self, t0: float, dur: float) -> None:
-        snap = self._snap
-        coord = float(np.sum(snap.coord_ops))
+        snap = self._snap  # host-sync: numpy snapshot, whole method is host math
+        coord = float(np.sum(snap.coord_ops))  # host-sync: numpy
         rounds = int(np.max(snap.rounds, initial=0))
         d_coord = max(coord - self._prev_coord_ops, 0.0)
         d_rounds = max(rounds - self._prev_rounds, 0)
@@ -461,22 +470,24 @@ class RaceSession:
             "kind": self.kind,
             "coord_ops": d_coord,
             "rounds": d_rounds,
-            "worst_ci": float(finite_ci.max(initial=0.0)),
+            "worst_ci": float(finite_ci.max(initial=0.0)),  # host-sync: numpy
             "active": int(np.sum(~self.done)),
             "done": int(np.sum(self.done)),
         }
         info.update(self._epoch_extra())
         if self.shard_coord_ops is not None:
-            cur_c = np.asarray(self.shard_coord_ops, float)
-            cur_r = np.asarray(self.shard_rounds, float)
+            cur_c = np.asarray(self.shard_coord_ops, float)  # host-sync: numpy
+            cur_r = np.asarray(self.shard_rounds, float)  # host-sync: numpy
             prev_c = (self._prev_shard_coord_ops
                       if self._prev_shard_coord_ops is not None
                       else np.zeros_like(cur_c))
             prev_r = (self._prev_shard_rounds
                       if self._prev_shard_rounds is not None
                       else np.zeros_like(cur_r))
-            info["shard_coord_ops"] = [float(v) for v in cur_c - prev_c]
-            info["shard_rounds"] = [float(v) for v in cur_r - prev_r]
+            info["shard_coord_ops"] = [float(v)  # host-sync: numpy
+                                       for v in cur_c - prev_c]
+            info["shard_rounds"] = [float(v)  # host-sync: numpy
+                                    for v in cur_r - prev_r]
             self._prev_shard_coord_ops = cur_c
             self._prev_shard_rounds = cur_r
         self.last_epoch = info
@@ -492,7 +503,7 @@ class RaceSession:
         obs_profile.record_kernel_launch(
             self.obs, self.kernel,
             launches=self._epoch_launches(d_rounds),
-            coord_ops=d_coord, pulls=float(d_rounds))
+            coord_ops=d_coord, pulls=float(d_rounds))  # host-sync: python int
         self.obs.tracer.complete("race.epoch", t0, dur, trace=self.sid,
                                  dur_ms=dur * 1e3, **info)
 
@@ -585,7 +596,7 @@ class FusedSession(RaceSession):
             log_term=self._log_term, T=R * self._cfg.pulls_per_round)
         self._rounds_spent += R
         self._last_R = R
-        self._n_surv = np.asarray(n_surv)
+        self._n_surv = host_fetch(n_surv)
         self.epochs += 1
         self._refresh(st)
         return not self.done.all()
@@ -691,7 +702,7 @@ class ShardedFusedSession(RaceSession):
             self._mesh, self._cfg, self._store.d, self._log_term,
             self._prior_weight, self._stride)(
             self._x_st, self._qs, st, self._pool)
-        per_shard = Partial(*(np.asarray(a) for a in summ))
+        per_shard = Partial(*host_fetch(tuple(summ)))
         self.shard_coord_ops = per_shard.coord_ops.sum(axis=1)
         self.shard_rounds = per_shard.rounds.max(axis=1)
         self._snap = _merge_shard_partials(per_shard)
@@ -730,7 +741,7 @@ class ShardedFusedSession(RaceSession):
                                            self._pool)
         self._rounds_spent += R
         self._last_R = R
-        self._n_surv = np.asarray(n_surv)
+        self._n_surv = host_fetch(n_surv)
         self.epochs += 1
         self._refresh(st)
         return not self.done.all()
@@ -775,7 +786,7 @@ class ShardedSparseSession(RaceSession):
         self._ingest(summ)
 
     def _ingest(self, summ) -> None:
-        per_shard = Partial(*(np.asarray(a) for a in summ))
+        per_shard = Partial(*host_fetch(tuple(summ)))
         self.shard_coord_ops = per_shard.coord_ops.sum(axis=1)
         self.shard_rounds = per_shard.rounds.max(axis=1)
         self._snap = _merge_shard_partials(per_shard)

@@ -48,6 +48,7 @@ from repro.core.ucb import (INF, acceptance_step, acceptance_step_masked,
                             topk_from_state, topk_from_state_masked)
 from repro.obs import get_obs
 from repro.obs import profile as obs_profile
+from repro.utils.hostsync import host_fetch
 from repro.index.frontier import (FrontierState, bucket_width,
                                   compact_frontier, floor_width, pow2_floor,
                                   survivors)
@@ -501,6 +502,7 @@ def fused_race_topk(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
     P = cfg.pulls_per_round
     nb = x.shape[1] // block
     B0 = min(cfg.batch_arms, n)
+    # host-sync: python-float math on cfg.delta, no device value
     log_term = float(np.log(2.0 / conf.delta_prime(cfg.delta, n, nb)))
     max_rounds = cfg.max_rounds or int(
         2 * math.ceil(n * nb / max(B0 * P, 1)) + n + 16)
@@ -516,7 +518,7 @@ def fused_race_topk(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
     n_surv = np.full((Q,), n)
     done = np.zeros((Q,), bool)
     obs = get_obs()
-    prev_coord = float(np.sum(np.asarray(st.coord_ops)))
+    prev_coord = float(np.sum(host_fetch(st.coord_ops)))
     while not done.all() and rounds_spent < max_rounds:
         # adaptive reallocation (Neufeld et al. style): as the candidate
         # frontier shrinks by c×, fuse c× more rounds into the next launch —
@@ -536,17 +538,19 @@ def fused_race_topk(x, qs, alive, prior_var, rng, *, cfg: BMOConfig,
                 eliminate=eliminate, prior_weight=prior_weight,
                 log_term=log_term, T=R * P)
             rounds_spent += R
-            n_surv = np.asarray(n_surv_d)
-            done = np.asarray(done_d)
+            # the per-epoch boundary: survivor count + done flags must
+            # cross to host to drive the Python reallocation loop
+            n_surv, done = host_fetch((n_surv_d, done_d))
         # n_surv/done already crossed to host, so the per-launch accounting
         # adds no extra device round-trip beyond the coord-op scalar
-        coord = float(np.sum(np.asarray(st.coord_ops)))
+        coord = float(np.sum(host_fetch(st.coord_ops)))
         obs.registry.histogram(
             "repro_race_epoch_ms", "wall time of one race epoch (ms)",
             kind="fused_blocking").observe((time.perf_counter() - t0) * 1e3)
         obs_profile.record_kernel_launch(
             obs, "fused_epoch_pull", launches=1,
-            coord_ops=max(coord - prev_coord, 0.0), pulls=float(R))
+            coord_ops=max(coord - prev_coord, 0.0),
+            pulls=float(R))  # host-sync: python int
         prev_coord = coord
 
     topk, topk_vals, n_exact = _fused_finalize(

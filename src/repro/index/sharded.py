@@ -535,7 +535,7 @@ def local_dense_race(x_loc, qs, alive, prior, rng, *, cfg: BMOConfig,
 def _shard_delta(cfg: BMOConfig, S: int) -> BMOConfig:
     """δ/S per shard-local race ⇒ δ′ = δ/(S·stride·MAX_PULLS) per interval —
     the same union bound the single-shard driver runs at n_total slots."""
-    return dataclasses.replace(cfg, delta=cfg.delta / max(S, 1))
+    return dataclasses.replace(cfg, delta=conf.shard_delta(cfg.delta, S))
 
 
 def _squeeze(tree):

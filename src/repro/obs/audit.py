@@ -61,7 +61,8 @@ BUNDLE_ARRAYS = "arrays.npz"
 DEFAULT_RTOL = 1e-4
 DEFAULT_ATOL = 1e-5
 
-_AUDIT_SKIP_REASONS = ("stale_epoch", "uncertified", "reservoir_full")
+_AUDIT_SKIP_REASONS = ("stale_epoch", "uncertified", "reservoir_full",
+                       "namespaced", "unroutable")
 
 
 # -- binomial upper confidence bounds ---------------------------------------
@@ -496,6 +497,7 @@ class _AuditItem:
     served_ids: np.ndarray        # (Q, k)
     served_vals: np.ndarray       # (Q, k)
     spec: object = None
+    namespace: Optional[str] = None   # fleet namespace; None = default
 
     @property
     def rows(self) -> int:
@@ -504,9 +506,9 @@ class _AuditItem:
 
 @dataclasses.dataclass
 class _KeyState:
-    """Empirical error-rate estimator for one (tenant, store-epoch,
-    contract) key: audited rows, observed δ-failures, the tightest δ any
-    audited query promised."""
+    """Empirical error-rate estimator for one (namespace, tenant,
+    store-epoch, contract) key: audited rows, observed δ-failures, the
+    tightest δ any audited query promised."""
 
     sampled: int = 0
     mismatches: int = 0
@@ -517,17 +519,22 @@ class _KeyState:
 
 
 class DeltaAuditor:
-    """Shadow δ-auditor over one ``repro.api.Index``.
+    """Shadow δ-auditor over one ``repro.api.Index`` — or, given a
+    ``router`` (a ``repro.fleet.Fleet``), over every namespace a fleet
+    plane serves.
 
     ``offer`` runs ON the serving path and must stay cheap: one RNG draw,
     then array copies into a bounded per-tenant reservoir (overflow drops
     the oldest pending item, counted — backpressure by forgetting audits,
     never by stalling serving). ``process``/``flush`` run the brute-force
-    oracle OFF the critical path. Items whose store epoch fell behind a
-    mutation are skipped (the ground truth they were served against no
-    longer exists) and counted as ``stale_epoch``."""
+    oracle OFF the critical path; namespaced items resolve their backing
+    index through the router at oracle time (transparent reload-on-access,
+    the plane's own routing contract). Items whose store epoch fell behind
+    a mutation are skipped (the ground truth they were served against no
+    longer exists) and counted as ``stale_epoch``; items whose namespace
+    was dropped in the meantime count as ``unroutable``."""
 
-    def __init__(self, index, *, rate: float, obs=None,
+    def __init__(self, index=None, *, router=None, rate: float, obs=None,
                  recorder: Optional[FlightRecorder] = None, seed: int = 0,
                  reservoir: int = 256, confidence: float = 0.95,
                  rtol: float = DEFAULT_RTOL, atol: float = DEFAULT_ATOL,
@@ -539,7 +546,11 @@ class DeltaAuditor:
         if not 0.5 <= confidence < 1.0:
             raise ValueError(
                 f"confidence must be in [0.5, 1), got {confidence}")
+        if index is None and router is None:
+            raise ValueError("DeltaAuditor needs an index, a router "
+                             "(fleet), or both")
         self.index = index
+        self.router = router
         self.rate = rate
         self.obs = obs
         self.recorder = recorder
@@ -550,7 +561,7 @@ class DeltaAuditor:
         self._reservoir = reservoir
         self._pending: "collections.OrderedDict[str, collections.deque]" = \
             collections.OrderedDict()
-        self._states: Dict[Tuple[str, int, str], _KeyState] = {}
+        self._states: Dict[Tuple[str, str, int, str], _KeyState] = {}
         self.bundles: List[str] = []
         self.offered = 0              # terminal tickets seen
         self.sampled_tickets = 0      # tickets drawn into the reservoir
@@ -576,7 +587,8 @@ class DeltaAuditor:
 
     def offer(self, *, trace_id: str, tenant: str, store_epoch: int,
               contract: str, k: int, delta: float, queries, served_ids,
-              served_vals, spec=None) -> bool:
+              served_vals, spec=None,
+              namespace: Optional[str] = None) -> bool:
         """Maybe sample one terminal ticket into the reservoir. Cheap by
         construction — a Bernoulli(rate) draw plus array copies; all
         oracle work waits for ``process``. Returns True iff sampled."""
@@ -594,7 +606,8 @@ class DeltaAuditor:
             trace_id=trace_id, tenant=tenant, store_epoch=int(store_epoch),
             contract=contract, k=int(k), delta=float(delta), queries=q,
             served_ids=np.array(served_ids, np.int64),
-            served_vals=np.array(served_vals), spec=spec)
+            served_vals=np.array(served_vals), spec=spec,
+            namespace=namespace)
         dq = self._pending.setdefault(tenant, collections.deque())
         if len(dq) >= self._reservoir:
             dq.popleft()
@@ -634,12 +647,14 @@ class DeltaAuditor:
         return None
 
     def _key_metrics(self, key):
-        tenant, epoch, contract = key
+        namespace, tenant, epoch, contract = key
         if self.obs is None:
             return None, None, None
         reg = self.obs.registry
         lbl = dict(self._labels, tenant=tenant, store_epoch=str(epoch),
                    contract=contract)
+        if namespace:
+            lbl["namespace"] = namespace
         return (reg.counter("repro_audit_sampled_total",
                             "query rows shadow-audited", **lbl),
                 reg.counter("repro_audit_mismatch_total",
@@ -649,14 +664,29 @@ class DeltaAuditor:
                           "Wilson upper confidence bound on the empirical "
                           "error rate (compare against δ)", **lbl))
 
-    def _audit(self, item: _AuditItem) -> bool:
-        """Oracle one item. Returns True iff a mismatch was found."""
+    def _resolve_index(self, item: _AuditItem):
+        """The backing index the item's ground truth lives in: the bound
+        default for un-namespaced items, the router's (possibly lazily
+        reloaded) handle for namespaced ones. None when unroutable."""
+        if item.namespace is None:
+            return self.index
+        if self.router is None:
+            return None
+        try:
+            return self.router.resolve(item.namespace)
+        except KeyError:
+            return None                     # namespace dropped since
+
+    def _audit(self, item: _AuditItem, index) -> bool:
+        """Oracle one item against its resolved index. Returns True iff a
+        mismatch was found."""
         t0 = time.perf_counter()
-        check = check_topk(self.index.store, item.queries, item.served_ids,
+        check = check_topk(index.store, item.queries, item.served_ids,
                            item.k, rtol=self.rtol, atol=self.atol)
         if self._h_ms is not None:
             self._h_ms.observe((time.perf_counter() - t0) * 1e3)
-        key = (item.tenant, item.store_epoch, item.contract)
+        key = (item.namespace or "", item.tenant, item.store_epoch,
+               item.contract)
         state = self._states.setdefault(key, _KeyState())
         state.sampled += item.rows
         state.mismatches += check.mismatches
@@ -680,9 +710,9 @@ class DeltaAuditor:
                 served_ids=item.served_ids, served_vals=item.served_vals,
                 k=item.k, delta=item.delta, trace_id=item.trace_id,
                 tenant=item.tenant, store_epoch=item.store_epoch,
-                contract=item.contract, store_kind=self.index.kind,
-                metric=self.index.cfg.metric, spec=item.spec,
-                tuned=self.index.tuned, obs=self.obs)
+                contract=item.contract, store_kind=index.kind,
+                metric=index.cfg.metric, spec=item.spec,
+                tuned=index.tuned, obs=self.obs)
             self.bundles.append(bundle)
         log.bind(trace=item.trace_id, tenant=item.tenant).warning(
             "delta-audit MISMATCH: %d/%d rows violate the 1-delta contract "
@@ -708,16 +738,25 @@ class DeltaAuditor:
             if item is None:
                 break
             done += 1
-            if item.store_epoch != self.index.epoch:
+            index = self._resolve_index(item)
+            if index is None:
+                self.skipped["unroutable"] += 1
+                if self.obs is not None:
+                    self.obs.tracer.instant(
+                        "audit.skip", trace=item.trace_id,
+                        reason="unroutable",
+                        namespace=item.namespace or "")
+                continue
+            if item.store_epoch != index.epoch:
                 self.skipped["stale_epoch"] += 1
                 if self.obs is not None:
                     self.obs.tracer.instant(
                         "audit.skip", trace=item.trace_id,
                         reason="stale_epoch",
                         item_epoch=item.store_epoch,
-                        index_epoch=self.index.epoch)
+                        index_epoch=index.epoch)
                 continue
-            self._audit(item)
+            self._audit(item, index)
         if self._g_pending is not None:
             self._g_pending.set(self.pending)
         return done
@@ -746,9 +785,11 @@ class DeltaAuditor:
         per-key counts, error rates, upper bounds, and whether each key's
         bound still clears its effective δ."""
         keys = []
-        for (tenant, epoch, contract), st in sorted(self._states.items()):
+        for (ns, tenant, epoch, contract), st in sorted(
+                self._states.items()):
             upper = st.err_upper(self.confidence)
             keys.append({
+                "namespace": ns,
                 "tenant": tenant,
                 "store_epoch": epoch,
                 "contract": contract,

@@ -16,7 +16,12 @@ milliseconds; labels distinguish instances (``plane="p0"``) and kinds
 from __future__ import annotations
 
 import bisect
+import re
 from typing import Dict, Iterable, List, Optional, Tuple
+
+#: runtime half of the metrics-conformance contract — the static half is
+#: repro.analysis.rules_metrics, which shares this shape (DESIGN.md §12.6)
+_NAME_RE = re.compile(r"^repro_[a-z0-9_]+$")
 
 #: default duration buckets (ms) — log-spaced to cover one kernel launch
 #: (~0.1 ms) through a run-to-certification race under overload (~60 s)
@@ -125,6 +130,14 @@ class MetricsRegistry:
 
     def _get(self, kind: str, name: str, help: str, labels: dict,
              **kw):
+        if not _NAME_RE.match(name):
+            raise ValueError(
+                f"metric name {name!r} does not match "
+                f"'repro_[a-z0-9_]+' (naming scheme, DESIGN.md §8.2)")
+        if (kind == "counter") != name.endswith("_total"):
+            raise ValueError(
+                f"{kind} {name!r}: the '_total' suffix is required on "
+                f"counters and reserved for them (DESIGN.md §8.2)")
         if name in self._kind and self._kind[name] != kind:
             raise ValueError(
                 f"metric {name!r} already registered as "

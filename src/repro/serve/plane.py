@@ -60,7 +60,7 @@ from repro.api.stream import (DONE, QUEUED, R_BUDGET, R_CERTIFIED,
                               AnytimeResult, Ticket, percentile)
 from repro.core.datasets import next_pow2
 from repro.obs import get_obs
-from repro.utils import get_logger
+from repro.utils import get_logger, host_fetch
 
 log = get_logger("repro.serve.plane")
 
@@ -237,13 +237,15 @@ class RequestPlane:
         # the brute-force oracle runs OFF the critical path, only from
         # audit_step()/audit_flush() or an idle step()
         self.auditor = None
-        if self.config.audit_rate > 0.0 and index is not None:
+        if self.config.audit_rate > 0.0 and (index is not None
+                                             or router is not None):
             from repro.obs.audit import DeltaAuditor, FlightRecorder
             recorder = (FlightRecorder(self.config.audit_dir)
                         if self.config.audit_dir else None)
             self.auditor = DeltaAuditor(
-                index, rate=self.config.audit_rate, obs=self.obs,
-                recorder=recorder, seed=self.config.audit_seed,
+                index, router=router, rate=self.config.audit_rate,
+                obs=self.obs, recorder=recorder,
+                seed=self.config.audit_seed,
                 reservoir=self.config.audit_reservoir, labels=lbl)
 
     # -- routing -------------------------------------------------------------
@@ -558,7 +560,8 @@ class RequestPlane:
                  else np.concatenate(parts, axis=0))
         prior_hint = None
         if any(h is not None for h in hints):
-            base = np.asarray(index.store.prior_var, np.float32)
+            base = np.asarray(host_fetch(index.store.prior_var),
+                              np.float32)
             priors = []
             for member, hint in zip(members, hints):
                 priors.extend([base] * len(member.rows) if hint is None
@@ -727,7 +730,9 @@ class RequestPlane:
         if not tracer.enabled:
             return
         rows = snap.ci[member.offset:member.offset + len(member.rows)]
-        worst = float(np.where(np.isfinite(rows), rows, 0.0).max(initial=0.0))
+        # host-sync: snap is the session's post-boundary numpy view
+        worst = float(np.where(np.isfinite(rows), rows,
+                               0.0).max(initial=0.0))
         cert = sum(len(ids) for ids in entry.cert_ids)
         info = group.session.last_epoch or {}
         attrs = {k: info[k] for k in
@@ -826,7 +831,7 @@ class RequestPlane:
             if (budget.epochs is not None
                     and entry.ticket.epochs >= budget.epochs):
                 return R_BUDGET
-            if (budget.coord_ops is not None
+            if (budget.coord_ops is not None  # host-sync: numpy ledger
                     and float(entry.coord_ops.max()) >= budget.coord_ops):
                 return R_BUDGET
         return None
@@ -843,11 +848,11 @@ class RequestPlane:
             entry.rounds[i] = snap.rounds[g]
             k = snap.ids.shape[1]
             acc = int(snap.acc_count[g])
-            bar = float(snap.cand_lcb_min[g])
+            bar = float(snap.cand_lcb_min[g])  # host-sync: numpy snap
             frozen_ids = entry.cert_ids[i]
             frozen_vals = entry.cert_vals[i]
             for p in range(len(frozen_ids), acc):
-                v = float(snap.values[g, p])
+                v = float(snap.values[g, p])  # host-sync: numpy snap
                 if not (v < bar) or len(frozen_ids) >= k:
                     break
                 gid = int(snap.ids[g, p])
@@ -863,7 +868,9 @@ class RequestPlane:
         tail from the latest snapshot."""
         if i in entry.cached_rows:
             ids, vals = entry.cached_rows[i]
-            return (np.asarray(ids, np.int64), np.asarray(vals, np.float32),
+            # host-sync: cache holds host lists
+            return (np.asarray(ids, np.int64),
+                    np.asarray(vals, np.float32),
                     np.zeros((k,), np.float32), k)
         ids = list(entry.cert_ids[i])
         vals = list(entry.cert_vals[i])
@@ -874,16 +881,17 @@ class RequestPlane:
                 if len(ids) >= k:
                     break
                 gid = int(snap.ids[g, p])
-                v = float(snap.values[g, p])
+                v = float(snap.values[g, p])  # host-sync: numpy snap
                 if gid in entry.cert_ids[i] or not np.isfinite(v):
                     continue
                 ids.append(gid)
                 vals.append(v)
-                ci.append(float(snap.ci[g, p]))
+                ci.append(float(snap.ci[g, p]))  # host-sync: numpy snap
         while len(ids) < k:
             ids.append(-1)
             vals.append(np.inf)
             ci.append(np.inf)
+        # host-sync: assembling host lists into the result arrays
         return (np.asarray(ids, np.int64), np.asarray(vals, np.float32),
                 np.asarray(ci, np.float32), cc)
 
@@ -950,10 +958,9 @@ class RequestPlane:
         skipped, not audited against a promise they never made."""
         if self.auditor is None:
             return
-        if entry.index is not self.index:
-            # the auditor's oracle is bound to the default index; fleet
-            # namespaces are outside its contract (audited per-namespace
-            # by their own planes/benches), counted as skipped not missed
+        if entry.namespace is not None and self.auditor.router is None:
+            # namespaced ticket but the auditor has no router to resolve
+            # its ground truth through — counted as skipped, not missed
             self.auditor.note_skip("namespaced")
             return
         t = entry.ticket
@@ -969,7 +976,8 @@ class RequestPlane:
                       else "default"),
             k=res.indices.shape[1], delta=float(cfg.delta),
             queries=entry.queries, served_ids=res.indices,
-            served_vals=res.values, spec=entry.spec)
+            served_vals=res.values, spec=entry.spec,
+            namespace=entry.namespace)
 
     def audit_step(self, max_items: int = 1) -> int:
         """Run the δ-audit oracle on up to ``max_items`` pending samples.

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.obs import ObsContext, set_obs
 from repro.tune.candidates import TunedConfig, bind_store
+from repro.utils.hostsync import host_fetch
 
 #: histogram kinds the blocking drivers record epoch walls under
 _EPOCH_KINDS = ("fused_blocking", "sharded_fused_blocking")
@@ -58,9 +59,9 @@ def _race_once(store, queries, rng, mode: str) -> Tuple[float, float]:
     from repro.index.batched_race import index_knn
     t0 = time.perf_counter()
     res = index_knn(store, queries, rng, mode=mode)
-    np.asarray(res.indices)         # block on device completion
+    host_fetch(res.indices)         # block on device completion
     wall = (time.perf_counter() - t0) * 1e3
-    return wall, float(np.max(np.asarray(res.rounds)))
+    return wall, float(np.max(host_fetch(res.rounds)))
 
 
 def measure_candidate(store, cand: TunedConfig, queries, rng, *,

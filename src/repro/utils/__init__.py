@@ -1,4 +1,6 @@
 from repro.utils.tree import tree_bytes, tree_count, tree_map_with_path_str
+from repro.utils.hostsync import host_boundary, host_fetch
 from repro.utils.logging import get_logger
 
-__all__ = ["tree_bytes", "tree_count", "tree_map_with_path_str", "get_logger"]
+__all__ = ["tree_bytes", "tree_count", "tree_map_with_path_str", "get_logger",
+           "host_boundary", "host_fetch"]

@@ -1,0 +1,45 @@
+"""The sanctioned device→host boundary (DESIGN.md §8, §12.4).
+
+The serving stack's transfer discipline: arrays cross to the host at ONE
+deliberate boundary per epoch, and everything downstream works on
+host-resident numpy. ``host_fetch`` is that boundary — an explicit
+``jax.device_get`` wrapped in a transfer-guard allow-scope, so the CI
+sanitize tier (tier-1 under ``jax.transfer_guard("disallow")``) passes
+exactly where the code says "this transfer is on purpose" and fails
+everywhere else. The host-sync lint rule closes the static half: any
+other sync-shaped call on a hot path must carry a
+``# host-sync: <why>`` annotation.
+
+``host_fetch`` also accepts values that are already host-side (numpy
+arrays, floats, pytrees of either) — ``device_get`` is a no-op copy for
+those — so call sites don't need to branch on residency.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["host_fetch", "host_boundary"]
+
+
+@contextlib.contextmanager
+def host_boundary():
+    """Allow device→host transfers inside this scope even when the
+    sanitize tier runs with ``jax.transfer_guard("disallow")``. Use for
+    a *block* of deliberate host work (e.g. checkpoint serialization);
+    single values should prefer ``host_fetch``."""
+    with jax.transfer_guard_device_to_host("allow"):
+        yield
+
+
+def host_fetch(value):
+    """Bring ``value`` (array or pytree) to the host, deliberately.
+
+    The ONE sanctioned sync: blocks until the device computation behind
+    ``value`` is done and returns host-resident numpy. Equivalent to
+    ``jax.device_get`` under an explicit allow-scope — it stays legal
+    under the sanitize tier's ``transfer_guard("disallow")``.
+    """
+    with jax.transfer_guard_device_to_host("allow"):
+        return jax.device_get(value)

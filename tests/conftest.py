@@ -19,6 +19,22 @@ except ImportError:  # container without hypothesis: seeded-random fallback
 import numpy as np
 import pytest
 
+# -- runtime-sanitizer tier (DESIGN.md §12.4) --------------------------------
+# REPRO_SANITIZE=1 runs tier-1 with every implicit device->host transfer
+# outlawed: only the explicit jax.device_get under the allow-scope inside
+# repro.utils.hostsync.host_fetch (and host_boundary blocks) stays legal.
+# On CPU the guard cannot trip (host and device memory are one — transfers
+# are zero-copy and unguarded), so this tier is a no-op locally and real on
+# TPU/GPU backends; wiring it here keeps the discipline testable the day a
+# device backend lands. REPRO_SANITIZE=nan additionally arms debug_nans.
+_SANITIZE = os.environ.get("REPRO_SANITIZE", "")
+if _SANITIZE:
+    import jax
+
+    jax.config.update("jax_transfer_guard_device_to_host", "disallow")
+    if _SANITIZE == "nan":
+        jax.config.update("jax_debug_nans", True)
+
 
 @pytest.fixture
 def rng():

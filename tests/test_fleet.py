@@ -244,9 +244,9 @@ def test_router_plane_requires_namespace(tmp_path):
 
 def test_fleet_plane_default_namespace_enables_audit(tmp_path):
     """``fleet.serve(default=ns)`` binds that namespace's handle as the
-    plane's default index: its fully-certified traffic is δ-audited (and
-    un-namespaced submits route to it), while other namespaces stay
-    outside the auditor's contract (``note_skip("namespaced")``)."""
+    plane's default index AND hands the auditor the fleet router: every
+    namespace's fully-certified traffic is δ-audited against its own
+    ground truth, keyed per namespace in the summary."""
     fleet = Fleet(str(tmp_path / "fleet"), FleetConfig(max_resident=2))
     fleet.create("a", _corpus(seed=1), _cfg(), jax.random.PRNGKey(0))
     fleet.create("b", _corpus(seed=2), _cfg(), jax.random.PRNGKey(1))
@@ -260,11 +260,35 @@ def test_fleet_plane_default_namespace_enables_audit(tmp_path):
     plane.query(q, rng=jax.random.PRNGKey(6), namespace="b", cache="bypass")
     plane.audit_flush()
     a = plane.auditor.summary()
-    assert a["sampled_rows"] == 2 * q.shape[0]     # both 'a' tickets
+    assert a["sampled_rows"] == 3 * q.shape[0]     # both 'a' AND the 'b'
     assert a["mismatch_rows"] == 0
-    assert plane.auditor.skipped["namespaced"] == 1   # the 'b' ticket
-    # a router-only plane (no default) keeps auditing off, not crashing
-    assert fleet.serve(PlaneConfig(audit_rate=1.0)).auditor is None
+    assert plane.auditor.skipped["namespaced"] == 0
+    by_ns = {k["namespace"]: k for k in a["keys"]}
+    assert by_ns[""]["sampled"] == q.shape[0]      # un-namespaced -> 'a'
+    assert by_ns["a"]["sampled"] == q.shape[0]
+    assert by_ns["b"]["sampled"] == q.shape[0]
+
+
+def test_fleet_router_only_plane_audits_namespaces(tmp_path):
+    """A router-only plane (no default index) still audits: namespaced
+    tickets resolve their oracle index through the fleet at process time,
+    and a namespace dropped before the oracle runs counts as unroutable
+    instead of crashing or mis-auditing."""
+    fleet = Fleet(str(tmp_path / "fleet"), FleetConfig(max_resident=2))
+    fleet.create("a", _corpus(seed=1), _cfg(), jax.random.PRNGKey(0))
+    fleet.create("b", _corpus(seed=2), _cfg(), jax.random.PRNGKey(1))
+    plane = fleet.serve(PlaneConfig(audit_rate=1.0))
+    assert plane.auditor is not None and plane.index is None
+    q = _corpus(seed=3)[:2]
+    plane.query(q, rng=jax.random.PRNGKey(5), namespace="a", cache="bypass")
+    plane.query(q, rng=jax.random.PRNGKey(6), namespace="b", cache="bypass")
+    fleet.drop("b")                       # ground truth for 'b' vanishes
+    plane.audit_flush()
+    a = plane.auditor.summary()
+    assert a["sampled_rows"] == q.shape[0]            # only 'a' audited
+    assert a["mismatch_rows"] == 0
+    assert a["skipped"]["unroutable"] == 1            # the dropped 'b'
+    assert [k["namespace"] for k in a["keys"]] == ["a"]
 
 
 # ---------------------------------------------------------------------------
